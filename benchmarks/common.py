@@ -1,0 +1,58 @@
+"""Shared benchmark protocol — the paper's §4.1 discipline, scaled to CPU.
+
+Paper: median over eleven isolated invocations; within an invocation
+median over >= fifteen trials after warm-up.  Here (1-core CPU container)
+the defaults shrink to reps×trials that finish in minutes, and every
+table records the protocol it used.  Ratios are formed within one process
+(like the paper's within-invocation ratios, so machine noise largely
+cancels); absolute GFLOPS on this host are reported as context only —
+the TPU-target numbers live in the §Roofline analysis, not here.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def time_fn(fn, *args, trials: int = 5, warmup: int = 2) -> float:
+    """Median seconds per call (blocked until ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def gflops(m: int, n: int, k: int, seconds: float) -> float:
+    return 2.0 * m * n * k / seconds / 1e9
+
+
+def write_table(name: str, rows: list[dict], *, meta: dict | None = None):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump({"meta": meta or {}, "rows": rows}, f, indent=1)
+
+
+def print_csv(name: str, rows: list[dict]):
+    if not rows:
+        return
+    cols = list(rows[0])
+    print(f"# {name}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

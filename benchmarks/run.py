@@ -1,0 +1,39 @@
+"""Benchmark orchestrator: one table per paper table (T2–T6) + the
+roofline report over whatever dry-run cells exist.
+
+``PYTHONPATH=src python -m benchmarks.run [--full]``
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    t0 = time.perf_counter()
+    from benchmarks import (
+        table2_issue_bound, table3_prefill_gemms, table4_bitexact,
+        table5_panel_sweep, table6_e2e_prefill,
+    )
+    print("=" * 72)
+    table2_issue_bound.main()
+    print("=" * 72)
+    table3_prefill_gemms.main(full=full)
+    print("=" * 72)
+    table4_bitexact.main()
+    print("=" * 72)
+    table5_panel_sweep.main()
+    print("=" * 72)
+    table6_e2e_prefill.main(full=full)
+    print("=" * 72)
+    try:
+        from benchmarks import roofline_report
+        roofline_report.main()
+    except FileNotFoundError as e:
+        print(f"(roofline report skipped: {e})")
+    print(f"total bench time: {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Paper Table 6 — end-to-end prefill GEMM sequence, measured.
+
+Runs each model's full prefill GEMM sequence in layer order at S = 128
+(per block: Q, K, V, attention-out, FFN-up, FFN-down; once at the end:
+LM head), with the weight handling each backend implies:
+
+  xla      — raw dot per GEMM ("Accelerate")
+  percall  — transpose+pad W[N,K] inside every call (cblas/BNNSMatMul)
+  packed   — all weights packed once BEFORE the timed region (untimed,
+             exactly the paper's model-load protocol); timed region pays
+             compute only.
+
+Like the paper's §4.7 the activation handling stays inside the timed
+region, so the comparison is conservative for the packed path.  Shapes
+default to 1/4 scale per dim (CPU budget); --full for exact.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import packing, panel_gemm as pg
+
+# (model, H, F, V, L) — paper Table 6
+MODELS = [
+    ("tinyllama-1.1b", 2048, 5632, 32000, 22),
+    ("llama-7b", 4096, 11008, 32000, 32),
+]
+S = 128
+
+
+def _block_shapes(h, f, v, scale):
+    h, f, v = h // scale, f // scale, v // scale
+    per_block = [("q", h, h), ("k", h, h), ("v", h, h), ("attn_out", h, h),
+                 ("ffn_up", f, h), ("ffn_down", h, f)]
+    return per_block, ("lm_head", v, h)
+
+
+def run(scale: int = 4, reps: int = 3) -> list[dict]:
+    rng = np.random.default_rng(2)
+    rows = []
+    for name, h, f, v, layers in MODELS:
+        per_block, head = _block_shapes(h, f, v, scale)
+        # weights stored [N, K] (llama.cpp convention)
+        weights = {op: jnp.asarray(rng.standard_normal((n, k)) * 0.02,
+                                   jnp.float32)
+                   for op, n, k in per_block + [head]}
+        xs = {op: jnp.asarray(rng.standard_normal((S, k)), jnp.float32)
+              for op, n, k in per_block + [head]}
+        seq = [op for op, _, _ in per_block] * layers + [head[0]]
+
+        def time_seq(call):
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                outs = [call(op) for op in seq]
+                jax.block_until_ready(outs)
+                ts.append(time.perf_counter() - t0)
+            return float(np.median(ts))
+
+        # warmup + packed model load (untimed, paper protocol)
+        packed = {op: packing.pack(w, transposed=True, block_n=512,
+                                   block_k=512)
+                  for op, w in weights.items()}
+        for op in set(seq):
+            pg.gemm_xla(xs[op], weights[op], transposed=True)
+            pg.gemm_percall(xs[op], weights[op], transposed=True)
+            pg.gemm(xs[op], packed[op])
+
+        t_xla = time_seq(lambda op: pg.gemm_xla(xs[op], weights[op],
+                                                transposed=True))
+        t_percall = time_seq(lambda op: pg.gemm_percall(
+            xs[op], weights[op], transposed=True))
+        t_packed = time_seq(lambda op: pg.gemm(xs[op], packed[op]))
+
+        rows.append({
+            "model": name, "H": h // scale, "F": f // scale,
+            "V": v // scale, "L": layers,
+            "xla_ms": round(t_xla * 1e3, 1),
+            "percall_ms": round(t_percall * 1e3, 1),
+            "packed_ms": round(t_packed * 1e3, 1),
+            "packed_vs_percall": round(t_percall / t_packed, 3),
+            "packed_vs_xla": round(t_xla / t_packed, 3),
+        })
+    return rows
+
+
+def main(full: bool = False):
+    rs = run(scale=1 if full else 4)
+    common.print_csv("table6_e2e_prefill", rs)
+    common.write_table("table6_e2e_prefill", rs, meta={
+        "note": "paper T6: packed weights win the full prefill GEMM "
+                "sequence (paper: 1.42x/1.50x vs BNNSMatMul, 1.80x/2.67x "
+                "vs cblas)",
+        "scale": 1 if full else 4})
+    return rs
+
+
+if __name__ == "__main__":
+    import sys
+    main(full="--full" in sys.argv)

@@ -1,0 +1,36 @@
+"""Panel tuning walkthrough — the paper's §3.3 sweep as an API.
+
+Shows: (1) the napkin-math plan for a GEMM under different panel widths
+(lever 1 — the ~2x mis-tuning cliff), (2) the bit-exact-gated autotune
+sweep that fixes the deployed (block_n, block_k) pair, and (3) the
+mesh-scale panel feasibility check for the all-gather⇄matmul overlap.
+
+Run: PYTHONPATH=src python examples/panel_tuning.py
+"""
+from repro.core import autotune, scheduler
+from repro.models.model_zoo import PAPER_GEMM_SHAPES, PAPER_M
+
+M, N, K = PAPER_M, 2048, 2048        # the paper's QKV shape
+
+print(f"panel plans for QKV ({M}x{N}x{K}), 8 cores:")
+print(f"{'block_n':>8} {'panels':>7} {'occup':>6} {'pred_ms':>8} "
+      f"{'vmem_kb':>8}")
+for bn in (64, 128, 256, 512, 1024, 2048):
+    p = scheduler.plan(M, N, K, block_m=128, block_n=bn, block_k=512,
+                       num_cores=8)
+    print(f"{bn:>8} {p.panels:>7} {p.occupancy:>6.2f} "
+          f"{p.t_pred*1e3:>8.4f} {p.vmem//1024:>8}")
+
+print("\nbit-exact-gated sweep over the paper's twelve shapes:")
+shapes = [(PAPER_M, n, k) for _, _, n, k in PAPER_GEMM_SHAPES]
+for r in autotune.sweep(shapes, num_cores=8)[:3]:
+    print(f"  block_n={r.block_n:<5} block_k={r.block_k:<5} "
+          f"t_pred={r.t_pred*1e3:.3f}ms vmem={r.vmem//1024}KB "
+          f"bit_exact={r.bit_exact}")
+
+print("\nmesh-scale panels (N=2048 over 16 model shards):")
+for bn in (64, 128, 256):
+    info = scheduler.mesh_panels(2048, model_shards=16, block_n=bn)
+    print(f"  block_n={bn:<4} panels/shard="
+          f"{info['kernel_panels_per_shard']} "
+          f"overlap_feasible={info['overlap_feasible']}")

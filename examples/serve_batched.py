@@ -1,0 +1,59 @@
+"""End-to-end serving driver — the paper's deployment scenario.
+
+Loads a model, packs every projection weight once (untimed model-load
+phase, paper §3.2), then serves a queue of batched requests through the
+slot-pool engine, reporting prefill/decode tokens-per-second for the
+packed engine vs the per-call engine over identical requests — the
+framework-native analogue of the paper's llama.cpp integration (§4.7),
+where the pre-packed path lifted full-forward throughput 291→420 tok/s.
+
+Run: PYTHONPATH=src python examples/serve_batched.py [--arch deepseek-7b]
+     [--requests 12] [--prompt-len 128] [--max-new 16]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.launch.mesh import make_host_mesh
+from repro.models import model_zoo
+from repro.runtime.serve_loop import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b",
+                    choices=model_zoo.list_archs())
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batch-slots", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = model_zoo.reduced_config(model_zoo.get_config(args.arch))
+    if cfg.modality != "text":
+        raise SystemExit("pick a text arch for the serving demo")
+    mesh = make_host_mesh()
+    params = model_zoo.build(cfg)
+    rng = np.random.default_rng(0)
+    requests = [rng.integers(0, cfg.vocab_size,
+                             rng.integers(8, args.prompt_len + 1))
+                .astype(np.int32) for _ in range(args.requests)]
+
+    for packed in (True, False):
+        t0 = time.perf_counter()
+        eng = Engine(cfg, params, mesh=mesh, max_len=args.prompt_len
+                     + args.max_new, packed=packed)
+        load_s = time.perf_counter() - t0
+        outs, stats = eng.serve(requests, batch_slots=args.batch_slots,
+                                prompt_len=args.prompt_len,
+                                max_new_tokens=args.max_new)
+        label = "packed (proposed)" if packed else "per-call (baseline)"
+        print(f"{label:22s} load {load_s:5.2f}s | "
+              f"prefill {stats.prefill_tps:8,.0f} tok/s | "
+              f"decode {stats.decode_tps:8,.0f} tok/s | "
+              f"{len(outs)} requests served")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Checkpointing: atomic, sharded, async, elastic."""
+from repro.checkpoint.store import (
+    CheckpointManager, latest_step, restore, save,
+)
+
+__all__ = ["CheckpointManager", "latest_step", "restore", "save"]

@@ -1,0 +1,41 @@
+"""deepseek-v3-671b [moe]: MLA + 256-expert top-8 MoE.
+
+61L d_model=7168 128H d_ff=2048(expert) vocab=129280, MoE 256e top-8,
+1 shared expert [arXiv:2412.19437; hf].  Per the assignment all 61 layers
+are MoE (the release model's 3 leading dense layers and the MTP head are
+noted as omitted in DESIGN.md §6).  MLA runs in absorbed form: the cache
+holds only the 512-d latent + 64-d rope key.  bf16 params + adafactor,
+required to fit 16 GB/chip at 256 chips (DESIGN.md §4).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    source="arXiv:2412.19437; hf",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,          # q-head count; MLA caches the shared latent
+    head_dim=192,              # qk_nope + qk_rope
+    d_ff=2048,
+    vocab_size=129280,
+    attention_kind="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_rope_dim=64,
+    qk_nope_dim=128,
+    v_head_dim=128,
+    num_experts=256,
+    num_shared_experts=1,
+    experts_per_token=8,
+    moe_d_ff=2048,
+    moe_dispatch="global",     # offline sweep: grouped dispatch regressed
+                               # here (GSPMD already picks a2a for 256e;
+                               # the explicit constraints fought it) —
+                               # EXPERIMENTS.md §Perf cell 3
+
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    optimizer="adafactor",
+)

@@ -1,0 +1,34 @@
+"""gemma2-9b [dense]: local/global alternating attention + logit softcap.
+
+42L d_model=3584 16H (GQA kv=8) d_ff=14336 vocab=256000
+[arXiv:2408.00118; hf].  Local window 4096 every other layer; attention
+softcap 50, final-logit softcap 30; (1+scale) RMSNorm with post-norms;
+tied embeddings; GeGLU.  Global layers are full attention, so the
+long_500k cell is SKIPPED for this arch (DESIGN.md §6).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b",
+    family="dense",
+    source="arXiv:2408.00118; hf",
+    num_layers=42,
+    d_model=3584,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=14336,
+    vocab_size=256000,
+    attention_kind="gqa",
+    window=4096,
+    local_global_period=2,
+    logit_softcap=30.0,
+    attn_softcap=50.0,
+    attn_scale=256 ** -0.5,
+    act="gelu",
+    norm_plus_one=True,
+    post_norms=True,
+    embed_scale=True,
+    tie_embeddings=True,
+    compute_dtype="bfloat16",
+)

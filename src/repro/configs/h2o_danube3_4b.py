@@ -1,0 +1,26 @@
+"""h2o-danube-3-4b [dense]: llama+mistral mix with sliding-window
+attention.  24L d_model=3840 32H (GQA kv=8) d_ff=10240 vocab=32000
+[arXiv:2401.16818; unverified].
+
+Modeled with a uniform 8192-token sliding window on every layer (the
+release interleaves SWA/full; uniform-SWA is recorded in DESIGN.md §6).
+Because every layer is windowed, the KV cache is a ring buffer of the
+window size, which is what makes the long_500k decode cell runnable.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b",
+    family="dense",
+    source="arXiv:2401.16818; unverified",
+    num_layers=24,
+    d_model=3840,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=120,
+    d_ff=10240,
+    vocab_size=32000,
+    attention_kind="gqa",
+    window=8192,
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,31 @@
+"""hymba-1.5b [hybrid]: parallel attention + mamba heads per layer.
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16
+[arXiv:2411.13676; hf].  Each layer runs GQA attention and a Mamba-2
+mixer in parallel on the same input; the two outputs are normalized and
+averaged (the release's learnable per-branch beta and meta-tokens are
+simplifications recorded in DESIGN.md §6).  Uniform SWA window 2048 (the
+release uses SWA on all but 3 layers), so the attention cache is a ring
+buffer and long_500k is runnable with O(1) SSM state + O(window) KV.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    source="arXiv:2411.13676; hf",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    attention_kind="parallel_ssm",
+    window=2048,
+    ssm_state=16,
+    ssm_heads=25,
+    ssm_head_dim=128,
+    ssm_groups=1,
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,26 @@
+"""internvl2-76b [vlm]: InternViT + InternLM2 backbone.
+
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256
+[arXiv:2404.16821; unverified].  The InternViT frontend is a STUB:
+input_specs() provides precomputed patch embeddings [B, S, d_model];
+only the language backbone is modeled (DESIGN.md §6).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="dense",
+    modality="vlm",
+    source="arXiv:2404.16821; unverified",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    attention_kind="gqa",
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    optimizer="adafactor",
+)

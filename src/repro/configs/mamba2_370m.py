@@ -1,0 +1,28 @@
+"""mamba2-370m [ssm]: SSD (state-space duality), attention-free.
+
+48L d_model=1024 d_ff=0 vocab=50280, ssm_state=128
+[arXiv:2405.21060; unverified].  d_inner = 2*d_model = 2048, head_dim 64
+-> 32 SSM heads, 1 group, conv width 4, tied embeddings (matches the
+~370M total).  Attention-free => long_500k decode is O(1) state.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    source="arXiv:2405.21060; unverified",
+    num_layers=48,
+    d_model=1024,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    attention_kind="none",
+    ssm_state=128,
+    ssm_heads=32,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    tie_embeddings=True,
+    compute_dtype="bfloat16",
+)

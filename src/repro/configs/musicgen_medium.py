@@ -1,0 +1,26 @@
+"""musicgen-medium [audio]: decoder-only over EnCodec tokens.
+
+48L d_model=1536 24H (GQA kv=24 = MHA) d_ff=6144 vocab=2048
+[arXiv:2306.05284; hf].  The EnCodec frontend is a STUB: input_specs()
+provides precomputed frame embeddings [B, S, d_model]; the single-codebook
+LM head stands in for the 4-codebook interleaving (frontend detail, see
+DESIGN.md §6).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="dense",
+    modality="audio",
+    source="arXiv:2306.05284; hf",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    attention_kind="gqa",
+    act="gelu",
+    compute_dtype="bfloat16",
+)

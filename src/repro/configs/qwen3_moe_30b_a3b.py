@@ -1,0 +1,25 @@
+"""qwen3-moe-30b-a3b [moe]: 128 experts top-8.
+
+48L d_model=2048 32H (GQA kv=4) d_ff=768(expert) vocab=151936
+[hf:Qwen/Qwen3-30B-A3B; hf].
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    source="hf:Qwen/Qwen3-30B-A3B; hf",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=768,
+    vocab_size=151936,
+    attention_kind="gqa",
+    num_experts=128,
+    experts_per_token=8,
+    moe_d_ff=768,
+    rope_theta=1e6,
+    compute_dtype="bfloat16",
+)

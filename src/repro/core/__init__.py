@@ -1,0 +1,9 @@
+"""Core: the paper's contribution — pre-packed, panel-scheduled GEMM."""
+from repro.core import autotune, bitexact, packing, panel_gemm, scheduler
+from repro.core.packing import PackedWeight, pack
+from repro.core.panel_gemm import gemm, gemm_percall, gemm_xla
+
+__all__ = [
+    "autotune", "bitexact", "packing", "panel_gemm", "scheduler",
+    "PackedWeight", "pack", "gemm", "gemm_percall", "gemm_xla",
+]

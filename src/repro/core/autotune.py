@@ -1,0 +1,89 @@
+"""Offline (block_n, block_k) sweep — the paper's §3.3 panel-sizing sweep.
+
+The paper sweeps Nc in {64..512} x Kc in {256..2048}, REJECTS any candidate
+that is not bit-identical to Accelerate, and deploys the single pair that
+wins all twelve shapes.  Same protocol here:
+
+  1. candidates ranked by the napkin-math model in core/scheduler.plan()
+     (predicted max(compute, memory) time / occupancy, VMEM-gated);
+  2. each surviving candidate is executed in interpret mode on a reduced
+     shape and must be BIT-IDENTICAL to the blocked oracle at its own
+     block_k (kernels/ref.gemm_blocked) — any accumulator-carry bug is an
+     instant reject;
+  3. one (block_n, block_k) pair is deployed uniformly across shapes
+     (the paper: "it is not tuned against any one comparison").
+
+Run via benchmarks/table5_panel_sweep.py; the deployed defaults in
+kernels/panel_gemm.py record the result.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import bitexact, scheduler
+
+BLOCK_N_CANDIDATES = (128, 256, 512, 1024)
+BLOCK_K_CANDIDATES = (128, 256, 512, 1024, 2048)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    block_n: int
+    block_k: int
+    t_pred: float
+    vmem: int
+    bit_exact: bool
+
+
+def sweep(shapes, *, block_m: int = 128, num_cores: int = 1,
+          validate: bool = True, reduced: int = 256) -> list[SweepResult]:
+    """Rank (block_n, block_k) pairs over a set of (M, N, K) shapes.
+
+    ``shapes``: iterable of (m, n, k).  Returns candidates sorted by total
+    predicted time across all shapes (the all-twelve-shapes criterion),
+    with non-bit-exact candidates removed when ``validate``.
+    """
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.panel_gemm import panel_gemm
+
+    rng = np.random.default_rng(0)
+    out = []
+    for bn in BLOCK_N_CANDIDATES:
+        for bk in BLOCK_K_CANDIDATES:
+            t = 0.0
+            ok = True
+            for (m, n, k) in shapes:
+                p = scheduler.plan(m, n, k, block_m=block_m, block_n=bn,
+                                   block_k=bk, num_cores=num_cores)
+                if not p.vmem_ok:
+                    ok = False
+                    break
+                t += p.t_pred
+            if not ok:
+                continue
+            exact = True
+            if validate:
+                m_r = block_m
+                k_r, n_r = 2 * bk, bn   # smallest shape with a real K-carry
+                x = jnp.asarray(rng.standard_normal((m_r, k_r)),
+                                dtype=jnp.float32)
+                w = jnp.asarray(rng.standard_normal((k_r, n_r)),
+                                dtype=jnp.float32)
+                y = panel_gemm(x, w, block_m=block_m, block_n=bn, block_k=bk,
+                               interpret=True)
+                exact = bitexact.bit_identical(
+                    np.asarray(y), np.asarray(ref.gemm_blocked(x, w, bk)))
+            out.append(SweepResult(bn, bk, t, scheduler.vmem_bytes(
+                block_m, bn, bk), exact))
+    out = [r for r in out if r.bit_exact]
+    out.sort(key=lambda r: r.t_pred)
+    return out
+
+
+def deployed_pair(shapes, **kw) -> tuple[int, int]:
+    """The single uniform pair the sweep deploys (paper: Nc=64, Kc=2048)."""
+    best = sweep(shapes, **kw)[0]
+    return best.block_n, best.block_k

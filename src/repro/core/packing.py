@@ -1,0 +1,108 @@
+"""Weight pre-packing — paper lever 2, as a first-class feature.
+
+On the M1 the pack is a physical re-layout of B into [Kc, Nc] panels, paid
+once at model load and amortized to zero across every prefill/decode call.
+On TPU the per-call costs a stateless GEMM pays are the analogues we remove:
+
+  * transpose        — engines store W as [N, K] (llama.cpp convention);
+                       the kernel wants [K, N].  Done once here.
+  * block padding    — pad (K, N) up to (block_k, block_n) multiples so the
+                       kernel's BlockSpec grid divides exactly.  Once.
+  * dtype cast       — e.g. fp32 master → bf16 compute copy.  Once.
+  * device layout /  — place the packed array with the exact NamedSharding
+    resharding         the GEMM consumes, so no relayout or resharding
+                       collective appears in the per-step HLO.  Once.
+
+``PackedWeight`` is a pytree, so it flows through jit/pjit/scan/checkpoint
+like any array.  The stateless baseline (pack-every-call) lives in
+core/panel_gemm.gemm_percall and is benchmarked against this path
+(benchmarks/table3_prefill_gemms.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import panel_gemm as _kernel
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedWeight:
+    """A weight packed once at load for the panel GEMM.
+
+    data: [K_pad, N_pad] row-major, zero-padded to block multiples.
+    n, k: logical (unpadded) dims.  block_n/block_k: the pack granularity.
+    """
+    data: jax.Array
+    n: int = dataclasses.field(metadata=dict(static=True))
+    k: int = dataclasses.field(metadata=dict(static=True))
+    block_n: int = dataclasses.field(metadata=dict(static=True))
+    block_k: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def shape(self):  # logical shape
+        return (self.k, self.n)
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, int]) -> jax.Array:
+    pk = (-x.shape[0]) % mults[0]
+    pn = (-x.shape[1]) % mults[1]
+    if pk or pn:
+        x = jnp.pad(x, ((0, pk), (0, pn)))
+    return x
+
+
+def fit_block(dim: int, want: int, lane: int = 128) -> int:
+    """Largest block <= ``want`` that divides dim rounded up to a lane
+    multiple — keeps pack padding minimal on odd dims (hymba's 1600-wide
+    projections would otherwise pad 28% to honor the deep default K
+    block; the deep block only pays off when it divides anyway)."""
+    padded = max(lane, ((dim + lane - 1) // lane) * lane)
+    b = min(want, padded)
+    while b > lane and padded % b:
+        b //= 2
+    return b if padded % b == 0 else lane
+
+
+def pack(
+    w: jax.Array,
+    *,
+    transposed: bool = False,          # True: w given as [N, K] (llama.cpp)
+    block_n: int = _kernel.DEFAULT_BLOCK_N,
+    block_k: int = _kernel.DEFAULT_BLOCK_K,
+    dtype: Any = None,
+    sharding: jax.sharding.Sharding | None = None,
+) -> PackedWeight:
+    """Pack a weight once at model load (see module docstring)."""
+    if transposed:
+        n, k = w.shape
+        w = w.T
+    else:
+        k, n = w.shape
+    if dtype is not None:
+        w = w.astype(dtype)
+    block_k = fit_block(k, block_k)
+    block_n = fit_block(n, block_n)
+    w = _pad_to(w, (block_k, block_n))
+    if sharding is not None:
+        w = jax.device_put(w, sharding)
+    return PackedWeight(data=w, n=n, k=k, block_n=block_n, block_k=block_k)
+
+
+def pack_percall(w: jax.Array, *, transposed: bool, block_n: int,
+                 block_k: int, dtype: Any = None) -> jax.Array:
+    """The stateless pack, traced INSIDE the per-call GEMM (the honest
+    cblas_sgemm/BNNSMatMul analogue: transpose + pad paid on every call)."""
+    if transposed:
+        w = w.T
+    if dtype is not None:
+        w = w.astype(dtype)
+    return _pad_to(w, (block_k, block_n))

@@ -1,0 +1,94 @@
+"""Public GEMM API: pre-packed, per-call, and XLA paths.
+
+This is the surface the model code uses.  Three paths mirror the paper's
+backends:
+
+  gemm(x, pw)          — pre-packed kernel (the paper's proposed path):
+                         per call pays ONLY the compute loop (+ M padding).
+  gemm_percall(x, W)   — stateless baseline: transpose+pad the weight
+                         inside the call, every call (cblas/BNNSMatMul
+                         analogue).
+  gemm_xla(x, W)       — raw XLA dot (the "Accelerate dispatch" analogue
+                         and the CPU-runtime fallback).
+
+Backend selection: impl ∈ {"xla", "pallas", "interpret"}.  On this CPU
+container the model runtime defaults to "xla" (Pallas lowers for TPU;
+interpret mode is for kernel validation, not throughput).  On TPU the
+deployed default is "pallas".
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.kernels import panel_gemm as _kernel
+from repro.kernels import ref as _ref
+
+# Global default backend; overridable per-call.  "xla" keeps CPU smoke tests
+# and dry-runs fast; set REPRO_GEMM_IMPL=pallas on TPU.
+_DEFAULT_IMPL = os.environ.get("REPRO_GEMM_IMPL", "xla")
+
+
+def _pad_m(x: jax.Array, block_m: int) -> tuple[jax.Array, int]:
+    m = x.shape[0]
+    pad = (-m) % block_m
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, m
+
+
+def _run(x_p, w_p, *, block_m, block_n, block_k, impl, out_dtype):
+    if impl == "xla":
+        return jnp.dot(x_p, w_p, preferred_element_type=jnp.float32).astype(
+            out_dtype or x_p.dtype)
+    return _kernel.panel_gemm(
+        x_p, w_p, block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype, interpret=(impl == "interpret"))
+
+
+def gemm(x: jax.Array, pw: packing.PackedWeight, *,
+         block_m: int = _kernel.DEFAULT_BLOCK_M,
+         impl: str | None = None, out_dtype=None) -> jax.Array:
+    """y[M, N] = x[M, K] @ pw  — pre-packed path (compute loop only)."""
+    impl = impl or _DEFAULT_IMPL
+    assert x.shape[-1] == pw.k, (x.shape, pw.shape)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, pw.k)
+    if pw.data.shape[0] != pw.k:                   # pack padded K: pad x too
+        x2 = jnp.pad(x2, ((0, 0), (0, pw.data.shape[0] - pw.k)))
+    x2, m = _pad_m(x2, block_m)
+    y = _run(x2, pw.data, block_m=block_m, block_n=pw.block_n,
+             block_k=pw.block_k, impl=impl, out_dtype=out_dtype)
+    return y[:m, :pw.n].reshape(*lead, pw.n)
+
+
+def gemm_percall(x: jax.Array, w: jax.Array, *, transposed: bool = False,
+                 block_m: int = _kernel.DEFAULT_BLOCK_M,
+                 block_n: int = _kernel.DEFAULT_BLOCK_N,
+                 block_k: int = _kernel.DEFAULT_BLOCK_K,
+                 impl: str | None = None, out_dtype=None) -> jax.Array:
+    """Stateless baseline: packs w inside the call, every call."""
+    impl = impl or _DEFAULT_IMPL
+    w_p = packing.pack_percall(w, transposed=transposed, block_n=block_n,
+                               block_k=block_k)
+    n = w.shape[0] if transposed else w.shape[1]
+    k = w.shape[1] if transposed else w.shape[0]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k)
+    if w_p.shape[0] != k:
+        x2 = jnp.pad(x2, ((0, 0), (0, w_p.shape[0] - k)))
+    x2, m = _pad_m(x2, block_m)
+    y = _run(x2, w_p, block_m=block_m, block_n=block_n, block_k=block_k,
+             impl=impl, out_dtype=out_dtype)
+    return y[:m, :n].reshape(*lead, n)
+
+
+def gemm_xla(x: jax.Array, w: jax.Array, *, transposed: bool = False):
+    """The 'Accelerate' analogue: a single shape-agnostic XLA dot."""
+    if transposed:
+        w = w.T
+    return _ref.gemm_xla(x.reshape(-1, w.shape[0]), w).reshape(
+        *x.shape[:-1], w.shape[1])

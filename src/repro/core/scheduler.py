@@ -1,0 +1,94 @@
+"""Panel-granularity scheduling model — paper lever 1, TPU form.
+
+The paper's Fig. 2: a single mis-tuned column-panel width (Nc = 512 vs 64)
+costs ~2x because coarse panels (a) leave the second AMX block idle and
+(b) blow the shared-L2 footprint.  The TPU analogues this model scores:
+
+  * grid occupancy  — the Pallas grid over (M/bm, N/bn) output panels must
+    expose enough parallel work per core; a tail of partially-filled cores
+    is idle MXU time.  (v5e has one TensorCore per chip; across the mesh,
+    the same arithmetic applies to N-shards per chip.)
+  * VMEM footprint  — the (bm,bk)+(bk,bn) working set must fit VMEM with
+    double buffering (the 128 KB L1 constraint of the paper, scaled).
+  * HBM re-reads    — panel width sets operand reuse: x is re-read
+    ceil(N/bn) times, w ceil(M/bm) times.  Coarse panels reduce re-reads
+    but starve occupancy; the sweet spot is the sweep's job.
+
+Pure napkin-math: every number here is derivable before lowering, and the
+autotuner (core/autotune.py) uses the predicted time to rank candidates —
+then gates on bit-exactness, exactly like the paper's offline sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.kernels.panel_gemm import VMEM_BUDGET, vmem_bytes
+
+# TPU v5e hardware constants (same as roofline/analysis.py).
+PEAK_FLOPS = 197e12          # bf16; fp32 through the MXU is ~1/2, see below
+PEAK_FLOPS_F32 = 98.5e12
+HBM_BW = 819e9               # bytes/s
+MXU_LANE = 128
+GRID_STEP_OVERHEAD = 1e-8    # s per Pallas grid step (issue/semaphore)
+
+
+@dataclasses.dataclass(frozen=True)
+class PanelPlan:
+    block_m: int
+    block_n: int
+    block_k: int
+    grid: tuple[int, int, int]
+    panels: int                 # parallel (i, j) output panels
+    vmem: int
+    vmem_ok: bool
+    aligned: bool               # MXU 128-lane alignment
+    hbm_bytes: float            # modeled HBM traffic incl. panel re-reads
+    t_compute: float            # s
+    t_memory: float             # s
+    t_pred: float               # max(compute, memory) / occupancy
+    occupancy: float            # parallel-panel tail utilization
+
+
+def plan(m: int, n: int, k: int, *, block_m: int, block_n: int,
+         block_k: int, dtype_bytes: int = 4, num_cores: int = 1,
+         peak_flops: float = PEAK_FLOPS_F32) -> PanelPlan:
+    gm, gn, gk = (math.ceil(m / block_m), math.ceil(n / block_n),
+                  math.ceil(k / block_k))
+    panels = gm * gn
+    # tail utilization: last wave of panels may underfill the cores
+    waves = math.ceil(panels / num_cores)
+    occ = panels / (waves * num_cores)
+    vm = vmem_bytes(block_m, block_n, block_k)
+    # HBM traffic: x re-read per column panel, w re-read per row panel.
+    hbm = dtype_bytes * (m * k * gn + k * n * gm + 2 * m * n)
+    t_c = 2.0 * m * n * k / (peak_flops * num_cores)
+    t_m = hbm / (HBM_BW * num_cores)
+    aligned = (block_m % 8 == 0 and block_n % MXU_LANE == 0
+               and block_k % MXU_LANE == 0)
+    # per-grid-step issue overhead: the paper's deeper-Kc preference
+    # (fewer accumulator passes); small, mostly a tiebreak.
+    t_o = GRID_STEP_OVERHEAD * gm * gn * gk / num_cores
+    t = (max(t_c, t_m) + t_o) / max(occ, 1e-9)
+    if not aligned:
+        t *= 4.0        # unaligned tiles waste MXU lanes; heavy penalty
+    if vm > VMEM_BUDGET:
+        t = float("inf")
+    return PanelPlan(block_m, block_n, block_k, (gm, gn, gk), panels, vm,
+                     vm <= VMEM_BUDGET, aligned, hbm, t_c, t_m, t, occ)
+
+
+def mesh_panels(n: int, model_shards: int, block_n: int) -> dict:
+    """Distributed form of lever 1: N-panels per model shard.
+
+    The all-gather<->matmul overlap (parallel/collectives.py) decomposes the
+    GEMM into `model_shards` panels; each must itself contain >= 1 kernel
+    panel or the overlap serializes — the paper's 'coarse panel reaches only
+    one block' failure, at mesh scale.
+    """
+    per_shard = n // model_shards
+    return {
+        "n_per_shard": per_shard,
+        "kernel_panels_per_shard": per_shard // block_n,
+        "overlap_feasible": per_shard >= block_n,
+    }

@@ -1,0 +1,7 @@
+"""Data pipeline: synthetic LM stream + binary token-file loader."""
+from repro.data.pipeline import (
+    SyntheticLM, TokenFileDataset, make_batches, write_token_file,
+)
+
+__all__ = ["SyntheticLM", "TokenFileDataset", "make_batches",
+           "write_token_file"]

@@ -1,0 +1,118 @@
+"""Tokenized data pipeline.
+
+Two sources behind one iterator protocol:
+
+* ``SyntheticLM`` — deterministic, seeded Zipf-ish token stream with local
+  n-gram structure (so the loss actually decreases and training-curve
+  sanity checks mean something).  Restart-safe: batch(step) is a pure
+  function of (seed, step), so resuming from a checkpoint replays the
+  exact stream — no iterator state to checkpoint.
+* ``TokenFileDataset`` — memory-mapped uint16/uint32 token file (the
+  production path).  Sequential sequence windows, host-sharded by
+  (process_index, process_count): each host reads only its stripe, the
+  multi-host layout jax.distributed assumes.
+
+Both yield {"inputs": (B, S) int32, "labels": (B, S) int32} with labels =
+inputs shifted left (next-token prediction).  For stub-frontend archs
+(audio/vlm) ``make_batches(..., embed_dim=d)`` yields float embeddings
+instead of token ids — matching model_zoo.input_specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    batch_size: int                 # per-host batch
+    seed: int = 0
+    zipf_a: float = 1.3
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        b, s, v = self.batch_size, self.seq_len, self.vocab_size
+        # Zipf marginal over a shuffled alphabet + deterministic bigram
+        # successor table: x[t+1] = succ[x[t]] with prob .5 else zipf draw.
+        ranks = rng.permutation(v)
+        draws = np.minimum(rng.zipf(self.zipf_a, size=(b, s + 1)), v) - 1
+        toks = ranks[draws]
+        succ = (np.arange(v) * 31 + 7) % v
+        follow = rng.random((b, s + 1)) < 0.5
+        for t in range(1, s + 1):
+            toks[:, t] = np.where(follow[:, t], succ[toks[:, t - 1]],
+                                  toks[:, t])
+        return {"inputs": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+@dataclasses.dataclass
+class TokenFileDataset:
+    """Memory-mapped flat token file, host-sharded sequence windows."""
+    path: str
+    seq_len: int
+    batch_size: int                 # per-host batch
+    dtype: str = "uint16"
+    process_index: int = 0
+    process_count: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        self._tokens = np.memmap(self.path, dtype=self.dtype, mode="r")
+        n_seq = (len(self._tokens) - 1) // self.seq_len
+        # host stripe: contiguous block of sequence windows
+        per = n_seq // self.process_count
+        self._lo = self.process_index * per
+        self._n = per
+        if self._n < self.batch_size:
+            raise ValueError(
+                f"host stripe has {self._n} sequences < batch "
+                f"{self.batch_size}; token file too small")
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, self.process_index, step]))
+        idx = self._lo + rng.integers(0, self._n, self.batch_size)
+        s = self.seq_len
+        rows = np.stack([self._tokens[i * s: i * s + s + 1] for i in idx])
+        rows = rows.astype(np.int32)
+        return {"inputs": rows[:, :-1], "labels": rows[:, 1:]}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def write_token_file(path: str, tokens: np.ndarray, dtype: str = "uint16"):
+    np.asarray(tokens, dtype=dtype).tofile(path)
+
+
+def make_batches(source, *, embed_dim: int | None = None,
+                 embed_dtype=np.float32, start_step: int = 0):
+    """Iterator of batches from ``source`` starting at ``start_step``
+    (checkpoint resume).  embed_dim: stub-frontend mode — replace token
+    inputs with deterministic pseudo-embeddings [B, S, d]."""
+    step = start_step
+    while True:
+        b = source.batch(step)
+        if embed_dim is not None:
+            rng = np.random.default_rng(
+                np.random.SeedSequence([source.seed, 999, step]))
+            bsz, s = b["inputs"].shape
+            b = dict(b)
+            b["inputs"] = rng.standard_normal(
+                (bsz, s, embed_dim)).astype(embed_dtype)
+        yield step, b
+        step += 1

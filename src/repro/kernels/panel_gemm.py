@@ -1,0 +1,125 @@
+"""Panel GEMM — the paper's kernel, adapted to the TPU MXU.
+
+Paper (M1 AMX)                      → here (TPU, Pallas)
+------------------------------------------------------------------
+Goto–BLIS 3-level blocking          → (block_m, block_n, block_k) BlockSpec
+   A-slice sized to the 128 KB L1   →   blocks sized to fit ~16 MB VMEM,
+                                        MXU-aligned (multiples of 128 lanes)
+column panel width Nc               → block_n (grid granularity over N)
+K-blocking depth Kc                 → block_k (grid depth over K)
+skip-Z at (pc==0, kk==0)            → @pl.when(k == 0) zero-init of the
+                                      fp32 VMEM accumulator
+LDZ/STZ carry of Z across pc        → accumulator scratch carried across the
+                                      innermost ("arbitrary") K grid dim;
+                                      output written once at k == nk-1
+4-way FMA32 ILP across Z banks      → the MXU consumes the whole (bm, bn)
+                                      tile; ILP is the hardware's problem —
+                                      exactly the paper's point: the inner
+                                      loop is fixed, the levers are above it.
+
+The kernel expects its B operand ALREADY in the packed layout produced by
+``repro.core.packing`` ([K_pad, N_pad], row-major, block-aligned).  The
+pack is paid once at model load (paper lever 2); this kernel is the
+per-call "compute loop only" path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Deployed block pair (the (Nc, Kc) analogue), fixed by the offline sweep
+# in core/autotune.py under the bit-exactness gate (winner over the twelve
+# paper shapes; re-derived in benchmarks/table5_panel_sweep.py).  The deep
+# K block mirrors the paper's Kc = 2,048 — affordable only because the
+# weight is pre-packed (paper §3.3); packing.fit_block shrinks it per
+# weight when K is not block-divisible.  See EXPERIMENTS.md §Perf.
+DEFAULT_BLOCK_M = 128     # the paper's M = S = 128 prefill row panel
+DEFAULT_BLOCK_N = 512     # column-panel width (lever-1 knob)
+DEFAULT_BLOCK_K = 2048    # K-blocking depth (lever-2-unlocked knob)
+
+# v5e VMEM budget the blocks must respect (bytes); checked by vmem_bytes().
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int,
+               in_dtype=jnp.float32) -> int:
+    """Static VMEM footprint model for one grid step (double-buffered ins)."""
+    isz = jnp.dtype(in_dtype).itemsize
+    x = block_m * block_k * isz
+    w = block_k * block_n * isz
+    acc = block_m * block_n * 4          # fp32 accumulator scratch
+    out = block_m * block_n * isz
+    return 2 * (x + w) + acc + out       # 2x: pipelined double buffering
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    """One (i, j, k) grid step: acc[i,j] += x[i,k] @ w[k,j].
+
+    The Z-discipline of the paper, verbatim in Pallas terms: the accumulator
+    is zeroed only at k == 0 (skip-Z analogue) and the output is stored only
+    at the last K step (STZ).  Without the @pl.when guards, one (i, j)
+    tile's partial sums leak into the next — the exact silent-drift bug the
+    paper calls correctness-critical.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret", "out_dtype"),
+)
+def panel_gemm(
+    x: jax.Array,               # [M_pad, K_pad]  activations (pre-padded)
+    w: jax.Array,               # [K_pad, N_pad]  packed weight panels
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C[M_pad, N_pad] = x @ w via MXU panel tiles.
+
+    Shapes must be pre-padded to block multiples (the pack does this once at
+    load for w; ops.py pads x per call — cheap, M=128 at prefill).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        f"shapes ({m},{n},{k}) not aligned to blocks "
+        f"({block_m},{block_n},{block_k}); pack first")
+    nk = k // block_k
+    out_dtype = out_dtype or x.dtype
+
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, nk=nk),
+        grid=(m // block_m, n // block_n, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w)

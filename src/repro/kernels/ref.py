@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the kernels.
+
+Two references, mirroring the paper's two comparison baselines:
+
+* ``gemm_xla``      — the "Accelerate" analogue: whatever XLA's dot does.
+                      Used for allclose checks and as the runtime fallback.
+* ``gemm_blocked``  — accumulates K in the SAME block order as the Pallas
+                      kernel (sequential fp32 partial sums over block_k
+                      slabs).  The kernel must be BIT-IDENTICAL to this
+                      oracle — the paper's max-abs-diff = 0e+00 discipline.
+                      (fp32 summation order differs from gemm_xla, so
+                      kernel-vs-xla is allclose, not bitwise; the paper hits
+                      the same issue with BNNS Graph and reports the diff.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_xla(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Reference GEMM: XLA dot, fp32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def gemm_blocked(x: jax.Array, w: jax.Array, block_k: int,
+                 out_dtype=None) -> jax.Array:
+    """K-blocked GEMM in the kernel's exact accumulation order."""
+    m, k = x.shape
+    _, n = w.shape
+    assert k % block_k == 0
+    out_dtype = out_dtype or x.dtype
+    acc = jnp.zeros((m, n), jnp.float32)
+    for kk in range(0, k, block_k):
+        acc = acc + jnp.dot(
+            x[:, kk:kk + block_k], w[kk:kk + block_k, :],
+            preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None,
+              scale=None):
+    """Reference multi-head attention.  q,k,v: [B, S, H, D] / [B, T, Hkv, D].
+
+    GQA: H may be a multiple of Hkv (kv heads are repeated).
+    window: sliding-window size (None = full); softcap: tanh logit cap.
+    """
+    b, s, h, d = q.shape
+    _, t, hkv, _ = k.shape
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    logits = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(s)[:, None] + (t - s)   # align cache offset
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)

@@ -1,0 +1,83 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Local smoke driver for the full production loop: config → data → sharded
+train step → checkpoints → fault-tolerant resume.  On a real cluster the
+same entrypoint runs under ``jax.distributed.initialize()`` with the
+production mesh; here it defaults to the host mesh and a reduced config
+(pass --full to lower the assigned full-scale config — requires the
+device memory to match, i.e. a real pod).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import SHAPES, TrainConfig
+from repro.data import SyntheticLM, make_batches
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import model_zoo
+from repro.runtime import fault_tolerance as ft
+from repro.runtime import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=model_zoo.list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--full", action="store_true",
+                    help="full-scale config on the production mesh")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = model_zoo.get_config(args.arch)
+    if args.full:
+        mesh = make_production_mesh()
+        shape = SHAPES["train_4k"]
+        seq, batch = shape.seq_len, shape.global_batch
+    else:
+        cfg = model_zoo.reduced_config(cfg)
+        mesh = make_host_mesh()
+        seq, batch = args.seq_len, args.batch
+
+    tc = TrainConfig(steps=args.steps, learning_rate=args.lr,
+                     checkpoint_every=args.checkpoint_every,
+                     warmup_steps=max(args.steps // 20, 2))
+    src = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=seq,
+                      batch_size=batch)
+    embed_dim = cfg.d_model if cfg.modality != "text" else None
+
+    shutdown = ft.GracefulShutdown().install()
+    watchdog = ft.StepWatchdog(
+        on_straggler=lambda ev: print(
+            f"[watchdog] straggler step {ev.step}: {ev.dt:.2f}s vs "
+            f"EMA {ev.ema:.2f}s"))
+
+    state, start = None, 0
+    if args.resume and args.ckpt_dir:
+        from repro.checkpoint import CheckpointManager
+        mgr = CheckpointManager(args.ckpt_dir)
+        like = train_loop.abstract_state(cfg, tc)
+        state, start = ft.resume_or_init(
+            mgr, lambda: train_loop.init_state(cfg, tc), like,
+            shardings=train_loop.state_shardings(like, mesh))
+        print(f"resume: starting at step {start}")
+
+    data = make_batches(src, embed_dim=embed_dim, start_step=start)
+    state, history = train_loop.train(
+        cfg, tc, mesh, data, ckpt_dir=args.ckpt_dir,
+        log_every=args.log_every, shutdown=shutdown, watchdog=watchdog,
+        state=state, start_step=start)
+    print(f"done: {len(history)} logged steps, "
+          f"final loss {history[-1]['loss']:.4f}"
+          if history else "done (no steps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Flash-style custom VJP for blocked attention — §Perf iteration B.
+
+Problem (measured in the dry-run walker): reverse-mode through the
+KV-chunk `lax.scan` of models/attention.blocked_attention saves every
+per-chunk residual — the (S × chunk) score/probability blocks, stacked
+over chunks — i.e. the full quadratic (S × T) score matrix in fp32, per
+layer, per microbatch.  That made every train_4k cell memory-bound
+(e.g. hymba train: 67 s memory term vs 1.4 s compute).
+
+Fix: the FlashAttention backward.  Forward saves only (q, k, v, out,
+lse) — O(S·D) — and the backward recomputes each chunk's scores from
+q·kᵀ and the saved log-sum-exp:
+
+    p_ij   = exp(s_ij − lse_i)
+    dv_j   = Σ_i p_ij · do_i
+    Δ_i    = Σ_d do_i · out_i
+    ds_ij  = p_ij · (do_i · v_j − Δ_i)       (× tanh-softcap jacobian)
+    dq_i  += scale · Σ_j ds_ij · k_j          (accumulated over chunks)
+    dk_j   = scale · Σ_i ds_ij · q_i
+    dv, dk are per-chunk outputs; dq is the scan carry.
+
+Same masking semantics as the forward (causal / sliding window /
+explicit k_pos ring slots / tanh softcap).  Traced integer auxiliaries
+(positions, window, kv_len) enter as float arrays so custom_vjp
+cotangents stay well-typed; they get zero gradients.
+
+Validated against jax.grad of the reference scan implementation in
+tests/test_flash_vjp.py (allclose, fp32).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def _dot_dtype(native):
+    from repro.models.layers import dot_dtype
+    return dot_dtype(native)
+
+
+def _slice_chunk(x, i, c):
+    """Chunk i of x along the T axis (axis 1), via dynamic_slice.
+
+    §Perf iteration C2: the earlier reshape+swapaxes restack copied (and
+    fp32-hoisted) the ENTIRE cache once per layer — 2×cache bytes of HBM
+    traffic per decode step (dominant on every decode cell).  Scanning
+    over chunk INDICES and slicing in place reads each cache byte once,
+    which is also exactly what the Pallas kernel's BlockSpec index_map
+    does on TPU.
+    """
+    return jax.lax.dynamic_slice_in_dim(x, i * c, c, axis=1)
+
+
+def _scores(qg, k_c, p_c, q_pos, *, scale, causal, window, softcap):
+    """Score block + mask for one KV chunk.
+
+    qg: [B,S,Hkv,G,D] in cache dtype; k_c: [B,c,Hkv,D]; p_c: [B,c] float
+    positions.  The QK dot consumes the operands' native dtype with fp32
+    accumulation (MXU semantics) — casting k_c up per chunk invites XLA
+    to hoist an fp32 round-trip of the ENTIRE cache across the update
+    (measured +32 GB/layer on decode_32k).  Returns (s_blk [B,Hkv,G,S,c]
+    post-softcap fp32, mask [B,1,1,S,c], tanh(s/cap) or None).
+    """
+    s_blk = jnp.einsum("bskgd,bckd->bkgsc", qg, k_c,
+                       preferred_element_type=jnp.float32) * scale
+    t = None
+    if softcap is not None:
+        t = jnp.tanh(s_blk / softcap)
+        s_blk = softcap * t
+    kp = p_c[:, None, :]
+    qp = q_pos[:, :, None]
+    mask = kp >= 0.0
+    if causal:
+        mask &= qp >= kp
+    # window: scalar float; <= 0 disables
+    in_win = (qp - kp) < window
+    mask &= jnp.logical_or(window <= 0.0, in_win)
+    return s_blk, mask[:, None, None], t
+
+
+def _fwd_core(q, k, v, k_pos, q_pos, window, *, scale, causal, softcap,
+              chunk):
+    # named_scope labels every HLO op from this region so the roofline
+    # walker can bucket "attention-intermediate" HBM traffic — on TPU the
+    # Pallas kernel (kernels/flash_attention.py) keeps these blocks in
+    # VMEM, so §Roofline reports the XLA-path term AND the
+    # kernel-adjusted term (see launch/dryrun.py).
+    with jax.named_scope("flash_attn_fwd"):
+        return _fwd_core_inner(q, k, v, k_pos, q_pos, window, scale=scale,
+                               causal=causal, softcap=softcap, chunk=chunk)
+
+
+def _fwd_core_inner(q, k, v, k_pos, q_pos, window, *, scale, causal,
+                    softcap, chunk):
+    b, s, h, d = q.shape
+    _, t, hkv, _ = k.shape
+    dv_ = v.shape[-1]
+    g = h // hkv
+    nc = t // chunk
+    # QK/PV dots consume the cache dtype directly (fp32 accumulate);
+    # casting the cache up per chunk costs an fp32 cache round-trip.
+    dt = _dot_dtype(k.dtype)
+    qg = q.reshape(b, s, hkv, g, d).astype(dt)
+
+    def step(carry, i):
+        m, l, acc = carry
+        k_c = _slice_chunk(k, i, chunk).astype(dt)
+        v_c = _slice_chunk(v, i, chunk).astype(dt)
+        p_c = _slice_chunk(k_pos, i, chunk)
+        s_blk, mask, _ = _scores(qg, k_c, p_c, q_pos, scale=scale,
+                                 causal=causal, window=window,
+                                 softcap=softcap)
+        s_blk = jnp.where(mask, s_blk, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s_blk, axis=-1))
+        p = jnp.where(mask, jnp.exp(s_blk - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgsc,bckv->bkgsv", p.astype(dt), v_c,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, s), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, s, dv_), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nc))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l_safe[..., None]).transpose(0, 3, 1, 2, 4)
+    lse = m + jnp.log(l_safe)                       # [B,Hkv,G,S]
+    return out.reshape(b, s, h, dv_).astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def flash_attention(q, k, v, k_pos, q_pos, window, scale, causal, softcap,
+                    chunk):
+    """out = softmax(mask(q·kᵀ))·v with O(S·D) VJP residuals.
+
+    q: [B,S,H,D]; k,v: [B,T,Hkv,Dv]; k_pos: [B,T] float (−1 = empty
+    slot); q_pos: [B,S] float; window: float scalar (<=0 = full).
+    T must be a multiple of ``chunk`` (caller pads; pad slots get
+    k_pos = −1).
+    """
+    out, _ = _fwd_core(q, k, v, k_pos, q_pos, window, scale=scale,
+                       causal=causal, softcap=softcap, chunk=chunk)
+    return out
+
+
+def _fwd(q, k, v, k_pos, q_pos, window, scale, causal, softcap, chunk):
+    out, lse = _fwd_core(q, k, v, k_pos, q_pos, window, scale=scale,
+                         causal=causal, softcap=softcap, chunk=chunk)
+    return out, (q, k, v, k_pos, q_pos, window, out, lse)
+
+
+def _bwd(scale, causal, softcap, chunk, res, d_out):
+    with jax.named_scope("flash_attn_bwd"):
+        return _bwd_inner(scale, causal, softcap, chunk, res, d_out)
+
+
+def _bwd_inner(scale, causal, softcap, chunk, res, d_out):
+    q, k, v, k_pos, q_pos, window, out, lse = res
+    b, s, h, d = q.shape
+    _, t, hkv, dv_ = v.shape
+    g = h // hkv
+    nc = t // chunk
+    dt = _dot_dtype(k.dtype)
+    qg = q.reshape(b, s, hkv, g, d).astype(dt)
+    do = d_out.reshape(b, s, hkv, g, dv_).astype(dt)
+    og = out.reshape(b, s, hkv, g, dv_)
+    delta = jnp.einsum("bskgv,bskgv->bskg", do, og,
+                       preferred_element_type=jnp.float32)
+    delta = delta.transpose(0, 2, 3, 1)             # [B,Hkv,G,S]
+
+    def step(dq_acc, i):
+        k_c = _slice_chunk(k, i, chunk).astype(dt)
+        v_c = _slice_chunk(v, i, chunk).astype(dt)
+        p_c = _slice_chunk(k_pos, i, chunk)
+        s_blk, mask, tanh_t = _scores(qg, k_c, p_c, q_pos, scale=scale,
+                                      causal=causal, window=window,
+                                      softcap=softcap)
+        p = jnp.where(mask, jnp.exp(s_blk - lse[..., None]), 0.0)
+        p_lo = p.astype(dt)                         # dot-operand dtype
+        # dv_j = sum_i p_ij do_i
+        dv_c = jnp.einsum("bkgsc,bskgv->bckv", p_lo, do,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bskgv,bckv->bkgsc", do, v_c,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None])
+        if softcap is not None:
+            ds = ds * (1.0 - tanh_t * tanh_t)       # softcap jacobian
+        ds_lo = ds.astype(dt)
+        dq_acc = dq_acc + jnp.einsum(
+            "bkgsc,bckd->bskgd", ds_lo, k_c,
+            preferred_element_type=jnp.float32) * scale
+        dk_c = jnp.einsum("bkgsc,bskgd->bckd", ds_lo, qg,
+                          preferred_element_type=jnp.float32) * scale
+        return dq_acc, (dk_c.astype(k.dtype), dv_c.astype(v_c.dtype))
+
+    dq0 = jnp.zeros((b, s, hkv, g, d), jnp.float32)
+    dq, (dkc, dvc) = jax.lax.scan(step, dq0, jnp.arange(nc))
+    dk = dkc.swapaxes(0, 1).reshape(b, t, hkv, d).astype(k.dtype)
+    dv = dvc.swapaxes(0, 1).reshape(b, t, hkv, dv_).astype(v.dtype)
+    dq = dq.reshape(b, s, h, d).astype(q.dtype)
+    zero = lambda x: jnp.zeros_like(x)
+    return dq, dk, dv, zero(k_pos), zero(q_pos), zero(window)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,90 @@
+"""Shared building blocks.  Every projection goes through ``linear`` so the
+whole stack can be switched between raw weights (training) and the paper's
+pre-packed path (inference) — see models/model_zoo.pack_for_inference."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import panel_gemm as _pg
+from repro.core.packing import PackedWeight
+
+
+def dot_dtype(native):
+    """Operand dtype for bf16 einsums with fp32 accumulation.
+
+    The TPU MXU consumes bf16 natively (and upcasting operands costs HBM
+    round-trips — §Perf C3); the XLA:CPU thunk runtime cannot EXECUTE
+    some bf16×bf16→f32 dots.  Real CPU execution therefore upcasts; the
+    dry-run (compile-only, TPU-targeted) forces native via
+    REPRO_MXU_DOTS=1, and REPRO_MXU_DOTS=0 forces fp32 everywhere.
+    """
+    force = os.environ.get("REPRO_MXU_DOTS")
+    if force == "1":
+        return native
+    if force == "0" or jax.default_backend() == "cpu":
+        return jnp.float32
+    return native
+
+
+def linear(x: jax.Array, w) -> jax.Array:
+    """x[..., K] @ w[K, N].  w may be a raw array or a PackedWeight
+    (pre-packed once at model load — paper lever 2)."""
+    if isinstance(w, PackedWeight):
+        return _pg.gemm(x, w)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale.astype(jnp.float32)) if plus_one else scale.astype(
+        jnp.float32)
+    return (x * s).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """Rotary embedding.  x: [..., S, H, D] (D even), positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down, act: str = "silu"):
+    a = linear(x, w_gate)
+    a = jax.nn.silu(a) if act == "silu" else jax.nn.gelu(a, approximate=True)
+    return linear(a * linear(x, w_up), w_down)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def embed_tokens(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy; logits [..., V] fp32-softmaxed."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def init_dense(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)

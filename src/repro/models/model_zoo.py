@@ -1,0 +1,205 @@
+"""Model zoo: arch registry, reduced smoke configs, input specs, and the
+load-time weight pack (paper lever 2 applied to a whole model).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins only — the full-scale
+configs are never allocated on this host; they exist solely to be lowered
++ compiled in launch/dryrun.py.  ``[audio]``/``[vlm]`` archs get stub
+frontends per the assignment: precomputed frame/patch embeddings
+[B, S, d_model] instead of token ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.core import packing
+from repro.models import transformer
+
+ARCHS = {
+    "musicgen-medium": "musicgen_medium",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "deepseek-7b": "deepseek_7b",
+    "h2o-danube-3-4b": "h2o_danube3_4b",
+    "gemma2-9b": "gemma2_9b",
+    "stablelm-3b": "stablelm_3b",
+    "internvl2-76b": "internvl2_76b",
+    "mamba2-370m": "mamba2_370m",
+    "hymba-1.5b": "hymba_1_5b",
+}
+
+# The paper's Table 3: twelve LLM prefill GEMMs at M = S = 128, as
+# (model, op, N, K).  These drive benchmarks/table3 and the GEMM tests.
+PAPER_GEMM_SHAPES = [
+    ("gpt2-style", "qkv", 2048, 2048),
+    ("gpt2-style", "ffn1", 8192, 2048),
+    ("gpt2-style", "ffn2", 2048, 8192),
+    ("gpt2-style", "lm_head", 60000, 2048),
+    ("tinyllama-1.1b", "qkv", 2048, 2048),
+    ("tinyllama-1.1b", "ffn1", 5632, 2048),
+    ("tinyllama-1.1b", "ffn2", 2048, 5632),
+    ("tinyllama-1.1b", "lm_head", 32000, 2048),
+    ("llama-7b", "qkv", 4096, 4096),
+    ("llama-7b", "ffn1", 11008, 4096),
+    ("llama-7b", "ffn2", 4096, 11008),
+    ("llama-7b", "lm_head", 32000, 4096),
+]
+PAPER_M = 128
+
+# long_500k applicability (DESIGN.md §6): sub-quadratic decode state only.
+LONG_CONTEXT_ARCHS = {"mamba2-370m", "hymba-1.5b", "h2o-danube-3-4b"}
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; choose from {list(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[name]}")
+    return mod.CONFIG
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) assignment cells; skips carry a reason."""
+    out = []
+    for arch in ARCHS:
+        for sname, shape in SHAPES.items():
+            skip = None
+            if sname == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+                skip = ("full-attention arch: 524k-context decode cache / "
+                        "quadratic prefill out of serving budget "
+                        "(DESIGN.md §6)")
+            if skip is None or include_skipped:
+                out.append((arch, sname, skip))
+    return out
+
+
+# ----------------------------------------------------------- reduced configs
+def reduced_config(cfg: ModelConfig) -> ModelConfig:
+    """Family-preserving smoke config: tiny widths, same structure."""
+    kw: dict = dict(
+        name=cfg.name + "-smoke", num_layers=2, d_model=64,
+        vocab_size=128, remat=False,
+    )
+    if cfg.attention_kind in ("gqa", "parallel_ssm"):
+        kw.update(num_heads=4, num_kv_heads=max(1, min(cfg.num_kv_heads, 2)),
+                  head_dim=16)
+    if cfg.attention_kind == "mla":
+        kw.update(num_heads=4, num_kv_heads=4, head_dim=24, q_lora_rank=32,
+                  kv_lora_rank=16, qk_rope_dim=8, qk_nope_dim=16,
+                  v_head_dim=16)
+    if cfg.d_ff:
+        kw.update(d_ff=128)
+    if cfg.family == "moe":
+        kw.update(num_experts=8, experts_per_token=2, moe_d_ff=64)
+    if cfg.ssm_heads:
+        kw.update(ssm_heads=4, ssm_head_dim=16, ssm_state=8, ssm_chunk=16)
+    if cfg.window is not None:
+        kw.update(window=32)
+    return dataclasses.replace(cfg, **kw)
+
+
+# ------------------------------------------------------------- input specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig | str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the step the
+    shape exercises (train_step / prefill / decode serve_step)."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    b, s = shape.global_batch, shape.seq_len
+    stub = cfg.modality != "text"
+    if shape.kind == "train":
+        inputs = (_sds((b, s, cfg.d_model), cfg.cdtype) if stub
+                  else _sds((b, s), jnp.int32))
+        return {"inputs": inputs, "labels": _sds((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        inputs = (_sds((b, s, cfg.d_model), cfg.cdtype) if stub
+                  else _sds((b, s), jnp.int32))
+        return {"inputs": inputs}
+    # decode: one new token against a seq_len-deep cache
+    tokens = (_sds((b, 1, cfg.d_model), cfg.cdtype) if stub
+              else _sds((b, 1), jnp.int32))
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, b, shape.seq_len))
+    return {"tokens": tokens, "cache": cache}
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocation (dry-run input)."""
+    return jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.key(0)))
+
+
+def build(cfg: ModelConfig, seed: int = 0):
+    """Real parameter init (smoke tests / examples)."""
+    return transformer.init_params(cfg, jax.random.key(seed))
+
+
+# ------------------------------------------------- load-time pack (lever 2)
+# 2-D projection weights that route through core.panel_gemm when packed.
+_PACKABLE = {
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "w_dq", "w_uq",
+    "w_dkv", "w_kr", "in_proj", "out_proj", "lm_head",
+}
+# Deliberately unpacked: embed (gather), router (small, fp32), MoE expert
+# banks (3-D batched einsum — packed per-expert form is a §Perf item),
+# MLA absorbed factors w_uk/w_uv (consumed reshaped to (r, H, d) inside the
+# einsum, not through `linear`), conv/norm vectors.
+
+
+def pack_for_inference(cfg: ModelConfig, params, *, block_n=None,
+                       block_k=None, shardings=None) -> dict:
+    """Pack every projection weight once at model load (paper §3.2).
+
+    Stacked per-layer weights (L, K, N) pack along their last two dims;
+    lax.scan slices the leading dim, so inside the scan body each
+    PackedWeight carries the 2-D panels the kernel consumes.  ``shardings``
+    (a matching pytree) re-places each packed array so no resharding
+    appears per call.
+    """
+    kw = {}
+    if block_n is not None:
+        kw["block_n"] = block_n
+    if block_k is not None:
+        kw["block_k"] = block_k
+
+    def walk(path, node, shard_node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v,
+                            (shard_node or {}).get(k) if isinstance(
+                                shard_node, dict) else None)
+                    for k, v in node.items()}
+        name = path[-1]
+        if name not in _PACKABLE or node.ndim < 2:
+            return node
+        if name == "wo" and "moe" in path:
+            return node                         # MoE expert bank, not attn
+        if isinstance(shard_node, packing.PackedWeight):
+            shard_node = shard_node.data        # sharding computed on the
+        if node.ndim == 3:                          # stacked (L, K, N)
+            _, k, n = node.shape
+            bk = packing.fit_block(
+                k, kw.get("block_k", packing._kernel.DEFAULT_BLOCK_K))
+            bn = packing.fit_block(
+                n, kw.get("block_n", packing._kernel.DEFAULT_BLOCK_N))
+            data = jnp.pad(node, ((0, 0), (0, (-k) % bk), (0, (-n) % bn)))
+            if shard_node is not None:
+                data = jax.device_put(data, shard_node)
+            return packing.PackedWeight(data=data, n=n, k=k, block_n=bn,
+                                        block_k=bk)
+        pw = packing.pack(node, **kw)
+        if shard_node is not None:
+            pw = dataclasses.replace(
+                pw, data=jax.device_put(pw.data, shard_node))
+        return pw
+
+    return walk((), params, shardings)

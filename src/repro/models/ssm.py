@@ -1,0 +1,198 @@
+"""Mamba-2 (SSD — state-space duality) in pure JAX.
+
+Chunked SSD algorithm (Dao & Gu 2024, §6): intra-chunk quadratic blocks +
+inter-chunk linear state recurrence via lax.scan, so prefill HLO stays
+O(chunk) and decode is an O(1)-state step — this is what makes the
+long_500k cells runnable for the SSM/hybrid archs where full attention is
+skipped (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def _segsum(a):
+    """a: [..., l] -> [..., l, l]; out[i,j] = sum_{k=j+1..i} a[k] (i>=j)."""
+    cs = jnp.cumsum(a, -1)
+    s = cs[..., :, None] - cs[..., None, :]
+    l = a.shape[-1]
+    return jnp.where(jnp.tril(jnp.ones((l, l), bool)), s, -jnp.inf)
+
+
+def ssd_chunked(x, a, b, c, *, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x: [B, T, H, P] (pre-multiplied by dt)      a: [B, T, H] (= A*dt, <0)
+    b, c: [B, T, G, N] (groups broadcast to H)
+    Returns y: [B, T, H, P], final_state: [B, H, P, N].
+    """
+    bsz, t, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        # decay-neutral padding: a=0 (no state decay), x=0 (no input), so
+        # the final state equals the unpadded stream's; padded y rows are
+        # sliced off below.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    t_real, t = t, t + pad
+    nc = t // chunk
+    rep = h // g
+
+    def to_chunks(m):
+        return m.reshape(bsz, nc, chunk, *m.shape[2:]).swapaxes(0, 1)
+
+    xc = to_chunks(x.astype(jnp.float32))                  # [nc,B,l,H,P]
+    ac = to_chunks(a.astype(jnp.float32)).transpose(0, 1, 3, 2)  # [nc,B,H,l]
+    bc = to_chunks(jnp.repeat(b, rep, axis=2).astype(jnp.float32))
+    cc = to_chunks(jnp.repeat(c, rep, axis=2).astype(jnp.float32))
+
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    # §Perf iteration B2: without the checkpoint, reverse-mode through
+    # this scan stacks every chunk's [B,H,l,l] decay/score intermediates
+    # (hymba train_4k: 44 s memory term).  Rematerializing the chunk body
+    # keeps only (state, chunk inputs) as residuals and recomputes the
+    # quadratic blocks in the backward — the SSD analogue of the flash
+    # attention VJP (models/flash_vjp.py).
+    @jax.checkpoint
+    def step(state, xs):
+        x_c, a_c, b_c, c_c = xs                 # [B,l,H,P],[B,H,l],...
+        a_cum = jnp.cumsum(a_c, axis=-1)        # [B,H,l]
+        lmat = jnp.exp(_segsum(a_c))            # [B,H,l,l]
+        cb = jnp.einsum("blhn,bshn->bhls", c_c, b_c,
+                        preferred_element_type=jnp.float32)
+        y_diag = jnp.einsum("bhls,bhls,bshp->blhp", cb, lmat, x_c,
+                            preferred_element_type=jnp.float32)
+        # contribution of the state entering this chunk
+        y_off = jnp.einsum("blhn,bhpn,bhl->blhp", c_c, state,
+                           jnp.exp(a_cum),
+                           preferred_element_type=jnp.float32)
+        # state update: decayed carry + this chunk's contribution
+        decay_states = jnp.exp(a_cum[..., -1:] - a_cum)    # [B,H,l]
+        chunk_state = jnp.einsum("bshn,bhs,bshp->bhpn", b_c, decay_states,
+                                 x_c, preferred_element_type=jnp.float32)
+        new_state = state * jnp.exp(a_cum[..., -1])[..., None, None] \
+            + chunk_state
+        return new_state, y_diag + y_off
+
+    # named_scope: lets the roofline walker bucket the intra-chunk
+    # quadratic blocks this jnp path materializes — the deployed TPU path
+    # is the Pallas kernel (kernels/ssd.py, VMEM-resident), so
+    # launch/dryrun.py reports a kernel-adjusted memory term too.
+    with jax.named_scope("ssd_chunk"):
+        final, ys = jax.lax.scan(step, initial_state, (xc, ac, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(bsz, t, h, p)[:, :t_real]
+    return y.astype(x.dtype), final
+
+
+def ssd_step(state, x_t, a_t, b_t, c_t):
+    """Single decode step.  state: [B,H,P,N]; x_t: [B,H,P] (dt-premult);
+    a_t: [B,H]; b_t, c_t: [B,G,N] -> broadcast to H."""
+    h = x_t.shape[1]
+    g = b_t.shape[1]
+    b_t = jnp.repeat(b_t, h // g, axis=1)
+    c_t = jnp.repeat(c_t, h // g, axis=1)
+    state = state * jnp.exp(a_t)[..., None, None] \
+        + x_t[..., None] * b_t[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, c_t,
+                   preferred_element_type=jnp.float32)
+    return state, y
+
+
+# ------------------------------------------------------------- mamba2 layer
+def mamba_params(key, cfg, dtype):
+    d = cfg.d_model
+    h, p, n, g = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                  cfg.ssm_groups)
+    d_in = h * p
+    conv_dim = d_in + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": L.init_dense(
+            ks[0], (d, 2 * d_in + 2 * g * n + h), dtype=dtype),
+        "conv_w": L.init_dense(ks[1], (cfg.conv_width, conv_dim),
+                               scale=cfg.conv_width ** -0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": L.init_dense(ks[2], (d_in, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, history=None):
+    """Depthwise causal conv along time.  x: [B,T,C]; w: [W,C].
+    history: [B, W-1, C] prior context (decode) or None (zero left-pad)."""
+    width = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None]
+              for i in range(width))
+    return out + b[None, None], xp[:, -(width - 1):, :]
+
+
+def mamba_forward(p, cfg, x, *, cache=None, mode: str = "train"):
+    """Mamba-2 mixer.  Returns (out, new_cache).  cache:
+    {"state": [B,H,P,N] fp32, "conv": [B,W-1,conv_dim]}."""
+    bsz, t, _ = x.shape
+    h, pd, n, g = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                   cfg.ssm_groups)
+    d_in = h * pd
+    proj = L.linear(x, p["in_proj"])
+    z, xbc_dt = proj[..., :d_in], proj[..., d_in:]
+    xbc, dt_raw = xbc_dt[..., :d_in + 2 * g * n], xbc_dt[..., d_in + 2 * g * n:]
+
+    conv_hist = cache["conv"] if cache is not None else None
+    if mode == "decode":
+        xbc_conv, new_hist = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                          history=conv_hist)
+    else:
+        xbc_conv, new_hist = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc_conv = jax.nn.silu(xbc_conv)
+
+    xs = xbc_conv[..., :d_in].reshape(bsz, t, h, pd)
+    b_ssm = xbc_conv[..., d_in:d_in + g * n].reshape(bsz, t, g, n)
+    c_ssm = xbc_conv[..., d_in + g * n:].reshape(bsz, t, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])          # [B,T,H]
+    a = -jnp.exp(p["a_log"])[None, None] * dt                 # [B,T,H] (<0)
+    x_dt = xs.astype(jnp.float32) * dt[..., None]
+
+    if mode == "decode":
+        assert t == 1
+        state, y = ssd_step(cache["state"], x_dt[:, 0], a[:, 0],
+                            b_ssm[:, 0].astype(jnp.float32),
+                            c_ssm[:, 0].astype(jnp.float32))
+        y = y[:, None]                                        # [B,1,H,P]
+        new_cache = {"state": state, "conv": new_hist}
+    else:
+        init = cache["state"] if cache is not None else None
+        y, state = ssd_chunked(x_dt, a, b_ssm, c_ssm, chunk=cfg.ssm_chunk,
+                               initial_state=init)
+        new_cache = ({"state": state, "conv": new_hist}
+                     if mode == "prefill" else None)
+
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, t, d_in).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return L.linear(y, p["out_proj"]), new_cache
+
+
+def empty_cache(cfg, batch, dtype=jnp.bfloat16):
+    h, pd, n, g = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                   cfg.ssm_groups)
+    conv_dim = h * pd + 2 * g * n
+    return {
+        "state": jnp.zeros((batch, h, pd, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+    }

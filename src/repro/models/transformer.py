@@ -1,0 +1,292 @@
+"""Decoder stack: one scan-over-layers body serving all four families
+(dense / moe / ssm / hybrid) and all three phases (train / prefill /
+decode).
+
+Layer heterogeneity (gemma2's local/global alternation) is expressed as
+*data*, not structure: a per-layer int32 window array rides the scan as xs
+(-1 = full attention), so the stacked-parameter scan body stays uniform and
+the HLO stays O(1) in depth — required to keep 61-layer MoE dry-run
+compiles tractable on the CPU host.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+
+# ----------------------------------------------------------------- params
+def _init_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 8)
+    p = {"ln1": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.attention_kind == "gqa":
+        p["attn"] = A.gqa_params(ks[0], cfg, dtype)
+    elif cfg.attention_kind == "mla":
+        p["attn"] = A.mla_params(ks[0], cfg, dtype)
+    elif cfg.attention_kind == "parallel_ssm":
+        p["attn"] = A.gqa_params(ks[0], cfg, dtype)
+        p["mamba"] = S.mamba_params(ks[1], cfg, dtype)
+        p["ln_attn_out"] = jnp.ones((cfg.d_model,), dtype)
+        p["ln_ssm_out"] = jnp.ones((cfg.d_model,), dtype)
+    elif cfg.attention_kind == "none":
+        p["mamba"] = S.mamba_params(ks[1], cfg, dtype)
+    if cfg.post_norms:
+        p["ln1_post"] = jnp.ones((cfg.d_model,), dtype)
+        p["ln2_post"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.family == "moe":
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        p["moe"] = M.moe_params(ks[2], cfg, dtype)
+    elif cfg.d_ff:
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        p["ffn"] = {
+            "w_gate": L.init_dense(ks[3], (cfg.d_model, cfg.d_ff),
+                                   dtype=dtype),
+            "w_up": L.init_dense(ks[4], (cfg.d_model, cfg.d_ff),
+                                 dtype=dtype),
+            "w_down": L.init_dense(ks[5], (cfg.d_ff, cfg.d_model),
+                                   dtype=dtype),
+        }
+    return p
+
+
+def init_params(cfg, key):
+    ks = jax.random.split(key, 4)
+    dtype = cfg.pdtype
+    params = {}
+    if cfg.modality == "text":
+        params["embed"] = L.init_dense(ks[0], (cfg.vocab_size, cfg.d_model),
+                                       scale=1.0, dtype=dtype)
+    layer_keys = jax.random.split(ks[1], cfg.num_layers)
+    params["layers"] = jax.vmap(
+        lambda k: _init_layer(k, cfg, dtype))(layer_keys)
+    params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not (cfg.tie_embeddings and cfg.modality == "text"):
+        params["lm_head"] = L.init_dense(ks[2], (cfg.d_model, cfg.vocab_size),
+                                         dtype=dtype)
+    return params
+
+
+def window_pattern(cfg) -> np.ndarray:
+    """Per-layer attention window (int32; -1 = full attention)."""
+    lyr = cfg.num_layers
+    if cfg.local_global_period > 0:
+        w = np.full((lyr,), -1, np.int32)
+        for i in range(lyr):
+            if i % cfg.local_global_period != cfg.local_global_period - 1:
+                w[i] = cfg.window
+        return w
+    if cfg.window is not None:
+        return np.full((lyr,), cfg.window, np.int32)
+    return np.full((lyr,), -1, np.int32)
+
+
+# ------------------------------------------------------------------ cache
+def init_cache(cfg, batch: int, max_len: int):
+    """Pre-allocated decode cache (stacked over layers for the scan)."""
+    lyr, dtype = cfg.num_layers, jnp.dtype(cfg.cache_dtype)
+    c = {}
+    if cfg.attention_kind in ("gqa", "parallel_ssm"):
+        t = (min(cfg.window, max_len) if cfg.resolved_cache_kind == "window"
+             else max_len)
+        c["k"] = jnp.zeros((lyr, batch, t, cfg.num_kv_heads, cfg.head_dim),
+                           dtype)
+        c["v"] = jnp.zeros_like(c["k"])
+        if cfg.resolved_cache_kind == "window":
+            c["pos"] = jnp.full((lyr, batch, t), -1, jnp.int32)
+    if cfg.attention_kind == "mla":
+        c["ckv"] = jnp.zeros((lyr, batch, max_len, cfg.kv_lora_rank), dtype)
+        c["krope"] = jnp.zeros((lyr, batch, max_len, cfg.qk_rope_dim), dtype)
+    if cfg.attention_kind in ("none", "parallel_ssm"):
+        conv_dim = (cfg.ssm_heads * cfg.ssm_head_dim
+                    + 2 * cfg.ssm_groups * cfg.ssm_state)
+        c["state"] = jnp.zeros(
+            (lyr, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32)
+        c["conv"] = jnp.zeros((lyr, batch, cfg.conv_width - 1, conv_dim),
+                              dtype)
+    return {"layers": c, "index": jnp.zeros((), jnp.int32)}
+
+
+# ------------------------------------------------------------------ layers
+def _layer_forward(cfg, lp, x, *, window_l, positions, cache_l, cache_index,
+                   mode, shard_fn=None):
+    """One decoder layer.  Returns (x, new_cache_l, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps, cfg.norm_plus_one)
+
+    attn_cache = None
+    if cache_l is not None and "k" in cache_l:
+        attn_cache = {k: cache_l[k] for k in ("k", "v", "pos")
+                      if k in cache_l}
+    if cache_l is not None and "ckv" in cache_l:
+        attn_cache = {"ckv": cache_l["ckv"], "krope": cache_l["krope"]}
+    ssm_cache = None
+    if cache_l is not None and "state" in cache_l:
+        ssm_cache = {"state": cache_l["state"], "conv": cache_l["conv"]}
+
+    if cfg.attention_kind == "gqa":
+        out, nc = A.gqa_attention(lp["attn"], cfg, h, positions=positions,
+                                  window=window_l, cache=attn_cache,
+                                  cache_index=cache_index)
+        if nc:
+            new_cache.update(nc)
+    elif cfg.attention_kind == "mla":
+        out, nc = A.mla_attention(lp["attn"], cfg, h, positions=positions,
+                                  cache=attn_cache, cache_index=cache_index)
+        if nc:
+            new_cache.update(nc)
+    elif cfg.attention_kind == "parallel_ssm":
+        a_out, nca = A.gqa_attention(lp["attn"], cfg, h, positions=positions,
+                                     window=window_l, cache=attn_cache,
+                                     cache_index=cache_index)
+        s_out, ncs = S.mamba_forward(lp["mamba"], cfg, h, cache=ssm_cache,
+                                     mode=mode)
+        out = 0.5 * (L.rms_norm(a_out, lp["ln_attn_out"], cfg.norm_eps)
+                     + L.rms_norm(s_out, lp["ln_ssm_out"], cfg.norm_eps))
+        if nca:
+            new_cache.update(nca)
+        if ncs:
+            new_cache.update(ncs)
+    else:                                      # "none": pure SSM mixer
+        out, ncs = S.mamba_forward(lp["mamba"], cfg, h, cache=ssm_cache,
+                                   mode=mode)
+        if ncs:
+            new_cache.update(ncs)
+
+    if cfg.post_norms:
+        out = L.rms_norm(out, lp["ln1_post"], cfg.norm_eps,
+                         cfg.norm_plus_one)
+    x = x + out
+
+    if cfg.family == "moe":
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps, cfg.norm_plus_one)
+        out2, aux = M.moe_ffn(lp["moe"], cfg, h2,
+                              capacity_factor=cfg.capacity_factor,
+                              shard_fn=shard_fn)
+        if cfg.post_norms:
+            out2 = L.rms_norm(out2, lp["ln2_post"], cfg.norm_eps,
+                              cfg.norm_plus_one)
+        x = x + out2
+    elif cfg.d_ff:
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps, cfg.norm_plus_one)
+        out2 = L.swiglu(h2, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                        lp["ffn"]["w_down"], cfg.act)
+        if cfg.post_norms:
+            out2 = L.rms_norm(out2, lp["ln2_post"], cfg.norm_eps,
+                              cfg.norm_plus_one)
+        x = x + out2
+
+    return x, (new_cache or None), aux
+
+
+# ----------------------------------------------------------------- forward
+def forward(cfg, params, inputs, *, cache=None, mode: str = "train",
+            logits_mode: str = "all", shard_fn=None):
+    """Run the stack.
+
+    inputs: int tokens [B, S] (text) or embeddings [B, S, d] (stub
+    frontends).  mode: train | prefill | decode.  Returns
+    (logits, new_cache, aux_loss).  shard_fn: optional activation
+    sharding-constraint hook (parallel/sharding.activation_sharder).
+    """
+    assert mode in ("train", "prefill", "decode")
+    shard = shard_fn or (lambda x, *names: x)
+    if cfg.modality == "text":
+        x = L.embed_tokens(params["embed"], inputs).astype(cfg.cdtype)
+    else:
+        x = inputs.astype(cfg.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype)
+    x = shard(x, "batch", "seq", "d_model")
+
+    cache_index = cache["index"] if cache is not None else 0
+    s = x.shape[1]
+    positions = (jnp.arange(s) if mode != "decode"
+                 else cache_index + jnp.arange(s))
+    w_arr = jnp.asarray(window_pattern(cfg))
+
+    cache_layers = cache["layers"] if cache is not None else None
+    has_cache = cache_layers is not None
+
+    # Cache rides the scan CARRY and is updated in place per layer
+    # (dynamic_update_index on the stacked buffers).  The xs/ys
+    # alternative stacks a fresh copy of the whole cache every layer —
+    # XLA materializes the ys buffer per iteration (+2 × cache bytes of
+    # HBM traffic per layer, the dominant decode term; §Perf C3).
+    def body(carry, xs):
+        x, aux, cl = carry
+        lp, w_l, li = xs
+        c_l = (None if cl is None else
+               jax.tree.map(lambda buf: jax.lax.dynamic_index_in_dim(
+                   buf, li, 0, keepdims=False), cl))
+        x, new_c, a = _layer_forward(
+            cfg, lp, x, window_l=w_l, positions=positions, cache_l=c_l,
+            cache_index=cache_index, mode=mode, shard_fn=shard)
+        if new_c is not None:
+            cl = jax.tree.map(
+                lambda buf, new: jax.lax.dynamic_update_index_in_dim(
+                    buf, new.astype(buf.dtype), li, 0), cl, new_c)
+        x = shard(x, "batch", "seq", "d_model")
+        return (x, aux + a, cl), None
+
+    if mode == "train" and cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = (params["layers"], w_arr, jnp.arange(cfg.num_layers))
+    (x, aux, new_cache_layers), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32), cache_layers), xs)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norm_plus_one)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    head = (params["embed"].T if (cfg.tie_embeddings
+                                  and cfg.modality == "text")
+            else params["lm_head"])
+    logits = None
+    if logits_mode != "none":
+        logits = L.linear(x, head)
+        logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        logits = shard(logits, "batch", "seq", "vocab")
+
+    new_cache = None
+    if has_cache:
+        new_cache = {"layers": new_cache_layers,
+                     "index": cache_index + s}
+    return logits, new_cache, aux / cfg.num_layers
+
+
+def loss_fn(cfg, params, batch, *, shard_fn=None, aux_weight: float = 0.01):
+    """Mean next-token CE (+ MoE load-balance aux)."""
+    logits, _, aux = forward(cfg, params, batch["inputs"], mode="train",
+                             logits_mode="all", shard_fn=shard_fn)
+    ce = L.cross_entropy(logits, batch["labels"])
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def prefill(cfg, params, inputs, *, max_len: int, shard_fn=None):
+    """Batched prefill: build the cache, return last-token logits."""
+    b = inputs.shape[0]
+    cache = init_cache(cfg, b, max_len)
+    logits, cache, _ = forward(cfg, params, inputs, cache=cache,
+                               mode="prefill", logits_mode="last",
+                               shard_fn=shard_fn)
+    return logits[:, 0], cache
+
+
+def decode_step(cfg, params, cache, tokens, *, shard_fn=None):
+    """One decode step.  tokens: [B, 1] ids or [B, 1, d] embeds."""
+    logits, cache, _ = forward(cfg, params, tokens, cache=cache,
+                               mode="decode", logits_mode="last",
+                               shard_fn=shard_fn)
+    return logits[:, 0], cache

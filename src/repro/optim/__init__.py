@@ -1,0 +1,17 @@
+"""Optimizers (self-contained, optax-like): AdamW + Adafactor + schedules.
+
+Optimizer state inherits the parameter sharding (FSDP: state shards over
+the data axis with its param — jit propagates the placement), which is
+what keeps deepseek-v3-671b's update step inside 16 GB/chip.  Adafactor
+(factored second moment, no momentum) is selected for the two largest
+archs (deepseek-v3-671b, internvl2-76b) per DESIGN.md §4.
+"""
+from repro.optim.optimizers import (
+    Optimizer, adafactor, adamw, clip_by_global_norm, global_norm, make,
+    warmup_cosine,
+)
+
+__all__ = [
+    "Optimizer", "adafactor", "adamw", "clip_by_global_norm", "global_norm",
+    "make", "warmup_cosine",
+]

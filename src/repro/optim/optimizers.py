@@ -1,0 +1,148 @@
+"""AdamW / Adafactor, global-norm clipping, LR schedules.
+
+Interface: ``opt = adamw(...)``; ``state = opt.init(params)``;
+``new_params, new_state, stats = opt.update(grads, state, params, step)``.
+Everything is a pytree transform — jit/scan/shard friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- schedule
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1) -> Callable:
+    """Linear warmup → cosine decay to ``floor * peak_lr``."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+# --------------------------------------------------------------------- util
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable        # params -> opt_state
+    update: Callable      # (grads, state, params, step) -> (params, state, stats)
+
+
+# -------------------------------------------------------------------- adamw
+def adamw(lr_fn: Callable, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr = lr_fn(step)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        gl, treedef = jax.tree_util.tree_flatten(grads)
+        pl = treedef.flatten_up_to(params)
+        ml = treedef.flatten_up_to(state["mu"])
+        vl = treedef.flatten_up_to(state["nu"])
+        new_p, new_m, new_v = [], [], []
+        for g, m, v, p in zip(gl, ml, vl, pl):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            # decoupled weight decay on matrices; vectors (norms) spared
+            wd = weight_decay if p.ndim >= 2 else 0.0
+            p32 = p.astype(jnp.float32)
+            new_p.append((p32 - lr * (u + wd * p32)).astype(p.dtype))
+            new_m.append(m)
+            new_v.append(v)
+        unf = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+        return (unf(new_p), {"mu": unf(new_m), "nu": unf(new_v)},
+                {"grad_norm": gnorm, "lr": lr})
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------- adafactor
+def adafactor(lr_fn: Callable, *, eps: float = 1e-30, clip_thresh: float = 1.0,
+              decay_pow: float = 0.8, grad_clip: float = 1.0) -> Optimizer:
+    """Factored second-moment Adafactor (no momentum).
+
+    Arrays with ndim >= 2 keep row/col factored statistics over their last
+    two dims (stacked layer params (L, K, N) factor per layer slice);
+    vectors fall back to full second moment.
+    """
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(st, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay_pow)
+        lr = lr_fn(step)
+
+        gl, treedef = jax.tree_util.tree_flatten(grads)
+        pl = treedef.flatten_up_to(params)
+        sl = treedef.flatten_up_to(state["f"])
+        new_p, new_s = [], []
+        for g, s, p in zip(gl, sl, pl):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)
+                vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                vhat, ns = v, {"v": v}
+            u = g * jax.lax.rsqrt(vhat + eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_thresh)
+            new_p.append((p.astype(jnp.float32) - lr * u).astype(p.dtype))
+            new_s.append(ns)
+        return (jax.tree_util.tree_unflatten(treedef, new_p),
+                {"f": jax.tree_util.tree_unflatten(treedef, new_s)},
+                {"grad_norm": gnorm, "lr": lr})
+
+    return Optimizer(init, update)
+
+
+def make(optimizer: str, lr_fn: Callable, *, weight_decay: float = 0.01,
+         grad_clip: float = 1.0) -> Optimizer:
+    if optimizer == "adamw":
+        return adamw(lr_fn, weight_decay=weight_decay, grad_clip=grad_clip)
+    if optimizer == "adafactor":
+        return adafactor(lr_fn, grad_clip=grad_clip)
+    raise ValueError(f"unknown optimizer {optimizer!r}")

@@ -1,0 +1,12 @@
+"""Distribution: sharding rules, overlapped collectives, pipeline stages."""
+from repro.parallel import collectives, sharding
+from repro.parallel.sharding import (
+    activation_sharder, batch_spec, cache_shardings, cache_specs, fit_spec,
+    param_shardings, param_specs,
+)
+
+__all__ = [
+    "collectives", "sharding", "activation_sharder", "batch_spec",
+    "cache_shardings", "cache_specs", "fit_spec", "param_shardings",
+    "param_specs",
+]

@@ -1,0 +1,360 @@
+"""Loop-aware cost model over compiled (post-GSPMD) HLO text.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts each while-loop
+body ONCE, but this framework's step functions are scan-shaped everywhere
+(scan over layers × scan over grad-accum microbatches), so the built-in
+numbers under-count FLOPs/bytes/collectives by the product of trip counts
+(measured ~161× on deepseek-7b train_4k).  This walker parses the HLO
+text, recovers each loop's trip count from its condition computation, and
+propagates costs through the call graph:
+
+  cost(computation) = Σ own ops + Σ_{while w} trip(w) · cost(body(w))
+                      + Σ_{fusion/call f} cost(called(f))
+                      + Σ_{conditional c} max over branches
+
+Per-op model (per device — the module is the partitioned program):
+  flops   : dot/convolution only — 2 · |result| · Π contract dims.
+            Elementwise flops are ignored (MXU work is what the compute
+            roofline prices; VPU work is covered by the memory term).
+  bytes   : HBM traffic ≈ writes + reads of top-level op results.
+            Fusion internals are invisible (their temporaries live in
+            registers/VMEM — the right model for HBM).  View/metadata ops
+            (bitcast, get-tuple-element, tuple, parameter, constant,
+            reshape) are free; dynamic-update-slice counts the update
+            operand, not the aliased buffer.
+  coll    : wire bytes per collective (ring model, see analysis.py),
+            scaled by the enclosing loops' trip counts.
+
+Scope: a static cost model, not a simulator — no overlap, no cache reuse
+beyond fusion boundaries.  Validated against analytic 6·N·D in
+tests/test_roofline.py (agrees within the remat factor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.roofline.analysis import (
+    DTYPE_BYTES, _shape_bytes, _wire_bytes,
+)
+
+# computation headers start at column 0: "%name (params...) -> type {"
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(")
+# result shape: tuple "(f32[..], /*index=5*/ bf16[..], ..)" (no nested
+# parens, may contain comments) or a plain array type.
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<shape>\([^()]*\)|[\w\[\],{}]+)\s+"
+    r"(?P<op>[\w\-]+)\((?P<operands>.*?)\)(?P<attrs>.*)$")
+_DIMS_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_FREE_OPS = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "reshape", "after-all", "add-dependency", "partition-id", "replica-id",
+    "iota",
+}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start",
+                "all-reduce-start", "collective-permute-start",
+                "ragged-all-to-all"}
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    op: str
+    shape: str
+    operands: list[str]
+    attrs: str
+    result_bytes: int = 0
+    flops: float = 0.0
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op] = dataclasses.field(default_factory=list)
+    symbols: dict = dataclasses.field(default_factory=dict)  # name -> dims
+    consts: list[int] = dataclasses.field(default_factory=list)  # s32[] vals
+
+
+def _first_dims(shape_str: str):
+    m = _DIMS_RE.search(shape_str)
+    if not m:
+        return None, None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def parse_module(text: str) -> tuple[dict, str]:
+    """Parse HLO text into {name: Computation}; returns (comps, entry)."""
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)      # column-0 headers only
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(2))
+                if m.group(1):
+                    entry = m.group(2)
+                comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        operands = [o.strip().lstrip("%")
+                    for o in _split_operands(m.group("operands"))]
+        op = Op(m.group("name"), m.group("op"), m.group("shape"),
+                operands, m.group("attrs"))
+        op.result_bytes = _shape_bytes(op.shape)
+        cur.ops.append(op)
+        _, dims = _first_dims(op.shape)
+        cur.symbols[op.name] = (dims, op.result_bytes)
+        if op.op == "constant" and op.shape.strip().startswith("s32[]"):
+            mv = re.match(r"\s*(-?\d+)", m.group("operands"))
+            if mv:
+                cur.consts.append(int(mv.group(1)))
+    return comps, entry
+
+
+def _split_operands(s: str) -> list[str]:
+    """Split top-level comma-separated operand names (shapes may nest)."""
+    out, depth, buf = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            tok = "".join(buf).strip()
+            if tok.startswith("%"):
+                out.append(tok)
+            buf = []
+        else:
+            buf.append(ch)
+    tok = "".join(buf).strip()
+    if tok.startswith("%"):
+        out.append(tok)
+    return out
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    _, rdims = _first_dims(op.shape)
+    if rdims is None:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    lhs = comp.symbols.get(op.operands[0], (None, 0))[0] if op.operands \
+        else None
+    contract = 1
+    if m and lhs:
+        for idx in m.group(1).split(","):
+            if idx:
+                contract *= lhs[int(idx)]
+    elif lhs:
+        contract = lhs[-1]
+    import math
+    return 2.0 * math.prod(rdims) * contract
+
+
+def _fused_dus_update_bytes(called: Computation | None) -> int | None:
+    """If a fused computation's root is a dynamic-update-slice — or a
+    tuple whose elements are all DUS — return the summed UPDATE operand
+    bytes (the aliased big buffers are not HBM traffic).  None = not a
+    DUS fusion."""
+    if called is None or not called.ops:
+        return None
+    root = called.ops[-1]
+    by_name = {op.name: op for op in called.ops}
+    if root.op == "tuple":
+        elems = [by_name.get(o) for o in root.operands]
+        if not elems or any(e is None or e.op != "dynamic-update-slice"
+                            for e in elems):
+            return None
+    elif root.op == "dynamic-update-slice":
+        elems = [root]
+    else:
+        return None
+    total = 0
+    for e in elems:
+        upd = e.operands[1] if len(e.operands) > 1 else None
+        total += called.symbols.get(upd, (None, e.result_bytes))[1]
+    return total
+
+
+def _collective_wire(op: Op, default_group: int) -> float:
+    kind = op.op.replace("-start", "")
+    s = default_group
+    m = _GROUPS_IOTA_RE.search(op.attrs)
+    if m:
+        s = int(m.group(2))
+    else:
+        m = _GROUPS_LIST_RE.search(op.attrs)
+        if m:
+            s = len([x for x in m.group(1).split(",") if x.strip()])
+    return _wire_bytes(kind, op.result_bytes, s)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    coll_wire_dcn: float = 0.0
+    hbm_by_tag: dict = dataclasses.field(default_factory=dict)
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.hbm_bytes * k,
+                    self.coll_wire_bytes * k,
+                    {n: v * k for n, v in self.coll_by_kind.items()},
+                    self.coll_wire_dcn * k,
+                    {n: v * k for n, v in self.hbm_by_tag.items()})
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.coll_wire_bytes += o.coll_wire_bytes
+        for n, v in o.coll_by_kind.items():
+            self.coll_by_kind[n] = self.coll_by_kind.get(n, 0.0) + v
+        self.coll_wire_dcn += o.coll_wire_dcn
+        for n, v in o.hbm_by_tag.items():
+            self.hbm_by_tag[n] = self.hbm_by_tag.get(n, 0.0) + v
+        return self
+
+
+class HloCostModel:
+    def __init__(self, text: str, *, total_devices: int,
+                 dcn_group_size: int | None = None,
+                 tags: dict[str, str] | None = None):
+        """``tags``: {name: regex} matched against each op's metadata
+        op_name; matching ops' HBM bytes are also bucketed per tag
+        (named_scope regions — e.g. attention intermediates)."""
+        self.comps, self.entry = parse_module(text)
+        self.total = total_devices
+        self.dcn_group = dcn_group_size
+        self.tags = {k: re.compile(v) for k, v in (tags or {}).items()}
+        self._trip_cache: dict[str, int] = {}
+        self._cost_cache: dict[str, Cost] = {}
+        self.loops: list[dict] = []
+
+    # ------------------------------------------------------------- trips
+    def trip_count(self, cond_name: str) -> int:
+        """Loop bound: the largest s32[] constant reachable from the
+        condition computation (scan conditions are `i < L` with i0 = 0)."""
+        if cond_name in self._trip_cache:
+            return self._trip_cache[cond_name]
+        consts: list[int] = []
+        stack, seen = [cond_name], set()
+        while stack:
+            name = stack.pop()
+            if name in seen or name not in self.comps:
+                continue
+            seen.add(name)
+            c = self.comps[name]
+            consts.extend(c.consts)
+            for op in c.ops:
+                mc = _CALLS_RE.search(op.attrs)
+                if mc:
+                    stack.append(mc.group(1))
+        t = max([c for c in consts if c > 0], default=1)
+        self._trip_cache[cond_name] = t
+        return t
+
+    # -------------------------------------------------------------- cost
+    def cost(self, comp_name: str | None = None, *,
+             charge_bytes: bool = True) -> Cost:
+        """Cost of one computation (recursive).
+
+        ``charge_bytes=False`` when entered through a fusion ``calls=``
+        edge: fusion internals live in registers/VMEM, so only their dot
+        FLOPs count; HBM traffic is the fusion op's operands/result at
+        the caller's level.
+        """
+        name = comp_name or self.entry
+        key = (name, charge_bytes)
+        if key in self._cost_cache:
+            return self._cost_cache[key]
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is None:
+            return total
+        reads: dict[str, int] = {}
+        for op in comp.ops:
+            for o in op.operands:
+                reads[o] = reads.get(o, 0) + 1
+        for op in comp.ops:
+            kind = op.op
+            if kind.endswith("-done"):
+                continue
+            if kind == "while":
+                # loop state is aliased; traffic accrues inside the body
+                body = _BODY_RE.search(op.attrs)
+                cond = _COND_RE.search(op.attrs)
+                trips = self.trip_count(cond.group(1)) if cond else 1
+                if body:
+                    total += self.cost(body.group(1)).scaled(trips)
+                    self.loops.append({"body": body.group(1),
+                                       "trips": trips, "in": name})
+                continue
+            if kind == "conditional":
+                mb = _BRANCH_RE.search(op.attrs)
+                if mb:
+                    branches = [b.strip().lstrip("%")
+                                for b in mb.group(1).split(",")]
+                    costs = [self.cost(b, charge_bytes=charge_bytes)
+                             for b in branches]
+                    if costs:
+                        total += max(costs, key=lambda c: c.flops
+                                     + c.hbm_bytes)
+                continue
+            mc = _CALLS_RE.search(op.attrs)
+            if mc and kind == "fusion":
+                total += self.cost(mc.group(1), charge_bytes=False)
+            elif mc and kind in ("call", "async-start"):
+                total += self.cost(mc.group(1), charge_bytes=charge_bytes)
+            if kind in ("dot", "convolution"):
+                total += Cost(flops=_dot_flops(op, comp))
+            if kind in _COLLECTIVES:
+                wire = _collective_wire(op, self.total)
+                c = Cost(coll_wire_bytes=wire)
+                base = kind.replace("-start", "")
+                c.coll_by_kind[base] = wire
+                if self.dcn_group is not None:
+                    m = _GROUPS_IOTA_RE.search(op.attrs)
+                    if m and int(m.group(2)) == self.dcn_group:
+                        c.coll_wire_dcn = wire
+                total += c
+            # HBM bytes: write result once + read per use
+            if kind not in _FREE_OPS and charge_bytes:
+                uses = reads.get(op.name, 0)
+                nbytes = op.result_bytes
+                if kind == "dynamic-update-slice":
+                    # result aliases the big buffer; traffic is the update
+                    upd = op.operands[1] if len(op.operands) > 1 else None
+                    nbytes = comp.symbols.get(upd, (None, nbytes))[1]
+                elif kind == "fusion" and mc:
+                    # scan accumulators: fusions whose root is a d-u-s (or
+                    # a tuple of them — e.g. k+v cache writeback) alias
+                    # their buffers; charge the updates, not the buffers
+                    called = self.comps.get(mc.group(1))
+                    dus_bytes = _fused_dus_update_bytes(called)
+                    if dus_bytes is not None:
+                        nbytes = dus_bytes
+                c = Cost(hbm_bytes=nbytes * (1 + uses))
+                for tag, pat in self.tags.items():
+                    if pat.search(op.attrs):
+                        c.hbm_by_tag[tag] = c.hbm_bytes
+                total += c
+        self._cost_cache[key] = total
+        return total

@@ -1,0 +1,7 @@
+"""Runtime: training loop, serving engine, fault tolerance."""
+from repro.runtime import fault_tolerance, serve_loop, train_loop
+from repro.runtime.train_loop import TrainState, make_train_step, train
+from repro.runtime.serve_loop import Engine
+
+__all__ = ["fault_tolerance", "serve_loop", "train_loop", "TrainState",
+           "make_train_step", "train", "Engine"]

@@ -1,0 +1,115 @@
+"""Fault tolerance: graceful shutdown, straggler watchdog, elastic resume.
+
+At 1000+ nodes the failure model is: (a) preemption signals (SIGTERM with
+a grace window), (b) silent stragglers (one slow host stalls every
+collective), (c) full job restarts onto a possibly different topology.
+The pieces here map one-to-one:
+
+  GracefulShutdown  — SIGTERM/SIGINT → flag; train loop checkpoints and
+                      exits inside the grace window.
+  StepWatchdog      — per-step wall-time EMA; a step > ``factor``× the EMA
+                      is a straggler event.  On a real cluster the
+                      escalation callback triggers host cordon + elastic
+                      restart; here it logs and counts (tested by
+                      injecting delays).
+  resume_or_init    — newest complete checkpoint wins; elastic because
+                      restore() reshards onto the *current* mesh's
+                      shardings (checkpoints store unsharded leaves and
+                      mesh-agnostic logical specs — parallel/sharding
+                      refits them to any divisible topology).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable
+
+import jax
+
+
+class GracefulShutdown:
+    """SIGTERM/SIGINT handler: sets ``requested``; second signal raises."""
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self.requested = False
+        self._prev = {}
+        self._signals = signals
+
+    def install(self):
+        for s in self._signals:
+            self._prev[s] = signal.signal(s, self._handler)
+        return self
+
+    def _handler(self, signum, frame):
+        if self.requested:                      # second signal: hard exit
+            raise KeyboardInterrupt
+        self.requested = True
+
+    def uninstall(self):
+        for s, prev in self._prev.items():
+            signal.signal(s, prev)
+        self._prev.clear()
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    dt: float
+    ema: float
+
+
+class StepWatchdog:
+    """EMA step-time monitor with straggler escalation.
+
+    ``factor``: a step slower than factor × EMA is flagged.  ``warmup``
+    steps are observed but never flagged (compile + cache warmup).
+    """
+
+    def __init__(self, *, factor: float = 3.0, decay: float = 0.9,
+                 warmup: int = 2,
+                 on_straggler: Callable[[StragglerEvent], None] | None = None):
+        self.factor = factor
+        self.decay = decay
+        self.warmup = warmup
+        self.on_straggler = on_straggler
+        self.ema: float | None = None
+        self.count = 0
+        self.events: list[StragglerEvent] = []
+
+    def record(self, dt: float) -> bool:
+        self.count += 1
+        is_straggler = False
+        if self.ema is not None and self.count > self.warmup \
+                and dt > self.factor * self.ema:
+            ev = StragglerEvent(self.count, dt, self.ema)
+            self.events.append(ev)
+            if self.on_straggler:
+                self.on_straggler(ev)
+            is_straggler = True
+            # don't poison the EMA with the straggler sample
+            return True
+        self.ema = dt if self.ema is None else (
+            self.decay * self.ema + (1 - self.decay) * dt)
+        return is_straggler
+
+
+def resume_or_init(mgr, init_fn: Callable, like, *, shardings=None):
+    """Restore the newest checkpoint or build fresh state.
+
+    Returns (state, start_step).  ``like``: abstract state matching the
+    checkpoint tree; ``shardings``: target placement on the CURRENT mesh
+    (elastic restore path).
+    """
+    step = mgr.latest_step()
+    if step is None:
+        state = init_fn()
+        if shardings is not None:
+            state = jax.device_put(state, shardings)
+        return state, 0
+    state, meta = mgr.restore(step, like, shardings=shardings)
+    return state, int(meta.get("step", step))
+
+
+def wall_time() -> float:
+    return time.perf_counter()

@@ -1,0 +1,165 @@
+"""Per-arch smoke tests (deliverable f): every assigned architecture in
+reduced form runs one forward + one train step + one prefill/decode on
+CPU, asserting output shapes and no NaNs.  Full-scale configs are
+exercised only via the dry-run (ShapeDtypeStructs, no allocation)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, TrainConfig
+from repro.models import model_zoo, transformer
+
+ARCHS = model_zoo.list_archs()
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = model_zoo.reduced_config(model_zoo.get_config(arch))
+            cache[arch] = (cfg, model_zoo.build(cfg))
+        return cache[arch]
+    return get
+
+
+def _inputs(cfg, b, s, rng):
+    if cfg.modality != "text":
+        return jnp.asarray(rng.standard_normal((b, s, cfg.d_model)),
+                           cfg.cdtype)
+    return jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch, built):
+    cfg, params = built(arch)
+    rng = np.random.default_rng(0)
+    b, s = 2, 32
+    logits, _, aux = transformer.forward(cfg, params,
+                                         _inputs(cfg, b, s, rng),
+                                         mode="train")
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_runs_and_is_finite(arch, built):
+    cfg, _ = built(arch)
+    rng = np.random.default_rng(1)
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime import train_loop
+    mesh = make_host_mesh()
+    # warmup_steps=0: lr(step=0) > 0 so one step must move the params
+    tc = TrainConfig(steps=2, learning_rate=1e-3, warmup_steps=0)
+    step = train_loop.make_train_step(cfg, tc, mesh, donate=False)
+    state = jax.device_put(train_loop.init_state(cfg, tc),
+                           train_loop.state_shardings(
+                               train_loop.abstract_state(cfg, tc), mesh))
+    b, s = 4, 32
+    batch = {"inputs": _inputs(cfg, b, s, rng),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                   jnp.int32)}
+    new_state, metrics = step(state, batch)
+    assert int(new_state.step) == 1
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed somewhere (bf16 params may round away tiny
+    # updates on ones-initialized norm vectors — check the whole tree)
+    moved = any(
+        not np.array_equal(np.asarray(a, np.float32),
+                           np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(new_state.params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode_matches_full_forward(arch, built):
+    """Decode-cache correctness: prefill(S) then decode(1) must equal the
+    logits of a full forward over S+1 tokens (within compute-dtype
+    tolerance) — the invariant behind every serve_step cell."""
+    cfg, params = built(arch)
+    rng = np.random.default_rng(2)
+    b, s = 2, 16
+    if cfg.modality != "text":
+        pytest.skip("stub frontends exercise prefill only")
+    toks = rng.integers(0, cfg.vocab_size, (b, s + 1)).astype(np.int32)
+    logits_p, cache = transformer.prefill(cfg, params,
+                                          jnp.asarray(toks[:, :s]),
+                                          max_len=s + 8)
+    logits_d, _ = transformer.decode_step(cfg, params, cache,
+                                          jnp.asarray(toks[:, s:s + 1]))
+    logits_full, _, _ = transformer.forward(cfg, params, jnp.asarray(toks),
+                                            mode="train")
+    tol = 3e-2 if cfg.compute_dtype == "bfloat16" else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(logits_d, np.float32),
+        np.asarray(logits_full[:, -1], np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("arch", sorted(model_zoo.LONG_CONTEXT_ARCHS))
+def test_long_context_archs_have_bounded_cache(arch):
+    """long_500k legality: decode state must NOT scale with seq_len."""
+    cfg = model_zoo.get_config(arch)
+    small = jax.eval_shape(lambda: transformer.init_cache(cfg, 1, 2 ** 15))
+    big = jax.eval_shape(lambda: transformer.init_cache(cfg, 1, 2 ** 19))
+
+    def nbytes(t):
+        return sum(np.prod(x.shape) * x.dtype.itemsize
+                   for x in jax.tree.leaves(t))
+    assert nbytes(big) == nbytes(small), (
+        f"{arch} cache grows with context; long_500k would not fit")
+
+
+def test_cells_skip_policy():
+    cells = model_zoo.cells(include_skipped=True)
+    skipped = {(a, s) for a, s, skip in cells if skip}
+    assert all(s == "long_500k" for _, s in skipped)
+    long_ok = {a for a, s, skip in cells
+               if s == "long_500k" and not skip}
+    assert long_ok == model_zoo.LONG_CONTEXT_ARCHS
+
+
+def test_configs_match_assignment():
+    """The assigned architecture table, as executable assertions."""
+    expect = {
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    }
+    for arch, (lyr, d, h, kv, ff, v) in expect.items():
+        cfg = model_zoo.get_config(arch)
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads,
+               cfg.num_kv_heads, cfg.d_ff, cfg.vocab_size)
+        assert got == (lyr, d, h, kv, ff, v), (arch, got)
+    assert model_zoo.get_config("deepseek-v3-671b").num_experts == 256
+    assert model_zoo.get_config("qwen3-moe-30b-a3b").num_experts == 128
+    assert model_zoo.get_config("mamba2-370m").ssm_state == 128
+    assert model_zoo.get_config("hymba-1.5b").ssm_state == 16
+
+
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_shapes(shape_name):
+    shape = SHAPES[shape_name]
+    for arch in ("deepseek-7b", "musicgen-medium"):
+        cfg = model_zoo.get_config(arch)
+        spec = model_zoo.input_specs(cfg, shape_name)
+        if shape.kind == "train":
+            assert spec["labels"].shape == (shape.global_batch,
+                                            shape.seq_len)
+        if shape.kind == "decode":
+            assert spec["tokens"].shape[:2] == (shape.global_batch, 1)
+            assert "cache" in spec
+        if cfg.modality != "text" and "inputs" in spec:
+            assert spec["inputs"].shape[-1] == cfg.d_model

@@ -1,0 +1,134 @@
+"""Data pipeline + optimizer tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.data import (SyntheticLM, TokenFileDataset, make_batches,
+                        write_token_file)
+
+
+# ------------------------------------------------------------------ data
+def test_synthetic_deterministic_per_step():
+    src = SyntheticLM(vocab_size=100, seq_len=16, batch_size=3, seed=5)
+    b1, b2 = src.batch(7), src.batch(7)
+    np.testing.assert_array_equal(b1["inputs"], b2["inputs"])
+    b3 = src.batch(8)
+    assert not np.array_equal(b1["inputs"], b3["inputs"])
+
+
+def test_labels_are_shifted_inputs():
+    src = SyntheticLM(vocab_size=50, seq_len=8, batch_size=2)
+    b = src.batch(0)
+    assert b["inputs"].shape == b["labels"].shape == (2, 8)
+    # labels[t] is the token after inputs[t] in the underlying stream
+    assert np.array_equal(b["inputs"][:, 1:], b["labels"][:, :-1])
+
+
+def test_token_range():
+    src = SyntheticLM(vocab_size=37, seq_len=64, batch_size=4)
+    b = src.batch(3)
+    assert b["inputs"].min() >= 0 and b["inputs"].max() < 37
+
+
+def test_token_file_dataset(tmp_path):
+    path = str(tmp_path / "toks.bin")
+    write_token_file(path, np.arange(10_000) % 251)
+    ds = TokenFileDataset(path, seq_len=32, batch_size=4)
+    b = ds.batch(0)
+    assert b["inputs"].shape == (4, 32)
+    np.testing.assert_array_equal(b["inputs"][:, 1:], b["labels"][:, :-1])
+    # host sharding: two processes see disjoint stripes
+    d0 = TokenFileDataset(path, seq_len=32, batch_size=4,
+                          process_index=0, process_count=2)
+    d1 = TokenFileDataset(path, seq_len=32, batch_size=4,
+                          process_index=1, process_count=2)
+    assert d0._lo != d1._lo
+
+
+def test_make_batches_resume_replays_stream():
+    src = SyntheticLM(vocab_size=100, seq_len=8, batch_size=2)
+    run1 = [b for _, b in zip(range(5), (b for _, b in
+                                         make_batches(src)))]
+    it = make_batches(src, start_step=3)
+    step, b3 = next(it)
+    assert step == 3
+    np.testing.assert_array_equal(b3["inputs"], run1[3]["inputs"])
+
+
+def test_make_batches_embed_mode():
+    src = SyntheticLM(vocab_size=100, seq_len=8, batch_size=2)
+    _, b = next(make_batches(src, embed_dim=16))
+    assert b["inputs"].shape == (2, 8, 16)
+    assert b["inputs"].dtype == np.float32
+    assert b["labels"].shape == (2, 8)
+
+
+# ----------------------------------------------------------------- optim
+def _quad_problem():
+    target = jnp.asarray(np.random.default_rng(0)
+                         .standard_normal((4, 4)), jnp.float32)
+    params = {"w": jnp.zeros((4, 4), jnp.float32),
+              "b": jnp.zeros((4,), jnp.float32)}
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum(p["b"] ** 2)
+    return params, loss, target
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_converges_on_quadratic(name):
+    params, loss, target = _quad_problem()
+    opt = optim.make(name, lambda s: 0.05, weight_decay=0.0)
+    state = opt.init(params)
+    for step in range(400):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params, step)
+    assert float(loss(params)) < 0.05
+
+
+def test_grad_clip_bounds_update():
+    g = {"w": jnp.full((8, 8), 100.0)}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    assert float(norm) > 99
+    assert abs(float(optim.global_norm(clipped)) - 1.0) < 1e-4
+
+
+def test_schedule_shape():
+    lr = optim.warmup_cosine(1e-3, 10, 100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1e-3) < 1e-9
+    assert float(lr(5)) == pytest.approx(5e-4)
+    assert float(lr(100)) == pytest.approx(1e-4, rel=1e-3)  # floor 0.1
+    assert float(lr(55)) < float(lr(10))
+
+
+@settings(max_examples=30, deadline=None)
+@given(shape=st.sampled_from([(3,), (4, 5), (2, 3, 4)]),
+       name=st.sampled_from(["adamw", "adafactor"]))
+def test_optimizer_update_is_finite_and_shaped(shape, name):
+    """Property: any gradient keeps params finite and shaped."""
+    rng = np.random.default_rng(0)
+    p = {"x": jnp.asarray(rng.standard_normal(shape), jnp.float32)}
+    g = {"x": jnp.asarray(rng.standard_normal(shape) * 10, jnp.float32)}
+    opt = optim.make(name, lambda s: 1e-2)
+    new_p, _, stats = opt.update(g, opt.init(p), p, 3)
+    assert new_p["x"].shape == shape
+    assert np.all(np.isfinite(np.asarray(new_p["x"])))
+    assert np.isfinite(float(stats["grad_norm"]))
+
+
+def test_adafactor_state_is_factored():
+    p = {"w": jnp.zeros((64, 32)), "v": jnp.zeros((7,))}
+    st_ = optim.adafactor(lambda s: 1e-3).init(p)
+    assert st_["f"]["w"]["vr"].shape == (64,)
+    assert st_["f"]["w"]["vc"].shape == (32,)
+    assert st_["f"]["v"]["v"].shape == (7,)
+    # stacked 3-D params factor over the last two dims, per layer
+    p3 = {"w": jnp.zeros((4, 8, 16))}
+    st3 = optim.adafactor(lambda s: 1e-3).init(p3)
+    assert st3["f"]["w"]["vr"].shape == (4, 8)
+    assert st3["f"]["w"]["vc"].shape == (4, 16)

@@ -1,0 +1,125 @@
+"""Flash custom-VJP vs reverse-mode-through-scan: forward and gradients
+must agree (fp32) across masking variants — causal, sliding window,
+softcap, GQA grouping, ring k_pos, cache offsets."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+
+
+def _mk(b, s, t, h, hkv, d, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, t, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, t, hkv, d)), jnp.float32)
+    return q, k, v
+
+
+def _both_paths(fn):
+    """Run fn once with the flash VJP and once with plain autodiff."""
+    old = A.USE_FLASH_VJP
+    try:
+        A.USE_FLASH_VJP = True
+        flash = fn()
+        A.USE_FLASH_VJP = False
+        ref = fn()
+    finally:
+        A.USE_FLASH_VJP = old
+    return flash, ref
+
+
+CASES = [
+    dict(),                                      # plain causal
+    dict(window=7),                              # sliding window
+    dict(softcap=8.0),                           # gemma-style softcap
+    dict(window=5, softcap=4.0),
+    dict(causal=False),
+]
+
+
+@pytest.mark.parametrize("kw", CASES)
+def test_forward_and_grads_match(kw):
+    q, k, v = _mk(2, 16, 16, 4, 2, 8)
+
+    def loss(q, k, v):
+        o = A.blocked_attention(q, k, v, scale=0.35, chunk=8, **kw)
+        return jnp.sum(o * jnp.cos(jnp.arange(o.size, dtype=jnp.float32)
+                                   .reshape(o.shape)))
+
+    def run():
+        val = loss(q, k, v)
+        grads = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+        return val, grads
+
+    (vf, gf), (vr, gr) = _both_paths(run)
+    np.testing.assert_allclose(np.asarray(vf), np.asarray(vr),
+                               rtol=2e-5, atol=2e-5)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_cache_offset_and_kvlen():
+    """Decode-style: q is one new row at offset; cache partially filled."""
+    q, k, v = _mk(2, 1, 24, 4, 4, 8, seed=3)
+
+    def loss(q, k, v):
+        o = A.blocked_attention(q, k, v, scale=0.3, kv_len=17,
+                                q_offset=16, chunk=8)
+        return jnp.sum(o ** 2)
+
+    def run():
+        return loss(q, k, v), jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+    (vf, gf), (vr, gr) = _both_paths(run)
+    np.testing.assert_allclose(np.asarray(vf), np.asarray(vr), rtol=2e-5)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_ring_kpos_slots():
+    """SWA ring cache: unordered slots with explicit positions + holes."""
+    rng = np.random.default_rng(4)
+    q, k, v = _mk(1, 4, 8, 2, 2, 8, seed=4)
+    k_pos = jnp.asarray([[9, 10, 3, -1, 5, 6, 7, 8]], jnp.int32)
+
+    def loss(q, k, v):
+        o = A.blocked_attention(q, k, v, scale=0.4, window=6, k_pos=k_pos,
+                                q_offset=10, chunk=4)
+        return jnp.sum(jnp.abs(o))
+
+    def run():
+        return loss(q, k, v), jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+    (vf, gf), (vr, gr) = _both_paths(run)
+    np.testing.assert_allclose(np.asarray(vf), np.asarray(vr), rtol=2e-5)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_residuals_are_linear_not_quadratic():
+    """The point of the exercise: VJP residual bytes must scale with T,
+    not S·T.  Counted from the jaxpr of the linearized function."""
+    def resid_bytes(s, t):
+        q, k, v = _mk(1, s, t, 2, 2, 8, seed=1)
+
+        def f(q, k, v):
+            return A.blocked_attention(q, k, v, scale=0.3, chunk=8)
+        _, vjp = jax.vjp(f, q, k, v)
+        leaves = jax.tree.leaves(vjp)
+        return sum(x.size * x.dtype.itemsize for x in leaves
+                   if hasattr(x, "size"))
+
+    old = A.USE_FLASH_VJP
+    try:
+        A.USE_FLASH_VJP = True
+        b1 = resid_bytes(32, 32)
+        b2 = resid_bytes(64, 64)       # 2x seq: quadratic would give 4x
+    finally:
+        A.USE_FLASH_VJP = old
+    assert b2 < 3.0 * b1, (b1, b2)

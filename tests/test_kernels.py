@@ -1,0 +1,149 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles,
+bit-exactness vs the blocked oracle (the paper's 0e+00 discipline), and
+hypothesis property tests on the GEMM invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitexact
+from repro.kernels import ops, ref
+from repro.kernels.panel_gemm import panel_gemm, vmem_bytes, VMEM_BUDGET
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(dtype))
+
+
+# ---------------------------------------------------------------- panel gemm
+@pytest.mark.parametrize("m,n,k", [
+    (128, 256, 256), (128, 512, 128), (256, 128, 384),
+    (128, 2048 // 4, 2048 // 4),   # scaled QKV class
+    (128, 8192 // 16, 2048 // 8),  # scaled FFN1 (N > K)
+    (128, 2048 // 8, 8192 // 16),  # scaled FFN2 (K > N)
+])
+def test_panel_gemm_vs_blocked_oracle_bitexact(m, n, k):
+    x, w = _rand((m, k)), _rand((k, n))
+    bk = min(128, k)
+    y = panel_gemm(x, w, block_m=128, block_n=128, block_k=bk,
+                   interpret=True)
+    bitexact.assert_bit_identical(
+        np.asarray(y), np.asarray(ref.gemm_blocked(x, w, bk)))
+
+
+@pytest.mark.parametrize("m,n,k", [(64, 96, 200), (128, 130, 256),
+                                   (1, 300, 77), (129, 128, 128)])
+def test_panel_gemm_unaligned_shapes(m, n, k):
+    x, w = _rand((m, k)), _rand((k, n))
+    y = ops.gemm(x, w, interpret=True)
+    np.testing.assert_allclose(y, ref.gemm_xla(x, w), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_panel_gemm_dtypes(dtype):
+    x = _rand((128, 256)).astype(dtype)
+    w = _rand((256, 128)).astype(dtype)
+    y = panel_gemm(x, w, block_m=128, block_n=128, block_k=128,
+                   interpret=True)
+    expect = ref.gemm_blocked(x, w, 128)
+    assert y.dtype == dtype
+    if dtype == jnp.float32:
+        bitexact.assert_bit_identical(np.asarray(y), np.asarray(expect))
+    else:
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(expect, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_panel_gemm_kcarry_no_leak_across_tiles():
+    """The skip-Z discipline: two output tiles sharing the accumulator
+    scratch must not leak partial sums (grid > 1 in both i and j)."""
+    x, w = _rand((256, 512)), _rand((512, 256))
+    y = panel_gemm(x, w, block_m=128, block_n=128, block_k=128,
+                   interpret=True)
+    bitexact.assert_bit_identical(
+        np.asarray(y), np.asarray(ref.gemm_blocked(x, w, 128)))
+
+
+def test_vmem_model_deployed_blocks_fit():
+    from repro.kernels.panel_gemm import (DEFAULT_BLOCK_K, DEFAULT_BLOCK_M,
+                                          DEFAULT_BLOCK_N)
+    assert vmem_bytes(DEFAULT_BLOCK_M, DEFAULT_BLOCK_N,
+                      DEFAULT_BLOCK_K) <= VMEM_BUDGET
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 64), n=st.integers(1, 64), k=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_matches_xla_property(m, n, k, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(r.standard_normal((k, n)).astype(np.float32))
+    y = ops.gemm(x, w, interpret=True)
+    np.testing.assert_allclose(y, ref.gemm_xla(x, w), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gemm_linearity_property(seed):
+    """GEMM invariant: (a x1 + x2) W == a (x1 W) + x2 W (fp32, loose tol)."""
+    r = np.random.default_rng(seed)
+    x1 = jnp.asarray(r.standard_normal((32, 64)).astype(np.float32))
+    x2 = jnp.asarray(r.standard_normal((32, 64)).astype(np.float32))
+    w = jnp.asarray(r.standard_normal((64, 32)).astype(np.float32))
+    lhs = ops.gemm(2.0 * x1 + x2, w, interpret=True)
+    rhs = 2.0 * ops.gemm(x1, w, interpret=True) + ops.gemm(
+        x2, w, interpret=True)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("s,t,h,hkv,d", [
+    (128, 128, 4, 4, 64), (256, 256, 4, 2, 64), (64, 192, 8, 2, 32),
+    (100, 100, 2, 1, 80),
+])
+def test_flash_attention_vs_ref(s, t, h, hkv, d):
+    q = _rand((2, s, h, d))
+    k = _rand((2, t, hkv, d))
+    v = _rand((2, t, hkv, d))
+    o = ops.mha(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(o, ref.attention(q, k, v, causal=True),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window,softcap", [(None, 30.0), (64, None),
+                                            (64, 50.0), (17, None)])
+def test_flash_attention_window_softcap(window, softcap):
+    q, k, v = _rand((1, 256, 4, 64)), _rand((1, 256, 2, 64)), _rand(
+        (1, 256, 2, 64))
+    o = ops.mha(q, k, v, causal=True, window=window, softcap=softcap,
+                interpret=True)
+    np.testing.assert_allclose(
+        o, ref.attention(q, k, v, causal=True, window=window,
+                         softcap=softcap), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_decode_cache_alignment():
+    """Sq < Skv (decode/cache case): positions must align to cache end."""
+    q, k, v = _rand((2, 1, 4, 64)), _rand((2, 300, 4, 64)), _rand(
+        (2, 300, 4, 64))
+    o = ops.mha(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(o, ref.attention(q, k, v, causal=True),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    q = _rand((1, 128, 2, 64)).astype(dtype)
+    k = _rand((1, 128, 2, 64)).astype(dtype)
+    v = _rand((1, 128, 2, 64)).astype(dtype)
+    o = ops.mha(q, k, v, causal=True, interpret=True)
+    o_ref = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=5e-2, atol=5e-2)

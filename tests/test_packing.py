@@ -1,0 +1,117 @@
+"""Packing + bit-exactness + autotune gate tests (paper levers as code)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import autotune, bitexact, packing, panel_gemm as pg, scheduler
+from repro.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+def test_pack_roundtrip_layouts():
+    w_kn = _rand((300, 200))
+    p1 = packing.pack(w_kn, block_n=128, block_k=128)
+    p2 = packing.pack(jnp.asarray(np.asarray(w_kn).T), transposed=True,
+                      block_n=128, block_k=128)
+    assert p1.shape == p2.shape == (300, 200)
+    np.testing.assert_array_equal(np.asarray(p1.data), np.asarray(p2.data))
+    # padded region is zero, logical region preserved
+    np.testing.assert_array_equal(np.asarray(p1.data)[:300, :200],
+                                  np.asarray(w_kn))
+    assert np.all(np.asarray(p1.data)[300:] == 0)
+
+
+def test_packed_equals_percall_equals_xla():
+    """All three API paths agree; packed/per-call are bit-identical to each
+    other (same kernel math), xla within fp32 reorder tolerance."""
+    x, w = _rand((128, 384)), _rand((384, 256))
+    pw = packing.pack(w, block_n=128, block_k=128)
+    y_packed = pg.gemm(x, pw, impl="interpret")
+    y_percall = pg.gemm_percall(x, w, block_n=128, block_k=128,
+                                impl="interpret")
+    y_xla = pg.gemm_xla(x, w)
+    bitexact.assert_bit_identical(np.asarray(y_packed),
+                                  np.asarray(y_percall))
+    np.testing.assert_allclose(y_packed, y_xla, rtol=1e-4, atol=1e-4)
+
+
+def test_packed_gemm_batched_leading_dims():
+    x = _rand((2, 64, 384))
+    w = _rand((384, 256))
+    pw = packing.pack(w, block_n=128, block_k=128)
+    y = pg.gemm(x, pw, impl="xla")
+    np.testing.assert_allclose(
+        y, np.einsum("bsk,kn->bsn", np.asarray(x), np.asarray(w)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_pack_pads_to_blocks():
+    w = _rand((130, 70))
+    pw = packing.pack(w, block_n=128, block_k=128)
+    assert pw.data.shape == (256, 128)
+    x = _rand((5, 130))
+    y = pg.gemm(x, pw, impl="interpret")
+    np.testing.assert_allclose(y, np.asarray(x) @ np.asarray(w),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 200), k=st.integers(1, 200),
+       seed=st.integers(0, 2**31 - 1))
+def test_pack_gemm_property(n, k, seed):
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.standard_normal((k, n)).astype(np.float32))
+    x = jnp.asarray(r.standard_normal((8, k)).astype(np.float32))
+    pw = packing.pack(w, block_n=128, block_k=128)
+    y = pg.gemm(x, pw, impl="xla")
+    np.testing.assert_allclose(y, np.asarray(x) @ np.asarray(w),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_bitexact_sampling_matches_paper_protocol():
+    a = np.arange(10000, dtype=np.float32)
+    b = a.copy()
+    b[997 * 3] += 1.0   # lands exactly on the stride sample
+    assert bitexact.max_abs_diff_sampled(a, b, 997) == 1.0
+    assert not bitexact.bit_identical(a, b)
+    assert bitexact.bit_identical(a, a.copy())
+
+
+def test_scheduler_vmem_gate_and_occupancy():
+    p = scheduler.plan(128, 2048, 2048, block_m=128, block_n=512,
+                       block_k=512, num_cores=1)
+    assert p.vmem_ok and p.aligned and p.occupancy == 1.0
+    huge = scheduler.plan(128, 2048, 2048, block_m=512, block_n=2048,
+                          block_k=2048)
+    assert not huge.vmem_ok and huge.t_pred == float("inf")
+
+
+def test_scheduler_fine_panels_beat_coarse_when_cores_idle():
+    """Paper Fig. 2 analogue: with 8 cores, an Nc so coarse that the grid
+    has fewer panels than cores predicts worse time than fine panels."""
+    coarse = scheduler.plan(128, 2048, 2048, block_m=128, block_n=1024,
+                            block_k=512, num_cores=8)
+    fine = scheduler.plan(128, 2048, 2048, block_m=128, block_n=256,
+                          block_k=512, num_cores=8)
+    assert coarse.panels < 8 <= fine.panels
+    assert fine.t_pred < coarse.t_pred
+
+
+def test_autotune_sweep_bitexact_gate():
+    res = autotune.sweep([(128, 512, 512)], validate=True)
+    assert res, "sweep returned no bit-exact candidates"
+    assert all(r.bit_exact for r in res)
+    assert res[0].t_pred <= res[-1].t_pred
+
+
+def test_mesh_panels_overlap_feasibility():
+    good = scheduler.mesh_panels(8192, model_shards=16, block_n=512)
+    assert good["overlap_feasible"] and good["kernel_panels_per_shard"] == 1
+    bad = scheduler.mesh_panels(2048, model_shards=16, block_n=512)
+    assert not bad["overlap_feasible"]

@@ -1,0 +1,73 @@
+"""Serving placement policy + pack block-fitting tests (§Perf C1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.packing import fit_block
+from repro.models import model_zoo
+from repro.parallel import sharding as Sh
+
+
+class FakeMesh:
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.size = int(np.prod(list(axes.values())))
+
+
+MESH = FakeMesh(data=16, model=16)
+
+
+def _has_data_axis(specs):
+    out = []
+    for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        for entry in s:
+            names = entry if isinstance(entry, tuple) else (entry,)
+            if any(n in ("data", "pod") for n in names if n):
+                out.append(True)
+                break
+        else:
+            out.append(False)
+    return any(out)
+
+
+def test_small_arch_replicates_over_data():
+    cfg = model_zoo.get_config("deepseek-7b")     # 6.9B fp32 / 16 ≈ 1.7GB
+    params = model_zoo.abstract_params(cfg)
+    specs = Sh.serve_param_specs(params, MESH)
+    assert not _has_data_axis(specs), "should be TP-only for serving"
+
+
+def test_huge_arch_keeps_fsdp():
+    cfg = model_zoo.get_config("deepseek-v3-671b")  # 84GB/chip TP-only
+    params = model_zoo.abstract_params(cfg)
+    specs = Sh.serve_param_specs(params, MESH)
+    assert _has_data_axis(specs), "671B must stay sharded over data"
+
+
+def test_budget_knob():
+    cfg = model_zoo.get_config("deepseek-7b")
+    params = model_zoo.abstract_params(cfg)
+    tight = Sh.serve_param_specs(params, MESH, hbm_budget=2 ** 28)
+    assert _has_data_axis(tight), "tiny budget must force FSDP"
+
+
+# ------------------------------------------------------------- fit_block
+@settings(max_examples=200, deadline=None)
+@given(dim=st.integers(1, 70000), want=st.sampled_from([128, 512, 2048]))
+def test_fit_block_properties(dim, want):
+    b = fit_block(dim, want)
+    padded = max(128, ((dim + 127) // 128) * 128)
+    assert b <= max(want, 128)
+    assert padded % b == 0, (dim, want, b)
+    assert b >= 128
+
+
+def test_fit_block_examples():
+    assert fit_block(2048, 2048) == 2048
+    assert fit_block(5632, 2048) == 512    # 5632 = 44*128; 44 % 16 != 0
+    assert fit_block(1600, 2048) == 1664   # hymba: whole padded dim (13*128)
+    assert fit_block(11008, 2048) == 256   # 11008 = 86*128
+    assert fit_block(60000, 512) == 128    # LM head padding stays light
