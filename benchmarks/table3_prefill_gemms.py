@@ -1,19 +1,23 @@
-"""Paper Table 3 — twelve LLM prefill GEMMs, three backends, measured.
+"""Paper Table 3 — twelve LLM prefill GEMMs, three dispatch plans, measured.
 
-Backends map to the paper's:
-  xla      — one shape-agnostic dot (the Accelerate-dispatch analogue)
-  percall  — panel GEMM path, weight handed over as W[N, K] (llama.cpp
-             convention) and transposed + padded INSIDE every call
-             (cblas_sgemm/BNNSMatMul analogue)
-  packed   — weight packed once at load; per call only the compute loop
-             (the paper's proposed kernel)
+Each shape is dispatched through the plan/execute API (``repro.gemm``)
+three ways, mapping to the paper's backends:
 
-Wall-clock is real on this host because the per-call pack is real work in
-any runtime; the compute loop itself runs through XLA's dot (Pallas
-numerics are validated separately in interpret mode — timing interpret
-mode would benchmark the Python emulator, not the kernel).  Default
-shapes are the paper's twelve scaled by 1/4 per dim (CPU budget);
---full runs the exact ones.
+  xla      — ``pack=PACK_NONE``: one shape-agnostic dot (the
+             Accelerate-dispatch analogue)
+  percall  — ``pack=PACK_PERCALL``: weight handed over as W[N, K]
+             (llama.cpp convention) and transposed + padded INSIDE every
+             call (cblas_sgemm/BNNSMatMul analogue)
+  packed   — ``pack_for_plan`` once at load; per call only the compute
+             loop (the paper's proposed kernel)
+
+The policy column records which lever the dispatch policy resolves for
+the shape (K >= N -> fine panels, N > K -> pre-pack).  Wall-clock is real
+on this host because the per-call pack is real work in any runtime; the
+compute loop itself runs through XLA's dot (Pallas numerics are validated
+separately in interpret mode — timing interpret mode would benchmark the
+Python emulator, not the kernel).  Default shapes are the paper's twelve
+scaled by 1/4 per dim (CPU budget); --full runs the exact ones.
 """
 from __future__ import annotations
 
@@ -22,7 +26,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import packing, panel_gemm as pg
+from repro import gemm as G
+from repro.core import packing
 from repro.models.model_zoo import PAPER_GEMM_SHAPES, PAPER_M
 
 
@@ -37,20 +42,28 @@ def run(scale: int = 4, trials: int = 3, block_n: int = 512,
         w_nk = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
 
         bn, bk = min(block_n, n), min(block_k, k)
+        # one policy-resolved plan per shape records the lever; the three
+        # timed plans pin blocks so the comparison isolates the pack cost
+        policy_plan = G.plan(m, n, k)
+        p_xla = G.plan(m, n, k, backend="xla", pack=G.PACK_NONE,
+                       transposed=True)
+        p_percall = G.plan(m, n, k, backend="xla", pack=G.PACK_PERCALL,
+                           block_n=bn, block_k=bk, transposed=True)
+        # model-load phase (untimed): pack once, plan adopts the pack
         pw = packing.pack(w_nk, transposed=True, block_n=bn, block_k=bk)
+        p_packed = G.plan_for_packed(m, pw, backend="xla")
 
         t_xla = common.time_fn(
-            lambda x, w: pg.gemm_xla(x, w, transposed=True),
-            x, w_nk, trials=trials)
+            lambda x, w: G.execute(p_xla, x, w), x, w_nk, trials=trials)
         t_percall = common.time_fn(
-            lambda x, w: pg.gemm_percall(x, w, transposed=True,
-                                         block_n=bn, block_k=bk),
-            x, w_nk, trials=trials)
+            lambda x, w: G.execute(p_percall, x, w), x, w_nk,
+            trials=trials)
         t_packed = common.time_fn(
-            lambda x, pw=pw: pg.gemm(x, pw), x, trials=trials)
+            lambda x, pw=pw: G.execute(p_packed, x, pw), x, trials=trials)
 
         rows.append({
             "model": model, "op": op, "N": n, "K": k, "M": m,
+            "policy_lever": policy_plan.lever,
             "xla_gflops": round(common.gflops(m, n, k, t_xla), 2),
             "percall_gflops": round(common.gflops(m, n, k, t_percall), 2),
             "packed_gflops": round(common.gflops(m, n, k, t_packed), 2),

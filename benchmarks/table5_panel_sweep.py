@@ -20,6 +20,7 @@ paper's reject-if-not-bit-identical protocol) and the deployed
 from __future__ import annotations
 
 from benchmarks import common
+from repro import gemm as G
 from repro.core import autotune, scheduler
 from repro.kernels.panel_gemm import DEFAULT_BLOCK_K, DEFAULT_BLOCK_N
 from repro.models.model_zoo import PAPER_GEMM_SHAPES, PAPER_M
@@ -47,9 +48,25 @@ def sweep_rows(num_cores: int = 8) -> list[dict]:
     return rows
 
 
+def policy_rows() -> list[dict]:
+    """The dispatch policy's lever resolution over the paper's twelve
+    shapes — what `gemm.plan` deploys, next to the raw sweep above."""
+    shapes = [(PAPER_M, n, k) for _, _, n, k in PAPER_GEMM_SHAPES]
+    return G.policy_table(shapes, num_cores=num_cores_for_sweep())
+
+
 def main():
     rows = sweep_rows()
     common.print_csv("table5_panel_sweep (QKV 128x2048x2048)", rows)
+
+    # plan-policy resolution: K >= N shapes must come out fine-panelled,
+    # N > K shapes pre-packed (the paper's two levers, per shape)
+    prows = policy_rows()
+    common.print_csv("policy_resolution (twelve paper shapes)", prows)
+    for r in prows:
+        want = (G.LEVER_FINE_PANELS if r["K"] >= r["N"]
+                else G.LEVER_PREPACK)
+        assert r["lever"] == want, (r, want)
 
     # the ~2x mis-tuning cliff, as an assertion (paper Fig. 2):
     ok = {r["block_n"]: r for r in rows if r["vmem_ok"]}
@@ -72,7 +89,8 @@ def main():
         "deployed defaults are stale vs the sweep winner")
     common.write_table("table5_panel_sweep", rows, meta={
         "swing": swing,
-        "deployed_pair": [best.block_n, best.block_k]})
+        "deployed_pair": [best.block_n, best.block_k],
+        "policy_resolution": prows})
     return rows
 
 

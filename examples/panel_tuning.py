@@ -2,11 +2,14 @@
 
 Shows: (1) the napkin-math plan for a GEMM under different panel widths
 (lever 1 — the ~2x mis-tuning cliff), (2) the bit-exact-gated autotune
-sweep that fixes the deployed (block_n, block_k) pair, and (3) the
-mesh-scale panel feasibility check for the all-gather⇄matmul overlap.
+sweep that fixes the deployed (block_n, block_k) pair, (3) the dispatch
+policy resolving the paper's twelve shapes into plans (``gemm.plan``),
+and (4) the mesh-scale panel feasibility check for the
+all-gather⇄matmul overlap.
 
 Run: PYTHONPATH=src python examples/panel_tuning.py
 """
+from repro import gemm as G
 from repro.core import autotune, scheduler
 from repro.models.model_zoo import PAPER_GEMM_SHAPES, PAPER_M
 
@@ -27,6 +30,15 @@ for r in autotune.sweep(shapes, num_cores=8)[:3]:
     print(f"  block_n={r.block_n:<5} block_k={r.block_k:<5} "
           f"t_pred={r.t_pred*1e3:.3f}ms vmem={r.vmem//1024}KB "
           f"bit_exact={r.bit_exact}")
+
+print("\ndispatch policy over the twelve paper shapes (gemm.plan):")
+for (model, op, n, k), row in zip(
+        PAPER_GEMM_SHAPES,
+        G.policy_table([(PAPER_M, n, k)
+                        for _, _, n, k in PAPER_GEMM_SHAPES])):
+    print(f"  {model:<15} {op:<8} N={n:<6} K={k:<6} -> {row['lever']:<12}"
+          f" blocks=({row['block_n']},{row['block_k']})"
+          f" prepack={row['prepack']}")
 
 print("\nmesh-scale panels (N=2048 over 16 model shards):")
 for bn in (64, 128, 256):

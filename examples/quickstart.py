@@ -1,9 +1,10 @@
-"""Quickstart: the paper's two levers in five minutes.
+"""Quickstart: the paper's two levers in five minutes, via plan/execute.
 
-  1. pack a weight once at load (lever 2) and GEMM against it;
-  2. compare with the stateless per-call path and the raw XLA dot;
-  3. verify the bit-exactness discipline;
-  4. run a small end-to-end model forward with packed projections.
+  1. resolve a dispatch plan for a shape (the policy picks the lever);
+  2. pack a weight once at load (lever 2) and execute against it;
+  3. compare with the stateless per-call plan and the raw XLA dot;
+  4. verify the bit-exactness discipline;
+  5. run a small end-to-end model forward with packed projections.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,7 +12,8 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core import bitexact, packing, panel_gemm as pg
+from repro import gemm as G
+from repro.core import bitexact
 from repro.models import model_zoo
 from repro.runtime.serve_loop import Engine
 
@@ -21,22 +23,29 @@ rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal((128, 2048)), jnp.float32)
 w_nk = jnp.asarray(rng.standard_normal((2048, 2048)), jnp.float32)  # [N,K]
 
+# the policy resolves the shape once: K >= N -> fine panels here
+plan = G.plan(128, 2048, 2048, transposed=True)
+print("policy plan:", plan.describe())
+
 # lever 2: pack once at model load (transpose from llama.cpp layout, pad,
 # block-align).  Every later call pays only the compute loop.
-pw = packing.pack(w_nk, transposed=True)
-y_packed = pg.gemm(x, pw)
+pw = G.pack_for_plan(plan, w_nk)
+y_packed = G.execute(plan, x, pw)
 
 # the stateless baseline re-packs on EVERY call (cblas/BNNSMatMul role):
-y_percall = pg.gemm_percall(x, w_nk, transposed=True)
+y_percall = G.execute(plan, x, w_nk)
 
 # the shape-agnostic dot (Accelerate-dispatch role):
-y_xla = pg.gemm_xla(x, w_nk, transposed=True)
+p_xla = G.plan(128, 2048, 2048, backend="xla", pack=G.PACK_NONE,
+               transposed=True)
+y_xla = G.execute(p_xla, x, w_nk)
 
 bitexact.assert_bit_identical(np.asarray(y_packed), np.asarray(y_percall),
                               "packed vs per-call")
 print("packed == per-call bitwise:", True)
 print("max|packed - xla| (fp32 reorder only): "
       f"{bitexact.max_abs_diff_sampled(y_packed, y_xla, 997):.2e}")
+print("plan cache:", G.plan_cache_info())
 
 # --- a whole model through the packed path ------------------------------
 cfg = model_zoo.reduced_config(model_zoo.get_config("deepseek-7b"))

@@ -1,0 +1,77 @@
+"""Version shims for the jax APIs this repo spans.
+
+The codebase is written against the current jax surface (``jax.shard_map``
+with ``axis_names``/``check_vma``, ``pltpu.CompilerParams``); the baked-in
+toolchain ships jax 0.4.37, where those live at
+``jax.experimental.shard_map.shard_map`` (``auto``/``check_rep``) and
+``pltpu.TPUCompilerParams``.  Everything that depends on one of these
+imports it from here so the translation happens in exactly one place.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+# ------------------------------------------------------------ pallas params
+# jax >= 0.6 renamed TPUCompilerParams -> CompilerParams.
+TPUCompilerParams: Any = getattr(_pltpu, "CompilerParams",
+                                 getattr(_pltpu, "TPUCompilerParams", None))
+
+
+def tpu_compiler_params(**kw):
+    """Build TPU Pallas compiler params under either jax naming."""
+    return TPUCompilerParams(**kw)
+
+
+# ---------------------------------------------------------------- make_mesh
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates jax 0.4.x (no ``axis_types``)."""
+    import inspect
+    kw: dict[str, Any] = {}
+    if devices is not None:
+        kw["devices"] = devices
+    params = inspect.signature(jax.make_mesh).parameters
+    if axis_types is not None and "axis_types" in params:
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+def axis_type_auto():
+    """``jax.sharding.AxisType.Auto`` where it exists, else None."""
+    return getattr(jax.sharding, "AxisType", None) and \
+        jax.sharding.AxisType.Auto
+
+
+# --------------------------------------------------------------- shard_map
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=None, check_rep=None, auto=None):
+    """``jax.shard_map`` signature, executable on jax 0.4.x.
+
+    New-API spellings are translated for the experimental version:
+      * ``axis_names`` (manual axes)  -> ``auto`` (every other mesh axis)
+      * ``check_vma``                 -> ``check_rep``
+    """
+    if hasattr(jax, "shard_map"):
+        kw: dict[str, Any] = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        elif auto is not None:      # old-API spelling: manual = rest
+            kw["axis_names"] = set(mesh.axis_names) - set(auto)
+        if check_vma is not None or check_rep is not None:
+            kw["check_vma"] = (check_vma if check_vma is not None
+                               else check_rep)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {}
+    if auto is None and axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    elif auto is not None:
+        kw["auto"] = frozenset(auto)
+    rep = check_rep if check_rep is not None else check_vma
+    if rep is not None:
+        kw["check_rep"] = rep
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

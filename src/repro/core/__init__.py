@@ -1,4 +1,10 @@
-"""Core: the paper's contribution — pre-packed, panel-scheduled GEMM."""
+"""Core: packing, scheduling model, autotune, bit-exactness.
+
+The GEMM *dispatch* surface moved to :mod:`repro.gemm` (plan/execute);
+``gemm``/``gemm_percall``/``gemm_xla`` below are the deprecated shims
+from ``core/panel_gemm.py`` — kept importable for one release (see
+``docs/gemm_api.md``).
+"""
 from repro.core import autotune, bitexact, packing, panel_gemm, scheduler
 from repro.core.packing import PackedWeight, pack
 from repro.core.panel_gemm import gemm, gemm_percall, gemm_xla

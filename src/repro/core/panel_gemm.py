@@ -1,68 +1,76 @@
-"""Public GEMM API: pre-packed, per-call, and XLA paths.
+"""DEPRECATED — legacy GEMM entry points, now thin shims over
+:mod:`repro.gemm` (plan/execute).  **Migration note.**
 
-This is the surface the model code uses.  Three paths mirror the paper's
-backends:
+This module used to BE the GEMM surface: three unrelated functions
+steered by a process-global ``REPRO_GEMM_IMPL`` env var, which meant no
+caller could express the paper's shape-resolved lever choice.  That
+surface moved to ``repro.gemm`` in the plan/execute redesign
+(``docs/gemm_api.md``); the names below keep working for one release and
+will then be removed:
 
-  gemm(x, pw)          — pre-packed kernel (the paper's proposed path):
-                         per call pays ONLY the compute loop (+ M padding).
-  gemm_percall(x, W)   — stateless baseline: transpose+pad the weight
-                         inside the call, every call (cblas/BNNSMatMul
-                         analogue).
-  gemm_xla(x, W)       — raw XLA dot (the "Accelerate dispatch" analogue
-                         and the CPU-runtime fallback).
+  ==============================  =========================================
+  legacy call                     replacement
+  ==============================  =========================================
+  ``gemm(x, pw)``                 ``p = gemm.plan_for_packed(m, pw)`` then
+                                  ``gemm.execute(p, x, pw)``
+  ``gemm_percall(x, w, ...)``     ``p = gemm.plan(m, n, k,
+                                  pack=gemm.PACK_PERCALL, ...)`` then
+                                  ``gemm.execute(p, x, w)``
+  ``gemm_xla(x, w)``              ``p = gemm.plan(m, n, k, backend="xla",
+                                  pack=gemm.PACK_NONE)`` then
+                                  ``gemm.execute(p, x, w)``
+  ``impl="..."`` keyword          ``backend="..."`` at plan time, or a
+                                  ``gemm.use_backend("...")`` scope
+  ``REPRO_GEMM_IMPL`` env var     honoured ONLY by these shims (the single
+                                  remaining reader); the new surface takes
+                                  backends explicitly / by scope
+  ==============================  =========================================
 
-Backend selection: impl ∈ {"xla", "pallas", "interpret"}.  On this CPU
-container the model runtime defaults to "xla" (Pallas lowers for TPU;
-interpret mode is for kernel validation, not throughput).  On TPU the
-deployed default is "pallas".
+Every shim resolves a plan through the same policy + LRU cache as native
+callers, so results (including bit-exactness vs ``kernels/ref``) are
+identical to the new API by construction.
 """
 from __future__ import annotations
 
 import os
+import warnings
 
 import jax
-import jax.numpy as jnp
 
+from repro import gemm as _G
 from repro.core import packing
 from repro.kernels import panel_gemm as _kernel
-from repro.kernels import ref as _ref
-
-# Global default backend; overridable per-call.  "xla" keeps CPU smoke tests
-# and dry-runs fast; set REPRO_GEMM_IMPL=pallas on TPU.
-_DEFAULT_IMPL = os.environ.get("REPRO_GEMM_IMPL", "xla")
 
 
-def _pad_m(x: jax.Array, block_m: int) -> tuple[jax.Array, int]:
-    m = x.shape[0]
-    pad = (-m) % block_m
-    if pad:
-        x = jnp.pad(x, ((0, pad), (0, 0)))
-    return x, m
+def _warn(old: str, new: str):
+    warnings.warn(
+        f"repro.core.panel_gemm.{old} is deprecated; use {new} "
+        f"(see docs/gemm_api.md)", DeprecationWarning, stacklevel=3)
 
 
-def _run(x_p, w_p, *, block_m, block_n, block_k, impl, out_dtype):
-    if impl == "xla":
-        return jnp.dot(x_p, w_p, preferred_element_type=jnp.float32).astype(
-            out_dtype or x_p.dtype)
-    return _kernel.panel_gemm(
-        x_p, w_p, block_m=block_m, block_n=block_n, block_k=block_k,
-        out_dtype=out_dtype, interpret=(impl == "interpret"))
+def _legacy_backend(impl: str | None) -> str | None:
+    """impl kwarg, else the deprecated env var, else the new-API default.
+
+    This is deliberately the ONLY place left that reads REPRO_GEMM_IMPL.
+    """
+    return impl or os.environ.get("REPRO_GEMM_IMPL") or None
+
+
+def _lead_m(x: jax.Array) -> int:
+    return _G.lead_m(x)     # resolved lazily: repro.gemm may still be
+                            # mid-import when this module loads (cycle)
 
 
 def gemm(x: jax.Array, pw: packing.PackedWeight, *,
          block_m: int = _kernel.DEFAULT_BLOCK_M,
          impl: str | None = None, out_dtype=None) -> jax.Array:
-    """y[M, N] = x[M, K] @ pw  — pre-packed path (compute loop only)."""
-    impl = impl or _DEFAULT_IMPL
-    assert x.shape[-1] == pw.k, (x.shape, pw.shape)
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, pw.k)
-    if pw.data.shape[0] != pw.k:                   # pack padded K: pad x too
-        x2 = jnp.pad(x2, ((0, 0), (0, pw.data.shape[0] - pw.k)))
-    x2, m = _pad_m(x2, block_m)
-    y = _run(x2, pw.data, block_m=block_m, block_n=pw.block_n,
-             block_k=pw.block_k, impl=impl, out_dtype=out_dtype)
-    return y[:m, :pw.n].reshape(*lead, pw.n)
+    """DEPRECATED: pre-packed GEMM.  Delegates to plan/execute."""
+    _warn("gemm", "gemm.plan_for_packed + gemm.execute")
+    p = _G.plan(_lead_m(x), pw.n, pw.k, dtype=x.dtype,
+                backend=_legacy_backend(impl), block_m=block_m,
+                block_n=pw.block_n, block_k=pw.block_k,
+                pack=_G.PACK_PREPACKED)
+    return _G.execute(p, x, pw, out_dtype=out_dtype)
 
 
 def gemm_percall(x: jax.Array, w: jax.Array, *, transposed: bool = False,
@@ -70,25 +78,25 @@ def gemm_percall(x: jax.Array, w: jax.Array, *, transposed: bool = False,
                  block_n: int = _kernel.DEFAULT_BLOCK_N,
                  block_k: int = _kernel.DEFAULT_BLOCK_K,
                  impl: str | None = None, out_dtype=None) -> jax.Array:
-    """Stateless baseline: packs w inside the call, every call."""
-    impl = impl or _DEFAULT_IMPL
-    w_p = packing.pack_percall(w, transposed=transposed, block_n=block_n,
-                               block_k=block_k)
+    """DEPRECATED: stateless pack-every-call GEMM.  Delegates to
+    plan/execute with ``pack=PACK_PERCALL``."""
+    _warn("gemm_percall", "gemm.plan(..., pack=PACK_PERCALL) + gemm.execute")
     n = w.shape[0] if transposed else w.shape[1]
     k = w.shape[1] if transposed else w.shape[0]
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, k)
-    if w_p.shape[0] != k:
-        x2 = jnp.pad(x2, ((0, 0), (0, w_p.shape[0] - k)))
-    x2, m = _pad_m(x2, block_m)
-    y = _run(x2, w_p, block_m=block_m, block_n=block_n, block_k=block_k,
-             impl=impl, out_dtype=out_dtype)
-    return y[:m, :n].reshape(*lead, n)
+    p = _G.plan(_lead_m(x), n, k, dtype=x.dtype,
+                backend=_legacy_backend(impl), block_m=block_m,
+                block_n=block_n, block_k=block_k, pack=_G.PACK_PERCALL,
+                transposed=transposed)
+    return _G.execute(p, x, w, out_dtype=out_dtype)
 
 
 def gemm_xla(x: jax.Array, w: jax.Array, *, transposed: bool = False):
-    """The 'Accelerate' analogue: a single shape-agnostic XLA dot."""
-    if transposed:
-        w = w.T
-    return _ref.gemm_xla(x.reshape(-1, w.shape[0]), w).reshape(
-        *x.shape[:-1], w.shape[1])
+    """DEPRECATED: raw shape-agnostic dot.  Delegates to plan/execute on
+    the ``xla`` backend with ``pack=PACK_NONE``."""
+    _warn("gemm_xla", 'gemm.plan(..., backend="xla", pack=PACK_NONE) '
+          "+ gemm.execute")
+    n = w.shape[0] if transposed else w.shape[1]
+    k = w.shape[1] if transposed else w.shape[0]
+    p = _G.plan(_lead_m(x), n, k, dtype=x.dtype, backend="xla",
+                pack=_G.PACK_NONE, transposed=transposed)
+    return _G.execute(p, x, w)

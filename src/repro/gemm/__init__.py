@@ -1,0 +1,36 @@
+"""Plan/execute GEMM dispatch — the one surface for every GEMM this repo
+runs (replaces the three ad-hoc entry points in ``core/panel_gemm``).
+
+    from repro import gemm
+
+    p = gemm.plan(m, n, k)                 # shape-resolved policy + cache
+    pw = gemm.pack_for_plan(p, w)          # pay the pack once (lever 2)
+    y = gemm.execute(p, x, pw)             # per call: compute loop only
+
+See ``docs/gemm_api.md`` for the policy table, cache semantics, backend
+registry, and the migration path off the deprecated
+``core.panel_gemm.{gemm, gemm_percall, gemm_xla}`` shims.
+"""
+from repro.gemm.backends import (Backend, UnknownBackendError,
+                                 default_backend, get_backend,
+                                 list_backends, register_backend,
+                                 unregister_backend, use_backend)
+from repro.gemm.execute import (PlanMismatchError, execute, lead_m,
+                                pack_for_plan, validate_plan)
+from repro.gemm.plan import (GemmPlan, LEVER_FINE_PANELS, LEVER_PREPACK,
+                             PACK_NONE, PACK_PERCALL, PACK_PREPACKED)
+from repro.gemm.policy import (DEFAULT_NUM_CORES, pack_blocks, plan,
+                               plan_cache_clear, plan_cache_info,
+                               plan_for_packed, policy_table)
+
+__all__ = [
+    "Backend", "GemmPlan", "PlanMismatchError", "UnknownBackendError",
+    "LEVER_FINE_PANELS", "LEVER_PREPACK", "DEFAULT_NUM_CORES",
+    "PACK_NONE", "PACK_PERCALL", "PACK_PREPACKED",
+    "default_backend", "execute", "get_backend", "lead_m",
+    "list_backends",
+    "pack_blocks", "pack_for_plan", "plan", "plan_cache_clear",
+    "plan_cache_info", "plan_for_packed", "policy_table",
+    "register_backend", "unregister_backend", "use_backend",
+    "validate_plan",
+]

@@ -1,0 +1,151 @@
+"""Backend registry — one extension point instead of a process global.
+
+The seed steered its three ad-hoc entry points with a module-level
+``_DEFAULT_IMPL`` read from ``REPRO_GEMM_IMPL`` at import time; nothing
+outside that module could add a backend or scope a choice to one engine.
+Here backends are first-class registry entries:
+
+  * ``xla``       — one shape-agnostic dot (the Accelerate-dispatch
+                    analogue and the CPU-runtime default).  Ignores the
+                    plan's blocking (``needs_blocks=False``), so execute()
+                    skips the block padding for it.
+  * ``pallas``    — the compiled panel kernel (TPU deployment path).
+  * ``interpret`` — the same kernel through the Pallas interpreter:
+                    kernel-validation mode, bit-identical to
+                    ``kernels/ref.gemm_blocked`` by construction.
+
+``register_backend`` is the hook later PRs (batched GEMM, quantized
+weights, remote offload) extend.  The deprecated ``REPRO_GEMM_IMPL`` env
+var is honoured only by the legacy shims in ``core/panel_gemm.py`` — the
+new surface takes ``backend=`` explicitly or via ``use_backend(...)``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import panel_gemm as _kernel
+
+# run(x_p, w_p, *, block_m, block_n, block_k, out_dtype) -> y
+RunFn = Callable[..., jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    run: RunFn
+    needs_blocks: bool = True    # False: shape-agnostic, skip block padding
+    description: str = ""
+
+
+_REGISTRY: dict[str, Backend] = {}
+_LOCK = threading.Lock()
+_STATE = threading.local()       # per-thread default-backend override stack
+
+
+class UnknownBackendError(KeyError):
+    pass
+
+
+def register_backend(name: str, run: RunFn, *, needs_blocks: bool = True,
+                     description: str = "",
+                     overwrite: bool = False) -> Backend:
+    """Register a GEMM backend under ``name`` (the extension hook)."""
+    with _LOCK:
+        if name in _REGISTRY and not overwrite:
+            raise ValueError(f"backend {name!r} already registered; "
+                             f"pass overwrite=True to replace it")
+        b = Backend(name=name, run=run, needs_blocks=needs_blocks,
+                    description=description)
+        _REGISTRY[name] = b
+        return b
+
+
+def unregister_backend(name: str) -> None:
+    with _LOCK:
+        if name in _BUILTIN:
+            raise ValueError(f"cannot unregister builtin backend {name!r}")
+        _REGISTRY.pop(name, None)
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownBackendError(
+            f"unknown GEMM backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def list_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ----------------------------------------------------------- default choice
+_FALLBACK_DEFAULT = "xla"    # CPU smoke tests / dry-runs; TPU deploys pallas
+
+
+def default_backend() -> str:
+    """The backend a plan gets when none is requested (innermost
+    ``use_backend`` scope wins; else the process default)."""
+    stack = getattr(_STATE, "stack", None)
+    if stack:
+        return stack[-1]
+    return _FALLBACK_DEFAULT
+
+
+def resolve_backend(name: str | None) -> str:
+    name = name or default_backend()
+    get_backend(name)            # validate early, at plan time
+    return name
+
+
+@contextlib.contextmanager
+def use_backend(name: str | None) -> Iterator[None]:
+    """Scope the default backend (e.g. one Engine tracing its steps).
+    ``None`` is a no-op scope, so call sites can thread an optional."""
+    if name is None:
+        yield
+        return
+    get_backend(name)
+    stack = getattr(_STATE, "stack", None)
+    if stack is None:
+        stack = _STATE.stack = []
+    stack.append(name)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+# ------------------------------------------------------------ builtin runs
+def _run_xla(x_p, w_p, *, block_m, block_n, block_k, out_dtype):
+    del block_m, block_n, block_k
+    return jnp.dot(x_p, w_p, preferred_element_type=jnp.float32).astype(
+        out_dtype or x_p.dtype)
+
+
+def _run_pallas(x_p, w_p, *, block_m, block_n, block_k, out_dtype):
+    return _kernel.panel_gemm(x_p, w_p, block_m=block_m, block_n=block_n,
+                              block_k=block_k, out_dtype=out_dtype,
+                              interpret=False)
+
+
+def _run_interpret(x_p, w_p, *, block_m, block_n, block_k, out_dtype):
+    return _kernel.panel_gemm(x_p, w_p, block_m=block_m, block_n=block_n,
+                              block_k=block_k, out_dtype=out_dtype,
+                              interpret=True)
+
+
+register_backend("xla", _run_xla, needs_blocks=False,
+                 description="shape-agnostic XLA dot (Accelerate analogue)")
+register_backend("pallas", _run_pallas,
+                 description="compiled Pallas panel kernel (TPU deploy)")
+register_backend("interpret", _run_interpret,
+                 description="Pallas interpreter (kernel validation)")
+_BUILTIN = frozenset(_REGISTRY)

@@ -1,0 +1,123 @@
+"""``execute(plan, x, w)`` — run a planned GEMM; all per-call work that a
+plan can remove has been removed at plan/pack time.
+
+The weight operand may be:
+
+  * a ``PackedWeight`` (paid once at model load — the plan's ``prepack``
+    lever): per call only M-padding of the activations remains;
+  * a raw array (``[K, N]``, or ``[N, K]`` when the plan was built with
+    ``transposed=True``): the transpose+pad runs inside the call — the
+    honest cblas/BNNSMatMul baseline the benchmarks compare against.
+
+Numerics contract (the paper's discipline): for a given block triple the
+result is bit-identical across packed / per-call operands and across the
+``pallas`` / ``interpret`` backends, and bit-identical to
+``kernels/ref.gemm_blocked`` at the plan's ``block_k`` — asserted by
+``tests/test_gemm_api.py`` and gateable at plan time via
+``plan(..., validate=True)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.gemm import backends as _backends
+from repro.gemm.plan import GemmPlan, PACK_NONE
+from repro.gemm.policy import _bitexact_gate
+
+
+class PlanMismatchError(ValueError):
+    pass
+
+
+def lead_m(x: jax.Array) -> int:
+    """Row count of ``x[..., K]`` flattened to 2-D — the M a plan for
+    this operand must carry."""
+    m = 1
+    for d in x.shape[:-1]:
+        m *= d
+    return m
+
+
+def _check(cond: bool, msg: str):
+    if not cond:
+        raise PlanMismatchError(msg)
+
+
+def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
+    pad = (-x.shape[0]) % mult
+    return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+
+
+def _pad_cols(x: jax.Array, to: int) -> jax.Array:
+    pad = to - x.shape[1]
+    return jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+
+
+def execute(p: GemmPlan, x: jax.Array, w, *, out_dtype=None) -> jax.Array:
+    """y[..., N] = x[..., K] @ w, dispatched per ``p`` (see module doc).
+
+    Shapes and pack blocks are checked against the plan; ``p.dtype`` is
+    cache-keying metadata, NOT an executed constraint — mixed-dtype
+    operands (bf16 activations against fp32-packed weights in the
+    dry-run, and vice versa) are legitimate and promote as jnp.dot
+    would.  The bit-exactness gate (``validate_plan``) attests the
+    block-order accumulation discipline, which holds per operand dtype.
+    """
+    backend = _backends.get_backend(p.backend)
+    lead = x.shape[:-1]
+    _check(x.shape[-1] == p.k,
+           f"operand K={x.shape[-1]} vs plan K={p.k} ({p.describe()})")
+    x2 = x.reshape(-1, p.k)
+    m = x2.shape[0]
+    _check(m == p.m, f"operand M={m} vs plan M={p.m}; plans are "
+                     f"shape-resolved — re-plan for this batch")
+
+    if isinstance(w, packing.PackedWeight):
+        _check((w.k, w.n) == (p.k, p.n),
+               f"packed weight {w.shape} vs plan ({p.k},{p.n})")
+        _check((w.block_n, w.block_k) == (p.block_n, p.block_k),
+               f"pack blocks ({w.block_n},{w.block_k}) vs plan "
+               f"({p.block_n},{p.block_k}); pack with pack_for_plan()")
+        w_p = w.data
+    else:
+        ww = w.T if p.transposed else w
+        _check(ww.shape == (p.k, p.n),
+               f"weight {tuple(ww.shape)} vs plan ({p.k},{p.n})")
+        # The pack decision is the PLAN's, not the backend's: the percall
+        # baseline pays its transpose+pad even when the compute loop runs
+        # through the shape-agnostic xla dot (table3/table6 protocol).
+        # PACK_NONE (the raw-dot analogue) skips it — unless the backend
+        # is a panel kernel that physically needs the blocked layout.
+        if p.pack != PACK_NONE or backend.needs_blocks:
+            w_p = packing.pack_percall(ww, transposed=False,
+                                       block_n=p.block_n,
+                                       block_k=p.block_k)
+        else:
+            w_p = ww
+
+    if w_p.shape[0] != p.k:          # weight K was pack-padded: pad x too
+        x2 = _pad_cols(x2, w_p.shape[0])
+    if backend.needs_blocks:
+        x2 = _pad_rows(x2, p.block_m)
+
+    y = backend.run(x2, w_p, block_m=p.block_m, block_n=p.block_n,
+                    block_k=p.block_k, out_dtype=out_dtype)
+    return y[:m, :p.n].reshape(*lead, p.n)
+
+
+def pack_for_plan(p: GemmPlan, w: jax.Array, *, transposed: bool | None = None,
+                  dtype=None, sharding=None) -> packing.PackedWeight:
+    """Pack ``w`` once with exactly the blocking the plan will execute
+    (the load-time side of the ``prepack`` lever)."""
+    return packing.pack(
+        w, transposed=p.transposed if transposed is None else transposed,
+        block_n=p.block_n, block_k=p.block_k, dtype=dtype,
+        sharding=sharding)
+
+
+def validate_plan(p: GemmPlan) -> bool:
+    """Run (memoized) the autotune bit-exactness gate on the plan's block
+    triple: interpret-mode kernel vs ``kernels/ref.gemm_blocked``."""
+    return _bitexact_gate(p.block_m, p.block_n, p.block_k)

@@ -1,0 +1,95 @@
+"""``GemmPlan`` — the frozen, hashable description of one GEMM dispatch.
+
+A plan is everything the paper decides *above* the inner loop, resolved
+once per shape and reused on every call:
+
+  * the operand geometry (m, n, k, dtype),
+  * which backend runs the compute loop (``xla`` / ``pallas`` /
+    ``interpret`` / anything registered via ``gemm.register_backend``),
+  * the panel blocking (block_m, block_n, block_k) — the paper's
+    (M, Nc, Kc) levers,
+  * the pack decision (``prepack``: pay the weight re-layout once at
+    model load, or accept the per-call pack),
+  * which policy lever produced it (``lever``), and the scheduler model's
+    predicted time (``t_pred``) so callers can log/compare decisions.
+
+Plans carry no arrays: the whole object is static metadata, registered
+with :func:`jax.tree_util.register_static` so it crosses jit / scan /
+checkpoint boundaries as a leafless pytree and can be closed over or
+passed as a static argument without retracing surprises.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+
+LEVER_FINE_PANELS = "fine_panels"   # K >= N: occupancy-sized column panels
+LEVER_PREPACK = "prepack"           # N > K: deep-K pre-packed weight
+
+# Pack decisions a plan can carry (how execute() treats a RAW weight —
+# a PackedWeight operand has already paid its pack at load):
+PACK_PREPACKED = "prepacked"   # weight should be packed once at load
+PACK_PERCALL = "percall"       # transpose+pad inside the call (baseline)
+PACK_NONE = "none"             # no re-layout at all (raw-dot analogue)
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    """Shape-resolved GEMM dispatch decision (see module docstring).
+
+    ``transposed`` records the raw-weight layout execute() will receive
+    ([N, K] llama.cpp convention when True); a ``PackedWeight`` operand
+    ignores it.  ``sharding_key`` keeps plans for differently-placed
+    operands distinct in the cache without holding device objects.
+    """
+    m: int
+    n: int
+    k: int
+    dtype: str
+    backend: str
+    block_m: int
+    block_n: int
+    block_k: int
+    pack: str
+    lever: str
+    t_pred: float = float("nan")
+    occupancy: float = float("nan")
+    transposed: bool = False
+    sharding_key: str = ""
+    validated: bool = False
+
+    # ----------------------------------------------------------- geometry
+    @property
+    def prepack(self) -> bool:
+        """True when the policy wants this weight packed at model load."""
+        return self.pack == PACK_PREPACKED
+
+    @property
+    def m_pad(self) -> int:
+        return math.ceil(self.m / self.block_m) * self.block_m
+
+    @property
+    def n_pad(self) -> int:
+        return math.ceil(self.n / self.block_n) * self.block_n
+
+    @property
+    def k_pad(self) -> int:
+        return math.ceil(self.k / self.block_k) * self.block_k
+
+    @property
+    def grid(self) -> tuple[int, int, int]:
+        return (self.m_pad // self.block_m, self.n_pad // self.block_n,
+                self.k_pad // self.block_k)
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return (self.m, self.n, self.k)
+
+    def describe(self) -> str:
+        """One-line human summary (benchmarks / logs)."""
+        return (f"GemmPlan[{self.m}x{self.n}x{self.k} {self.dtype} "
+                f"-> {self.backend}, blocks=({self.block_m},{self.block_n},"
+                f"{self.block_k}), lever={self.lever}, pack={self.pack}]")

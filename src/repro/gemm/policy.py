@@ -1,0 +1,243 @@
+"""Shape-resolved dispatch policy + the LRU plan cache.
+
+The paper's structural finding (§4, Table 3): all the headroom over
+Accelerate lives in two deployment-level levers chosen *per shape*:
+
+  =============  =============================  =========================
+  shape class    winning lever                  plan it resolves to
+  =============  =============================  =========================
+  K >= N         fine multi-thread panels       ``lever="fine_panels"``:
+                 (QKV / FFN-down class — the    block_n sized for grid
+                 idle-second-block failure of   occupancy by the
+                 coarse panels, paper Fig. 2)   scheduler model;
+                                                per-call pack acceptable
+  N > K          pre-packed weights             ``lever="prepack"``:
+                 (FFN-up / LM-head class —      deep-K blocks
+                 the per-call transpose+pad     (Kc = 2048 analogue),
+                 dominates, paper §3.2)         weight packed at load
+  =============  =============================  =========================
+
+``plan()`` resolves those levers once per ``(shape, dtype, sharding,
+backend)`` and memoizes the result in a bounded LRU cache, so the policy
+runs at model load / first trace, never per call — the plan-then-execute
+separation of BNNS Graph, with the plan inspectable.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitexact, packing, scheduler
+from repro.gemm import backends as _backends
+from repro.gemm.plan import (GemmPlan, LEVER_FINE_PANELS, LEVER_PREPACK,
+                             PACK_NONE, PACK_PERCALL, PACK_PREPACKED)
+from repro.kernels import panel_gemm as _kernel
+
+# Occupancy target of the fine-panel lever: the paper tunes panels against
+# the two AMX blocks; the TPU analogue scores candidates against this many
+# parallel compute units (table5's sweep setting).
+DEFAULT_NUM_CORES = 8
+
+# Column-panel widths the fine lever considers (the paper's Nc in
+# {64..512}); the prepack lever takes the sweep's deployed deep pair.
+FINE_BLOCK_N_CANDIDATES = (128, 256, 512)
+FINE_BLOCK_K = 512
+
+_CACHE_MAXSIZE = 512
+
+CacheInfo = collections.namedtuple(
+    "CacheInfo", ["hits", "misses", "maxsize", "currsize"])
+
+_cache: "collections.OrderedDict[tuple, GemmPlan]" = collections.OrderedDict()
+_cache_lock = threading.Lock()
+_hits = 0
+_misses = 0
+
+
+def plan_cache_info() -> CacheInfo:
+    with _cache_lock:
+        return CacheInfo(_hits, _misses, _CACHE_MAXSIZE, len(_cache))
+
+
+def plan_cache_clear() -> None:
+    global _hits, _misses
+    with _cache_lock:
+        _cache.clear()
+        _hits = _misses = 0
+
+
+def _dtype_name(dtype: Any) -> str:
+    return jnp.dtype(dtype).name
+
+
+def _sharding_key(sharding: Any) -> str:
+    return "" if sharding is None else str(sharding)
+
+
+# ------------------------------------------------------------ lever logic
+def _fine_block_n(m: int, n: int, k: int, *, block_m: int, block_k: int,
+                  num_cores: int) -> int:
+    """Occupancy-sized column panel: pick the candidate width whose
+    scheduler-predicted time is best (the paper's Fig. 2 sweep, online)."""
+    cands = sorted({packing.fit_block(n, c) for c in FINE_BLOCK_N_CANDIDATES})
+
+    def score(bn: int):
+        p = scheduler.plan(m, n, k, block_m=block_m, block_n=bn,
+                           block_k=block_k, num_cores=num_cores)
+        return (p.t_pred, bn)          # tie-break toward finer panels
+
+    return min(cands, key=score)
+
+
+def _resolve(m: int, n: int, k: int, *, dtype: str, backend: str,
+             num_cores: int, block_m: int | None, block_n: int | None,
+             block_k: int | None, pack: str | None, transposed: bool,
+             sharding_key: str, validate: bool) -> GemmPlan:
+    bm = block_m or min(_kernel.DEFAULT_BLOCK_M, _rnd_up(m, 8))
+    if k >= n:                              # lever 1: fine panels
+        lever = LEVER_FINE_PANELS
+        default_pack = PACK_PERCALL
+        bk = block_k or packing.fit_block(k, FINE_BLOCK_K)
+        bn = block_n or _fine_block_n(m, n, k, block_m=bm, block_k=bk,
+                                      num_cores=num_cores)
+    else:                                   # lever 2: pre-pack, deep K
+        lever = LEVER_PREPACK
+        default_pack = PACK_PREPACKED
+        bk = block_k or packing.fit_block(k, _kernel.DEFAULT_BLOCK_K)
+        bn = block_n or packing.fit_block(n, _kernel.DEFAULT_BLOCK_N)
+    pack = pack or default_pack
+    if pack not in (PACK_PREPACKED, PACK_PERCALL, PACK_NONE):
+        raise ValueError(f"unknown pack decision {pack!r}")
+
+    sched = scheduler.plan(m, n, k, block_m=bm, block_n=bn, block_k=bk,
+                           num_cores=num_cores)
+    validated = False
+    if validate:
+        if not _bitexact_gate(bm, bn, bk):
+            raise RuntimeError(
+                f"blocks ({bm},{bn},{bk}) failed the bit-exactness gate "
+                f"vs kernels/ref.gemm_blocked (autotune reject protocol)")
+        validated = True
+    return GemmPlan(m=m, n=n, k=k, dtype=dtype, backend=backend,
+                    block_m=bm, block_n=bn, block_k=bk, pack=pack,
+                    lever=lever, t_pred=sched.t_pred,
+                    occupancy=sched.occupancy, transposed=transposed,
+                    sharding_key=sharding_key, validated=validated)
+
+
+def _rnd_up(x: int, mult: int) -> int:
+    return max(mult, ((x + mult - 1) // mult) * mult)
+
+
+# --------------------------------------------------------- bit-exact gate
+_gate_memo: dict[tuple[int, int, int], bool] = {}
+
+
+def _bitexact_gate(bm: int, bn: int, bk: int, *, reduced_k_blocks: int = 2,
+                   seed: int = 0) -> bool:
+    """core/autotune's reject protocol for one block triple: interpret-mode
+    kernel on a reduced shape with a real K-carry must be BIT-IDENTICAL to
+    the blocked oracle.  Memoized — the gate runs once per triple."""
+    key = (bm, bn, bk)
+    if key in _gate_memo:
+        return _gate_memo[key]
+    from repro.kernels import ref
+    rng = np.random.default_rng(seed)
+    m_r, k_r, n_r = bm, reduced_k_blocks * bk, bn
+    x = jnp.asarray(rng.standard_normal((m_r, k_r)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k_r, n_r)), jnp.float32)
+    y = _kernel.panel_gemm(x, w, block_m=bm, block_n=bn, block_k=bk,
+                           interpret=True)
+    ok = bitexact.bit_identical(np.asarray(y),
+                                np.asarray(ref.gemm_blocked(x, w, bk)))
+    _gate_memo[key] = ok
+    return ok
+
+
+# ------------------------------------------------------------- public API
+def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
+         backend: str | None = None, num_cores: int = DEFAULT_NUM_CORES,
+         block_m: int | None = None, block_n: int | None = None,
+         block_k: int | None = None, pack: str | None = None,
+         transposed: bool = False, sharding: Any = None,
+         validate: bool = False) -> GemmPlan:
+    """Resolve (and cache) the dispatch plan for a ``[m,k] @ [k,n]`` GEMM.
+
+    ``backend=None`` takes the current default (``use_backend`` scope or
+    the process default — never the env var; that compat lives only in
+    the ``core/panel_gemm`` shims).  Explicit ``block_*`` / ``pack``
+    override the policy (benchmark sweeps, baseline paths);
+    ``validate=True`` runs the autotune bit-exactness gate on the
+    resolved blocks before the plan is issued.
+    """
+    global _hits, _misses
+    backend = _backends.resolve_backend(backend)
+    dtype = _dtype_name(dtype)
+    skey = _sharding_key(sharding)
+    key = (int(m), int(n), int(k), dtype, backend, num_cores, block_m,
+           block_n, block_k, pack, bool(transposed), skey, bool(validate))
+    with _cache_lock:
+        hit = _cache.get(key)
+        if hit is not None:
+            _hits += 1
+            _cache.move_to_end(key)
+            return hit
+        _misses += 1
+    p = _resolve(int(m), int(n), int(k), dtype=dtype, backend=backend,
+                 num_cores=num_cores, block_m=block_m, block_n=block_n,
+                 block_k=block_k, pack=pack, transposed=bool(transposed),
+                 sharding_key=skey, validate=validate)
+    with _cache_lock:
+        _cache[key] = p
+        while len(_cache) > _CACHE_MAXSIZE:
+            _cache.popitem(last=False)
+    return p
+
+
+def plan_for_packed(m: int, pw: packing.PackedWeight, *,
+                    backend: str | None = None,
+                    num_cores: int = DEFAULT_NUM_CORES,
+                    validate: bool = False) -> GemmPlan:
+    """Plan for a weight already packed at model load: the block decision
+    was made when the pack happened; the plan adopts it (and still records
+    which lever the policy assigns the shape)."""
+    return plan(m, pw.n, pw.k, dtype=pw.dtype, backend=backend,
+                num_cores=num_cores, block_n=pw.block_n,
+                block_k=pw.block_k, pack=PACK_PREPACKED, validate=validate)
+
+
+def pack_blocks(n: int, k: int, *, m_hint: int = 128,
+                block_n: int | None = None, block_k: int | None = None,
+                num_cores: int = DEFAULT_NUM_CORES) -> tuple[int, int]:
+    """The load-time pack decision, policy-resolved: (block_n, block_k)
+    for a [k, n] weight.  ``m_hint`` is the serving M the plan targets
+    (the paper's S = 128 prefill row panel)."""
+    p = plan(m_hint, n, k, block_n=block_n, block_k=block_k,
+             num_cores=num_cores)
+    return p.block_n, p.block_k
+
+
+def policy_table(shapes, *, m: int | None = None,
+                 num_cores: int = DEFAULT_NUM_CORES) -> list[dict]:
+    """Lever resolution for a set of ``(m, n, k)`` (or ``(n, k)`` with
+    ``m=``) shapes — the paper's twelve-shape table, as data."""
+    rows = []
+    for s in shapes:
+        if len(s) == 2 and m is None:
+            raise ValueError(
+                f"2-tuple shape {s} needs the m= argument (the row count "
+                f"the plans target), e.g. policy_table(shapes, m=128)")
+        mm, n, k = (m, *s) if len(s) == 2 else s
+        p = plan(mm, n, k, num_cores=num_cores)
+        rows.append({
+            "M": p.m, "N": p.n, "K": p.k, "lever": p.lever,
+            "prepack": p.prepack, "block_n": p.block_n,
+            "block_k": p.block_k, "panels": p.grid[0] * p.grid[1],
+            "occupancy": round(p.occupancy, 3),
+            "pred_ms": round(p.t_pred * 1e3, 4),
+        })
+    return rows

@@ -28,6 +28,7 @@ import traceback
 
 import jax
 
+from repro import gemm as gemm_api
 from repro.configs.base import SHAPES, TrainConfig
 from repro.launch.mesh import HW, make_production_mesh
 from repro.models import model_zoo, transformer
@@ -146,7 +147,8 @@ def _ssd_ideal_bytes(cfg, shape, chips: int) -> float:
 def run_cell(arch: str, shape_name: str, mesh_name: str, *,
              packed: bool = True, verbose: bool = True,
              microbatch_per_device: int = 1,
-             train_overrides: dict | None = None) -> dict:
+             train_overrides: dict | None = None,
+             gemm_backend: str | None = None) -> dict:
     cfg = model_zoo.get_config(arch)
     shape = SHAPES[shape_name]
     multi = mesh_name == "multi"
@@ -154,9 +156,14 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
     chips = mesh.size
 
     t0 = time.perf_counter()
-    lowered, extras = _lower_cell(cfg, shape, mesh, packed=packed,
-                                  microbatch_per_device=microbatch_per_device,
-                                  train_overrides=train_overrides)
+    # the use_backend scope covers tracing/lowering, so every gemm plan in
+    # the cell resolves to the requested backend (default: xla — Pallas
+    # can't lower on the forced-host platform this dry-run pins)
+    with gemm_api.use_backend(gemm_backend):
+        lowered, extras = _lower_cell(
+            cfg, shape, mesh, packed=packed,
+            microbatch_per_device=microbatch_per_device,
+            train_overrides=train_overrides)
     t_lower = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -165,6 +172,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):     # jax 0.4.x returns [dict]
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
 
     # Loop-aware walker (XLA's cost_analysis counts scan bodies once —
@@ -279,6 +288,9 @@ def main():
                     help="every non-skipped (arch × shape) cell")
     ap.add_argument("--raw", action="store_true",
                     help="serve steps with unpacked weights (baseline)")
+    ap.add_argument("--gemm-backend", default=None,
+                    choices=gemm_api.list_backends(),
+                    help="GEMM backend the cells plan against")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--microbatch", type=int, default=1)
     ap.add_argument("--skip-existing", action="store_true")
@@ -306,7 +318,8 @@ def main():
             try:
                 rec = run_cell(arch, shape_name, mesh_name,
                                packed=not args.raw,
-                               microbatch_per_device=args.microbatch)
+                               microbatch_per_device=args.microbatch,
+                               gemm_backend=args.gemm_backend)
             except Exception as e:                      # noqa: BLE001
                 failures += 1
                 rec = {"arch": arch, "shape": shape_name,

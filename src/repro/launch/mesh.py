@@ -14,22 +14,26 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
+    auto = compat.axis_type_auto()
+    return compat.make_mesh(
         shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        axis_types=auto and (auto,) * len(axes))
 
 
 def make_host_mesh(model: int = 1):
     """Local mesh over whatever devices exist (smoke tests, examples)."""
     n = jax.device_count()
     assert n % model == 0, (n, model)
-    return jax.make_mesh(
+    auto = compat.axis_type_auto()
+    return compat.make_mesh(
         (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        axis_types=auto and (auto,) * 2)
 
 
 # TPU v5e hardware model used by the roofline (single source of truth).

@@ -13,6 +13,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro import gemm as gemm_api
 from repro.launch.mesh import make_host_mesh
 from repro.models import model_zoo
 from repro.runtime.serve_loop import Engine
@@ -25,6 +26,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--backend", default=None,
+                    choices=gemm_api.list_backends(),
+                    help="GEMM backend for this engine's plans "
+                         "(default: process default, xla on CPU)")
     ap.add_argument("--compare-percall", action="store_true",
                     help="also time the unpacked (per-call) engine")
     args = ap.parse_args()
@@ -40,7 +45,8 @@ def main():
             (args.batch, args.prompt_len, cfg.d_model)), cfg.cdtype)
 
     t0 = time.perf_counter()
-    eng = Engine(cfg, params, mesh=mesh, max_len=args.max_len, packed=True)
+    eng = Engine(cfg, params, mesh=mesh, max_len=args.max_len, packed=True,
+                 backend=args.backend)
     print(f"model load + pack (untimed in per-call metrics): "
           f"{time.perf_counter() - t0:.2f}s")
     if cfg.modality != "text":
@@ -52,7 +58,7 @@ def main():
           f"decode {stats.decode_tps:,.0f} tok/s")
     if args.compare_percall:
         eng2 = Engine(cfg, params, mesh=mesh, max_len=args.max_len,
-                      packed=False)
+                      packed=False, backend=args.backend)
         gen2, stats2 = eng2.generate(prompts, args.max_new)
         print(f"per-call engine: prefill {stats2.prefill_tps:,.0f} tok/s, "
               f"decode {stats2.decode_tps:,.0f} tok/s")

@@ -8,7 +8,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core import panel_gemm as _pg
+from repro import gemm as _gemm
 from repro.core.packing import PackedWeight
 
 
@@ -31,9 +31,16 @@ def dot_dtype(native):
 
 def linear(x: jax.Array, w) -> jax.Array:
     """x[..., K] @ w[K, N].  w may be a raw array or a PackedWeight
-    (pre-packed once at model load — paper lever 2)."""
+    (pre-packed once at model load — paper lever 2).
+
+    Packed weights dispatch through the plan/execute API: the plan is
+    resolved at trace time (shape-keyed LRU cache, so prefill and decode
+    each resolve once) on the backend of the enclosing
+    ``gemm.use_backend`` scope (e.g. the serving Engine's).
+    """
     if isinstance(w, PackedWeight):
-        return _pg.gemm(x, w)
+        p = _gemm.plan_for_packed(_gemm.lead_m(x), w)
+        return _gemm.execute(p, x, w)
     return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
 
 

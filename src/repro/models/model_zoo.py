@@ -15,6 +15,7 @@ import importlib
 import jax
 import jax.numpy as jnp
 
+from repro import gemm as gemm_api
 from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
 from repro.core import packing
 from repro.models import transformer
@@ -157,8 +158,16 @@ _PACKABLE = {
 
 
 def pack_for_inference(cfg: ModelConfig, params, *, block_n=None,
-                       block_k=None, shardings=None) -> dict:
+                       block_k=None, shardings=None,
+                       m_hint: int = PAPER_M) -> dict:
     """Pack every projection weight once at model load (paper §3.2).
+
+    The per-weight (block_n, block_k) decision is the dispatch POLICY's
+    (``gemm.pack_blocks``): each weight's (N, K) resolves a plan at
+    ``m_hint`` rows (the paper's S = 128 prefill panel), so K >= N
+    projections get occupancy-sized fine column panels and N > K
+    projections get the deep-K pre-pack blocks.  Explicit ``block_n`` /
+    ``block_k`` still override (benchmark sweeps).
 
     Stacked per-layer weights (L, K, N) pack along their last two dims;
     lax.scan slices the leading dim, so inside the scan body each
@@ -166,11 +175,12 @@ def pack_for_inference(cfg: ModelConfig, params, *, block_n=None,
     (a matching pytree) re-places each packed array so no resharding
     appears per call.
     """
-    kw = {}
-    if block_n is not None:
-        kw["block_n"] = block_n
-    if block_k is not None:
-        kw["block_k"] = block_k
+    def blocks_for(n, k):
+        # explicit overrides keep the legacy fit-to-dim behavior
+        bn = packing.fit_block(n, block_n) if block_n else None
+        bk = packing.fit_block(k, block_k) if block_k else None
+        return gemm_api.pack_blocks(n, k, m_hint=m_hint,
+                                    block_n=bn, block_k=bk)
 
     def walk(path, node, shard_node):
         if isinstance(node, dict):
@@ -187,16 +197,15 @@ def pack_for_inference(cfg: ModelConfig, params, *, block_n=None,
             shard_node = shard_node.data        # sharding computed on the
         if node.ndim == 3:                          # stacked (L, K, N)
             _, k, n = node.shape
-            bk = packing.fit_block(
-                k, kw.get("block_k", packing._kernel.DEFAULT_BLOCK_K))
-            bn = packing.fit_block(
-                n, kw.get("block_n", packing._kernel.DEFAULT_BLOCK_N))
+            bn, bk = blocks_for(n, k)
             data = jnp.pad(node, ((0, 0), (0, (-k) % bk), (0, (-n) % bn)))
             if shard_node is not None:
                 data = jax.device_put(data, shard_node)
             return packing.PackedWeight(data=data, n=n, k=k, block_n=bn,
                                         block_k=bk)
-        pw = packing.pack(node, **kw)
+        k, n = node.shape
+        bn, bk = blocks_for(n, k)
+        pw = packing.pack(node, block_n=bn, block_k=bk)
         if shard_node is not None:
             pw = dataclasses.replace(
                 pw, data=jax.device_put(pw.data, shard_node))

@@ -24,7 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 
 def _ring(axis: str, size: int, fwd: bool = True):

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import gemm as gemm_api
 from repro.models import model_zoo, transformer
 from repro.parallel import sharding as Sh
 
@@ -48,11 +49,20 @@ class GenStats:
 class Engine:
     def __init__(self, cfg, params, *, mesh=None, max_len: int = 2048,
                  packed: bool = True, block_n: int | None = None,
-                 block_k: int | None = None, donate_cache: bool = True):
+                 block_k: int | None = None, donate_cache: bool = True,
+                 backend: str | None = None):
+        """``backend`` pins this engine's GEMM backend (a registry name
+        from ``repro.gemm.list_backends()``); None keeps the process
+        default.  The choice is scoped to this engine's traces — two
+        engines with different backends coexist in one process, which the
+        old ``REPRO_GEMM_IMPL`` process global could not express."""
         self.cfg = cfg
         self.mesh = mesh
         self.max_len = max_len
         self.packed = packed
+        self.backend = backend
+        if backend is not None:
+            gemm_api.get_backend(backend)       # fail fast on a typo
 
         shard_fn = Sh.activation_sharder(mesh) if mesh is not None else None
         if packed:
@@ -72,13 +82,18 @@ class Engine:
                 self.params = jax.device_put(
                     params, Sh.param_shardings(params, mesh))
 
+        # use_backend wraps the BODY, so it is active while jit traces the
+        # step and every gemm plan inside resolves to this engine's backend
         def _prefill(params, inputs):
-            return transformer.prefill(cfg, params, inputs,
-                                       max_len=max_len, shard_fn=shard_fn)
+            with gemm_api.use_backend(backend):
+                return transformer.prefill(cfg, params, inputs,
+                                           max_len=max_len,
+                                           shard_fn=shard_fn)
 
         def _decode(params, cache, tokens):
-            return transformer.decode_step(cfg, params, cache, tokens,
-                                           shard_fn=shard_fn)
+            with gemm_api.use_backend(backend):
+                return transformer.decode_step(cfg, params, cache, tokens,
+                                               shard_fn=shard_fn)
 
         donate = (1,) if donate_cache else ()
         self._prefill = jax.jit(_prefill)

@@ -1,0 +1,30 @@
+"""Fallback for the optional ``hypothesis`` dev dependency
+(requirements-dev.txt): when it is missing, only the property-based
+tests skip — the plain tests in the same modules still run."""
+import pytest
+
+
+def given(*_a, **_k):
+    def deco(_f):
+        return pytest.mark.skip(
+            reason="hypothesis not installed "
+                   "(pip install -r requirements-dev.txt)")(_f)
+    return deco
+
+
+def settings(*_a, **_k):
+    def deco(f):
+        return f
+    return deco
+
+
+class _Strategies:
+    """Stand-in for ``hypothesis.strategies``: strategy constructors are
+    only evaluated inside @given(...) argument lists, whose results the
+    skip decorator never uses."""
+
+    def __getattr__(self, _name):
+        return lambda *a, **k: None
+
+
+st = _Strategies()

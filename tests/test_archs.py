@@ -87,6 +87,14 @@ def test_prefill_then_decode_matches_full_forward(arch, built):
     b, s = 2, 16
     if cfg.modality != "text":
         pytest.skip("stub frontends exercise prefill only")
+    if cfg.family == "moe":
+        # Expert-capacity drops depend on the ROUTED TOKEN COUNT, so the
+        # (s+1)-token forward and the 1-token decode can drop different
+        # tokens — that's a batching property, not a cache bug.  Route
+        # droplessly so this test isolates the cache invariant.
+        import dataclasses
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=float(cfg.num_experts))
     toks = rng.integers(0, cfg.vocab_size, (b, s + 1)).astype(np.int32)
     logits_p, cache = transformer.prefill(cfg, params,
                                           jnp.asarray(toks[:, :s]),

@@ -1,7 +1,10 @@
 """Data pipeline + optimizer tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,255 @@
+"""Plan/execute GEMM dispatch API tests (the api_redesign acceptance
+grid): policy lever selection on the paper's twelve prefill shapes,
+plan-cache hit/miss/eviction behavior, bit-exactness of execute vs
+kernels/ref in interpret mode, legacy-shim delegation, and the backend
+registry hook.  Deliberately hypothesis-free — this module must run on a
+bare container."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import gemm as G
+from repro.core import bitexact, packing, panel_gemm as legacy
+from repro.kernels import ref
+from repro.models.model_zoo import PAPER_GEMM_SHAPES, PAPER_M
+
+RNG = np.random.default_rng(11)
+
+
+def _rand(shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    G.plan_cache_clear()
+    yield
+    G.plan_cache_clear()
+
+
+# ------------------------------------------------------------------ policy
+@pytest.mark.parametrize("model,op,n,k", PAPER_GEMM_SHAPES)
+def test_policy_levers_on_paper_shapes(model, op, n, k):
+    """The acceptance criterion: K >= N resolves to fine panels, N > K to
+    pre-packed plans — per shape, not per process."""
+    p = G.plan(PAPER_M, n, k)
+    if k >= n:
+        assert p.lever == G.LEVER_FINE_PANELS, (model, op, p)
+        assert not p.prepack
+        assert p.pack == G.PACK_PERCALL
+    else:
+        assert p.lever == G.LEVER_PREPACK, (model, op, p)
+        assert p.prepack
+        assert p.pack == G.PACK_PREPACKED
+        assert p.block_k >= 512          # the deep-K (Kc=2048 class) pack
+
+
+def test_fine_panels_sized_for_occupancy():
+    """K >= N plans feed all cores when the shape allows it (the paper's
+    idle-second-block failure, avoided)."""
+    p = G.plan(128, 2048, 2048, num_cores=8)
+    panels = p.grid[0] * p.grid[1]
+    assert panels >= 8 and p.occupancy == 1.0
+    coarse = G.plan(128, 2048, 2048, num_cores=8, block_n=1024)
+    assert panels > coarse.grid[0] * coarse.grid[1]
+    assert p.t_pred < coarse.t_pred
+
+
+def test_plan_is_static_hashable_pytree():
+    p = G.plan(128, 256, 512)
+    assert jax.tree_util.tree_leaves(p) == []        # no array leaves
+    assert hash(p) == hash(G.plan(128, 256, 512))
+    with pytest.raises(Exception):
+        object.__setattr__  # frozen: direct assignment raises
+        p.backend = "other"  # type: ignore[misc]
+
+
+# ------------------------------------------------------------- plan cache
+def test_plan_cache_hit_miss():
+    info0 = G.plan_cache_info()
+    assert (info0.hits, info0.misses, info0.currsize) == (0, 0, 0)
+    p1 = G.plan(128, 2048, 2048)
+    assert G.plan_cache_info().misses == 1
+    p2 = G.plan(128, 2048, 2048)
+    assert G.plan_cache_info().hits == 1
+    assert p2 is p1                       # cached object, not a rebuild
+    G.plan(128, 2048, 4096)               # different shape -> miss
+    assert G.plan_cache_info().misses == 2
+    G.plan(128, 2048, 2048, backend="interpret")   # key includes backend
+    assert G.plan_cache_info().misses == 3
+    G.plan(64, 2048, 2048)                # key includes m
+    assert G.plan_cache_info().misses == 4
+
+
+def test_plan_cache_keyed_on_sharding_and_dtype():
+    a = G.plan(128, 256, 512, dtype=jnp.float32)
+    b = G.plan(128, 256, 512, dtype=jnp.bfloat16)
+    assert b is not a
+    c = G.plan(128, 256, 512, dtype=jnp.float32, sharding="model:0")
+    assert c is not a and c.sharding_key == "model:0"
+    assert G.plan_cache_info().misses == 3
+
+
+def test_plan_cache_eviction_bounded():
+    from repro.gemm import policy as pol
+    for i in range(pol._CACHE_MAXSIZE + 10):
+        G.plan(8, 128, 128 * (i + 1), block_n=128, block_k=128)
+    assert G.plan_cache_info().currsize <= pol._CACHE_MAXSIZE
+
+
+# ------------------------------------------------- execute / bit-exactness
+@pytest.mark.parametrize("m,n,k", [
+    (128, 256, 256), (128, 512, 128), (256, 128, 384),
+    (128, 2048 // 4, 2048 // 4),   # scaled QKV class (K >= N)
+    (128, 8192 // 16, 2048 // 8),  # scaled FFN1 (N > K)
+    (128, 2048 // 8, 8192 // 16),  # scaled FFN2 (K > N)
+])
+def test_execute_interpret_bitexact_vs_ref(m, n, k):
+    """execute() on the interpret backend is BIT-identical to the blocked
+    oracle at the plan's block_k — packed and per-call operands alike."""
+    x, w = _rand((m, k)), _rand((k, n))
+    p = G.plan(m, n, k, backend="interpret", block_m=128, block_n=128,
+               block_k=min(128, k), validate=True)
+    assert p.validated
+    y_percall = G.execute(p, x, w)
+    pw = G.pack_for_plan(p, w)
+    y_packed = G.execute(p, x, pw)
+    oracle = ref.gemm_blocked(x, w, p.block_k)
+    bitexact.assert_bit_identical(np.asarray(y_percall), np.asarray(oracle))
+    bitexact.assert_bit_identical(np.asarray(y_packed), np.asarray(oracle))
+
+
+def test_execute_policy_plans_bitexact_both_levers():
+    """Policy-resolved (not hand-blocked) plans for one K>=N and one N>K
+    shape, interpret backend, against the XLA reference (allclose) and
+    each other's pack variants (bitwise)."""
+    for (m, n, k) in [(128, 256, 512), (128, 640, 256)]:
+        x, w = _rand((m, k)), _rand((k, n))
+        p = G.plan(m, n, k, backend="interpret")
+        assert G.validate_plan(p)
+        pw = G.pack_for_plan(p, w)
+        y1, y2 = G.execute(p, x, w), G.execute(p, x, pw)
+        bitexact.assert_bit_identical(np.asarray(y1), np.asarray(y2))
+        np.testing.assert_allclose(y1, ref.gemm_xla(x, w),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_execute_batched_leading_dims_and_mismatch_errors():
+    x = _rand((2, 64, 384))
+    w = _rand((384, 256))
+    p = G.plan(128, 256, 384, backend="xla")
+    y = G.execute(p, x, w)
+    np.testing.assert_allclose(
+        y, np.einsum("bsk,kn->bsn", np.asarray(x), np.asarray(w)),
+        rtol=1e-4, atol=1e-4)
+    with pytest.raises(G.PlanMismatchError):
+        G.execute(p, _rand((64, 384)), w)          # M != plan.m
+    with pytest.raises(G.PlanMismatchError):
+        G.execute(G.plan(128, 256, 512), _rand((2, 64, 384)), w)  # K
+    pw_other = packing.pack(w, block_n=256, block_k=384)
+    with pytest.raises(G.PlanMismatchError):
+        G.execute(p, x, pw_other)                  # pack blocks != plan
+
+
+def test_pack_none_skips_relayout_on_xla():
+    """The raw-dot analogue: PACK_NONE + xla backend must equal the plain
+    XLA dot bitwise (no padding, no re-layout in the way)."""
+    x, w = _rand((100, 300)), _rand((300, 200))
+    p = G.plan(100, 200, 300, backend="xla", pack=G.PACK_NONE)
+    bitexact.assert_bit_identical(
+        np.asarray(G.execute(p, x, w)), np.asarray(ref.gemm_xla(x, w)))
+
+
+# -------------------------------------------------------------- legacy shims
+def test_legacy_entry_points_delegate_and_deprecate():
+    x, w = _rand((128, 384)), _rand((384, 256))
+    pw = packing.pack(w, block_n=128, block_k=128)
+    with pytest.warns(DeprecationWarning):
+        y_packed = legacy.gemm(x, pw, impl="interpret")
+    with pytest.warns(DeprecationWarning):
+        y_percall = legacy.gemm_percall(x, w, block_n=128, block_k=128,
+                                        impl="interpret")
+    with pytest.warns(DeprecationWarning):
+        y_xla = legacy.gemm_xla(x, w)
+    bitexact.assert_bit_identical(np.asarray(y_packed),
+                                  np.asarray(y_percall))
+    np.testing.assert_allclose(y_packed, y_xla, rtol=1e-4, atol=1e-4)
+    # the shims go through the same plan cache as native callers
+    assert G.plan_cache_info().misses >= 3
+
+
+def test_legacy_env_var_honored_only_by_shims(monkeypatch):
+    """REPRO_GEMM_IMPL steers the shims (compat) but never a native plan."""
+    monkeypatch.setenv("REPRO_GEMM_IMPL", "interpret")
+    x, w = _rand((8, 128)), _rand((128, 128))
+    with pytest.warns(DeprecationWarning):
+        legacy.gemm_percall(x, w, block_n=128, block_k=128)
+    assert any(p.backend == "interpret"
+               for p in _cached_plans())           # shim respected it
+    p = G.plan(8, 128, 128)
+    assert p.backend == "xla"                      # native default did not
+
+
+def _cached_plans():
+    from repro.gemm import policy as pol
+    with pol._cache_lock:
+        return list(pol._cache.values())
+
+
+# --------------------------------------------------------- backend registry
+def test_register_backend_hook():
+    calls = []
+
+    def run(x_p, w_p, *, block_m, block_n, block_k, out_dtype):
+        calls.append((x_p.shape, w_p.shape))
+        return jnp.dot(x_p, w_p,
+                       preferred_element_type=jnp.float32).astype(
+            out_dtype or x_p.dtype)
+
+    G.register_backend("test-custom", run, description="unit-test")
+    try:
+        assert "test-custom" in G.list_backends()
+        x, w = _rand((16, 128)), _rand((128, 128))
+        p = G.plan(16, 128, 128, backend="test-custom", block_m=16,
+                   block_n=128, block_k=128)
+        y = G.execute(p, x, w)
+        assert calls, "custom backend was not dispatched"
+        np.testing.assert_allclose(y, ref.gemm_xla(x, w), rtol=1e-5,
+                                   atol=1e-5)
+        with pytest.raises(ValueError):
+            G.register_backend("test-custom", run)   # no silent overwrite
+    finally:
+        G.unregister_backend("test-custom")
+    with pytest.raises(G.UnknownBackendError):
+        G.plan(16, 128, 128, backend="test-custom")
+    with pytest.raises(ValueError):
+        G.unregister_backend("xla")                  # builtins protected
+
+
+def test_use_backend_scope_nests():
+    assert G.default_backend() == "xla"
+    with G.use_backend("interpret"):
+        assert G.default_backend() == "interpret"
+        with G.use_backend("pallas"):
+            assert G.default_backend() == "pallas"
+        assert G.default_backend() == "interpret"
+        assert G.plan(8, 128, 128).backend == "interpret"
+    assert G.default_backend() == "xla"
+    with G.use_backend(None):                        # optional scope no-op
+        assert G.default_backend() == "xla"
+
+
+# ------------------------------------------------------------ model path
+def test_linear_packed_routes_through_plan_cache():
+    from repro.models.layers import linear
+    w = _rand((384, 256))
+    pw = packing.pack(w, block_n=128, block_k=128)
+    x = _rand((4, 32, 384))
+    y = linear(x, pw)
+    np.testing.assert_allclose(
+        y, np.einsum("bsk,kn->bsn", np.asarray(x), np.asarray(w)),
+        rtol=1e-4, atol=1e-4)
+    assert G.plan_cache_info().misses >= 1
+    linear(x, pw)
+    assert G.plan_cache_info().hits >= 1

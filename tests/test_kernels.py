@@ -5,7 +5,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import bitexact
 from repro.kernels import ops, ref

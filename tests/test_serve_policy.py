@@ -1,7 +1,10 @@
 """Serving placement policy + pack block-fitting tests (§Perf C1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -3,7 +3,10 @@ production meshes (specs only — no 512-device runtime needed), and
 hypothesis properties of fit_spec."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
 
 import jax
 from jax.sharding import PartitionSpec as P
