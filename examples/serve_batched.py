@@ -1,14 +1,21 @@
 """End-to-end serving driver — the paper's deployment scenario.
 
 Loads a model, packs every projection weight once (untimed model-load
-phase, paper §3.2), then serves a queue of batched requests through the
-slot-pool engine, reporting prefill/decode tokens-per-second for the
-packed engine vs the per-call engine over identical requests — the
-framework-native analogue of the paper's llama.cpp integration (§4.7),
-where the pre-packed path lifted full-forward throughput 291→420 tok/s.
+phase, paper §3.2), then serves a queue of mixed-length requests two
+ways over the SAME packed engine:
+
+  * the legacy phase-locked loop (``serve_chunked``): sequential static
+    batches, every slot waiting for its chunk's slowest request;
+  * real continuous batching (``serve``): slot refill mid-generation,
+    paged KV cache, chunked prefill admission (docs/serving.md).
+
+and reports useful generated tokens/s plus per-request latency
+percentiles for the continuous pool — the framework-native analogue of
+the paper's llama.cpp integration (§4.7), where the pre-packed path
+lifted full-forward throughput 291→420 tok/s.
 
 Run: PYTHONPATH=src python examples/serve_batched.py [--arch deepseek-7b]
-     [--requests 12] [--prompt-len 128] [--max-new 16]
+     [--requests 12] [--prompt-len 64] [--max-new 16] [--batch-slots 4]
 """
 import argparse
 import time
@@ -25,9 +32,11 @@ def main():
     ap.add_argument("--arch", default="deepseek-7b",
                     choices=model_zoo.list_archs())
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--prompt-len", type=int, default=128)
+    ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch-slots", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = model_zoo.reduced_config(model_zoo.get_config(args.arch))
@@ -39,20 +48,45 @@ def main():
     requests = [rng.integers(0, cfg.vocab_size,
                              rng.integers(8, args.prompt_len + 1))
                 .astype(np.int32) for _ in range(args.requests)]
+    # heavy-tailed generation budgets: mostly short, some long
+    mns = [int(rng.integers(args.max_new // 2, args.max_new + 1))
+           if rng.random() < 0.25 else int(rng.integers(2, 6))
+           for _ in range(args.requests)]
+    useful = sum(mns)
+    max_len = args.prompt_len + args.max_new
+    max_len += (-max_len) % args.page_size
 
-    for packed in (True, False):
-        t0 = time.perf_counter()
-        eng = Engine(cfg, params, mesh=mesh, max_len=args.prompt_len
-                     + args.max_new, packed=packed)
-        load_s = time.perf_counter() - t0
-        outs, stats = eng.serve(requests, batch_slots=args.batch_slots,
-                                prompt_len=args.prompt_len,
-                                max_new_tokens=args.max_new)
-        label = "packed (proposed)" if packed else "per-call (baseline)"
-        print(f"{label:22s} load {load_s:5.2f}s | "
-              f"prefill {stats.prefill_tps:8,.0f} tok/s | "
-              f"decode {stats.decode_tps:8,.0f} tok/s | "
-              f"{len(outs)} requests served")
+    t0 = time.perf_counter()
+    eng = Engine(cfg, params, mesh=mesh, max_len=max_len, packed=True)
+    print(f"model load + pack (untimed): {time.perf_counter() - t0:.2f}s")
+
+    # warm both paths' traces (compile is part of model load, not serving)
+    warm = requests[:2]
+    eng.serve_chunked(warm, batch_slots=args.batch_slots,
+                      prompt_len=args.prompt_len, max_new_tokens=2)
+    eng.serve(warm, batch_slots=args.batch_slots, max_new_tokens=2,
+              prefill_chunk=args.prefill_chunk, page_size=args.page_size)
+
+    t0 = time.perf_counter()
+    eng.serve_chunked(requests, batch_slots=args.batch_slots,
+                      prompt_len=args.prompt_len, max_new_tokens=mns)
+    t_old = time.perf_counter() - t0
+    print(f"{'phase-locked (legacy)':24s} {useful / t_old:8,.0f} useful "
+          f"tok/s  ({useful} tokens, {t_old:.2f}s)")
+
+    t0 = time.perf_counter()
+    outs, stats = eng.serve(requests, batch_slots=args.batch_slots,
+                            max_new_tokens=mns,
+                            prefill_chunk=args.prefill_chunk,
+                            page_size=args.page_size)
+    t_new = time.perf_counter() - t0
+    print(f"{'continuous batching':24s} {useful / t_new:8,.0f} useful "
+          f"tok/s  ({len(outs)} requests, {t_new:.2f}s, "
+          f"{t_old / t_new:.2f}x)")
+    qw95 = stats.percentile("queue_wait_s", 95) * 1e3
+    tf95 = stats.percentile("ttft_s", 95) * 1e3
+    print(f"  queue wait p95 {qw95:.1f} ms | TTFT p95 {tf95:.1f} ms "
+          f"(dispatch-side; pass sync_per_step=True for exact latency)")
 
 
 if __name__ == "__main__":

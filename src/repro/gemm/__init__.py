@@ -19,15 +19,16 @@ from repro.gemm.execute import (PlanMismatchError, execute, lead_m,
                                 pack_for_plan, validate_plan)
 from repro.gemm.plan import (GemmPlan, LEVER_FINE_PANELS, LEVER_PREPACK,
                              PACK_NONE, PACK_PERCALL, PACK_PREPACKED)
-from repro.gemm.policy import (DEFAULT_NUM_CORES, pack_blocks, plan,
+from repro.gemm.policy import (DEFAULT_NUM_CORES, PREFILL_M_BUCKETS,
+                               bucket_m, pack_blocks, plan,
                                plan_cache_clear, plan_cache_info,
                                plan_for_packed, policy_table)
 
 __all__ = [
     "Backend", "GemmPlan", "PlanMismatchError", "UnknownBackendError",
     "LEVER_FINE_PANELS", "LEVER_PREPACK", "DEFAULT_NUM_CORES",
-    "PACK_NONE", "PACK_PERCALL", "PACK_PREPACKED",
-    "default_backend", "execute", "get_backend", "lead_m",
+    "PACK_NONE", "PACK_PERCALL", "PACK_PREPACKED", "PREFILL_M_BUCKETS",
+    "bucket_m", "default_backend", "execute", "get_backend", "lead_m",
     "list_backends",
     "pack_blocks", "pack_for_plan", "plan", "plan_cache_clear",
     "plan_cache_info", "plan_for_packed", "policy_table",

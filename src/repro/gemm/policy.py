@@ -133,6 +133,27 @@ def _rnd_up(x: int, mult: int) -> int:
     return max(mult, ((x + mult - 1) // mult) * mult)
 
 
+# --------------------------------------- chunked-prefill plan-key buckets
+# Static admission widths the continuous-batching pool pads prefill
+# chunks to (docs/serving.md).  Plans are keyed on exact M, so a ragged
+# stream of chunk tails (1..C rows) would resolve a fresh plan per
+# length; padding every chunk to a bucket collapses the whole
+# mixed-length request mix onto a handful of stable plan keys — after
+# the first admission cycle, ``plan_cache_info().misses`` stops moving.
+PREFILL_M_BUCKETS = (8, 16, 32, 64, 128)
+
+
+def bucket_m(m: int) -> int:
+    """Smallest static chunk bucket holding ``m`` rows (beyond the last
+    bucket: the next multiple of 128, the paper's prefill row panel)."""
+    if m < 1:
+        raise ValueError(f"m={m}: need at least one row")
+    for b in PREFILL_M_BUCKETS:
+        if m <= b:
+            return b
+    return _rnd_up(m, 128)
+
+
 # --------------------------------------------------------- bit-exact gate
 _gate_memo: dict[tuple[int, int, int], bool] = {}
 

@@ -4,6 +4,12 @@ Runs the packed-weight engine (paper deployment) against the per-call and
 raw-XLA baselines on the same prompts, reporting prefill/decode
 tokens-per-second — the framework-native form of the paper's llama.cpp
 integration (§4.7).
+
+With ``--requests N`` it also serves a mixed-length request stream
+through the continuous-batching pool (``--batch-slots`` slots, chunked
+prefill admission of ``--prefill-chunk`` rows) and reports per-request
+latency percentiles: queue wait, time-to-first-token, and per-request
+decode tokens/s — the stats fields docs/serving.md describes.
 """
 from __future__ import annotations
 
@@ -19,6 +25,11 @@ from repro.models import model_zoo
 from repro.runtime.serve_loop import Engine
 
 
+def _pct(stats, field):
+    return (stats.percentile(field, 50) * 1e3,
+            stats.percentile(field, 95) * 1e3)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=model_zoo.list_archs())
@@ -32,6 +43,17 @@ def main():
                          "(default: process default, xla on CPU)")
     ap.add_argument("--compare-percall", action="store_true",
                     help="also time the unpacked (per-call) engine")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="serve N mixed-length requests through the "
+                         "continuous-batching pool and report "
+                         "per-request percentiles")
+    ap.add_argument("--batch-slots", type=int, default=4,
+                    help="slot-pool width for continuous batching")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="chunked-prefill admission width (rows); padded "
+                         "to a gemm.bucket_m bucket")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size (tokens); must divide --max-len")
     args = ap.parse_args()
 
     cfg = model_zoo.reduced_config(model_zoo.get_config(args.arch))
@@ -63,6 +85,28 @@ def main():
         print(f"per-call engine: prefill {stats2.prefill_tps:,.0f} tok/s, "
               f"decode {stats2.decode_tps:,.0f} tok/s")
         print("outputs identical:", bool(jnp.array_equal(gen, gen2)))
+
+    if args.requests > 0:
+        reqs = [rng.integers(0, cfg.vocab_size,
+                             rng.integers(4, args.prompt_len + 1))
+                .astype(np.int32) for _ in range(args.requests)]
+        mns = [int(m) for m in
+               rng.integers(2, args.max_new + 1, args.requests)]
+        outs, sstats = eng.serve(
+            reqs, batch_slots=args.batch_slots, max_new_tokens=mns,
+            prefill_chunk=args.prefill_chunk, page_size=args.page_size,
+            sync_per_step=True)     # exact TTFT / queue-wait percentiles
+        qw = _pct(sstats, "queue_wait_s")
+        tf = _pct(sstats, "ttft_s")
+        print(f"continuous batching ({args.requests} requests, "
+              f"{args.batch_slots} slots, chunk {args.prefill_chunk}):")
+        print(f"  aggregate: {sstats.total_tps:,.0f} generated tok/s "
+              f"({sstats.decode_tokens} tokens in {sstats.wall_s:.2f}s)")
+        print(f"  queue wait  p50 {qw[0]:8.1f} ms   p95 {qw[1]:8.1f} ms")
+        print(f"  TTFT        p50 {tf[0]:8.1f} ms   p95 {tf[1]:8.1f} ms")
+        print(f"  per-request decode tok/s: "
+              f"p50 {sstats.percentile('decode_tps', 50):,.0f}   "
+              f"p5 {sstats.percentile('decode_tps', 5):,.0f}")
 
 
 if __name__ == "__main__":

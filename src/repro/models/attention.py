@@ -40,7 +40,10 @@ def blocked_attention(
     window=None,                   # None | int | traced int32 (<=0 => full)
     softcap: float | None = None,
     kv_len=None,                   # traced valid-cache length (default T)
-    q_offset=0,                    # traced start position of q row 0
+    q_offset=0,                    # traced start position of q row 0:
+                                   # scalar, or [B] per-slot offsets
+                                   # (continuous-batching decode, where
+                                   # every slot sits at its own length)
     k_pos=None,                    # [B, T] explicit key positions (ring
                                    # caches); -1 marks an empty slot
     chunk: int = 512,
@@ -63,9 +66,13 @@ def blocked_attention(
         k_pos = jnp.broadcast_to(jnp.arange(tp)[None], (b, tp))
         k_pos = jnp.where(k_pos < kv_len, k_pos, -1)
 
+    q_off = jnp.asarray(q_offset, jnp.int32)
+    if q_off.ndim == 0:
+        q_off = jnp.broadcast_to(q_off, (b,))
+    q_pos2d = q_off[:, None] + jnp.arange(s, dtype=jnp.int32)[None]  # [B,S]
+
     if USE_FLASH_VJP:
-        q_pos_f = jnp.broadcast_to(
-            (q_offset + jnp.arange(s)).astype(jnp.float32)[None], (b, s))
+        q_pos_f = q_pos2d.astype(jnp.float32)
         if window is None:
             window_f = jnp.zeros((), jnp.float32)       # disabled
         else:
@@ -75,7 +82,6 @@ def blocked_attention(
             scale, causal, softcap, chunk)
 
     qg = q.reshape(b, s, hkv, g, d).astype(jnp.float32)
-    q_pos = q_offset + jnp.arange(s)
 
     kc = k.reshape(b, nc, chunk, hkv, d).swapaxes(0, 1)     # [nc,B,c,Hkv,D]
     vc = v.reshape(b, nc, chunk, hkv, dv).swapaxes(0, 1)
@@ -90,7 +96,7 @@ def blocked_attention(
         if softcap is not None:
             s_blk = softcap * jnp.tanh(s_blk / softcap)
         kp = p_c[:, None, :]                                # [B,1,c]
-        qp = q_pos[None, :, None]                           # [1,S,1]
+        qp = q_pos2d[:, :, None]                            # [B,S,1]
         mask = kp >= 0
         if causal:
             mask &= qp >= kp
@@ -167,10 +173,34 @@ def _update_ring_cache(cache, k, v, cache_index, s):
     return new, ck, cv, cp, None, cache_index
 
 
+def _update_paged_cache(cache, k, v, page_size):
+    """Continuous-batching paged cache (runtime/kv_cache): scatter the new
+    tokens of every slot at its own length, then gather the logical-order
+    dense view.  The gathered view has the same length and chunk layout as
+    the dense ``[B, max_len]`` cache, and masked positions contribute
+    exact zeros, so attention here is bit-identical to the dense path —
+    the serving parity gate (tests/test_serving.py) rests on this."""
+    from repro.runtime import kv_cache as KV
+    pt, lens = cache["page_table"], cache["lens"]
+    wm = cache.get("write_mask")
+    s = k.shape[1]
+    pk = KV.paged_update(cache["pages_k"], k, pt, lens, page_size,
+                         write_mask=wm)
+    pv = KV.paged_update(cache["pages_v"], v, pt, lens, page_size,
+                         write_mask=wm)
+    k_d = KV.paged_gather(pk, pt, page_size)
+    v_d = KV.paged_gather(pv, pt, page_size)
+    t_view = k_d.shape[1]
+    k_pos = jnp.arange(t_view, dtype=jnp.int32)[None, :]
+    k_pos = jnp.where(k_pos < lens[:, None] + s, k_pos, -1)
+    return {"pages_k": pk, "pages_v": pv}, k_d, v_d, k_pos, None, lens
+
+
 def gqa_attention(p, cfg, x, *, positions, window=None, cache=None,
-                  cache_index=None):
+                  cache_index=None, page_size=None):
     """GQA attention.  cache: dict(k=[B,T,Hkv,D], v=..., pos=... for ring)
-    updated at cache_index.  Returns (out, new_cache)."""
+    updated at cache_index, or a paged-cache view (pages_k/pages_v +
+    page_table/lens, per-slot offsets).  Returns (out, new_cache)."""
     from repro.models import layers as L
     b, s, _ = x.shape
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -183,7 +213,10 @@ def gqa_attention(p, cfg, x, *, positions, window=None, cache=None,
 
     new_cache, k_pos, kv_len, q_offset = None, None, s, 0
     if cache is not None:
-        if "pos" in cache:
+        if "pages_k" in cache:
+            new_cache, k, v, k_pos, kv_len, q_offset = _update_paged_cache(
+                cache, k, v, page_size)
+        elif "pos" in cache:
             new_cache, k, v, k_pos, kv_len, q_offset = _update_ring_cache(
                 cache, k, v, cache_index, s)
         else:

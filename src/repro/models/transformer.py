@@ -116,14 +116,16 @@ def init_cache(cfg, batch: int, max_len: int):
 
 # ------------------------------------------------------------------ layers
 def _layer_forward(cfg, lp, x, *, window_l, positions, cache_l, cache_index,
-                   mode, shard_fn=None):
+                   mode, shard_fn=None, page_size=None):
     """One decoder layer.  Returns (x, new_cache_l, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps, cfg.norm_plus_one)
 
     attn_cache = None
-    if cache_l is not None and "k" in cache_l:
+    if cache_l is not None and "pages_k" in cache_l:
+        attn_cache = cache_l          # paged view incl. page_table/lens
+    elif cache_l is not None and "k" in cache_l:
         attn_cache = {k: cache_l[k] for k in ("k", "v", "pos")
                       if k in cache_l}
     if cache_l is not None and "ckv" in cache_l:
@@ -135,7 +137,8 @@ def _layer_forward(cfg, lp, x, *, window_l, positions, cache_l, cache_index,
     if cfg.attention_kind == "gqa":
         out, nc = A.gqa_attention(lp["attn"], cfg, h, positions=positions,
                                   window=window_l, cache=attn_cache,
-                                  cache_index=cache_index)
+                                  cache_index=cache_index,
+                                  page_size=page_size)
         if nc:
             new_cache.update(nc)
     elif cfg.attention_kind == "mla":
@@ -189,15 +192,25 @@ def _layer_forward(cfg, lp, x, *, window_l, positions, cache_l, cache_index,
 
 # ----------------------------------------------------------------- forward
 def forward(cfg, params, inputs, *, cache=None, mode: str = "train",
-            logits_mode: str = "all", shard_fn=None):
+            logits_mode: str = "all", shard_fn=None, page_size=None,
+            logit_index=None):
     """Run the stack.
 
     inputs: int tokens [B, S] (text) or embeddings [B, S, d] (stub
     frontends).  mode: train | prefill | decode.  Returns
     (logits, new_cache, aux_loss).  shard_fn: optional activation
     sharding-constraint hook (parallel/sharding.activation_sharder).
+
+    A *paged* cache (dict with ``page_table``/``lens``, see
+    runtime/kv_cache) serves the continuous-batching pool: positions are
+    per-slot (``lens[b] + i``) and KV reads/writes go through the slot's
+    page table, so one static-shape trace serves every mix of slot
+    progress.  ``logits_mode="index"`` computes logits for the single row
+    ``logit_index`` (traced) — the last *real* row of a padded prefill
+    chunk.
     """
     assert mode in ("train", "prefill", "decode")
+    assert logits_mode in ("all", "last", "none", "index")
     shard = shard_fn or (lambda x, *names: x)
     if cfg.modality == "text":
         x = L.embed_tokens(params["embed"], inputs).astype(cfg.cdtype)
@@ -207,14 +220,32 @@ def forward(cfg, params, inputs, *, cache=None, mode: str = "train",
         x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype)
     x = shard(x, "batch", "seq", "d_model")
 
-    cache_index = cache["index"] if cache is not None else 0
+    paged = cache is not None and "page_table" in cache
     s = x.shape[1]
-    positions = (jnp.arange(s) if mode != "decode"
-                 else cache_index + jnp.arange(s))
+    if paged:
+        if cfg.attention_kind != "gqa":
+            raise NotImplementedError(
+                f"paged decode supports GQA archs; got "
+                f"{cfg.attention_kind!r}")
+        if page_size is None:
+            raise ValueError("paged cache needs page_size")
+        cache_index = None
+        positions = (cache["lens"][:, None]
+                     + jnp.arange(s, dtype=jnp.int32)[None])    # [B, S]
+    else:
+        cache_index = cache["index"] if cache is not None else 0
+        positions = (jnp.arange(s) if mode != "decode"
+                     else cache_index + jnp.arange(s))
     w_arr = jnp.asarray(window_pattern(cfg))
 
     cache_layers = cache["layers"] if cache is not None else None
     has_cache = cache_layers is not None
+    # Slot bookkeeping rides OUTSIDE the per-layer subtree: every layer
+    # sees the same page_table/lens/write_mask, only the pages differ.
+    paged_extra = None
+    if paged:
+        paged_extra = {k: cache[k] for k in
+                       ("page_table", "lens", "write_mask") if k in cache}
 
     # Cache rides the scan CARRY and is updated in place per layer
     # (dynamic_update_index on the stacked buffers).  The xs/ys
@@ -227,9 +258,12 @@ def forward(cfg, params, inputs, *, cache=None, mode: str = "train",
         c_l = (None if cl is None else
                jax.tree.map(lambda buf: jax.lax.dynamic_index_in_dim(
                    buf, li, 0, keepdims=False), cl))
+        if c_l is not None and paged_extra is not None:
+            c_l = {**c_l, **paged_extra}
         x, new_c, a = _layer_forward(
             cfg, lp, x, window_l=w_l, positions=positions, cache_l=c_l,
-            cache_index=cache_index, mode=mode, shard_fn=shard)
+            cache_index=cache_index, mode=mode, shard_fn=shard,
+            page_size=page_size)
         if new_c is not None:
             cl = jax.tree.map(
                 lambda buf, new: jax.lax.dynamic_update_index_in_dim(
@@ -250,6 +284,10 @@ def forward(cfg, params, inputs, *, cache=None, mode: str = "train",
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norm_plus_one)
     if logits_mode == "last":
         x = x[:, -1:]
+    elif logits_mode == "index":
+        # single-row head, same [B, 1, d] GEMM shape as "last" — keeps
+        # the padded-final-chunk logits bit-identical to one-shot prefill
+        x = jax.lax.dynamic_slice_in_dim(x, logit_index, 1, axis=1)
     head = (params["embed"].T if (cfg.tie_embeddings
                                   and cfg.modality == "text")
             else params["lm_head"])
@@ -261,8 +299,13 @@ def forward(cfg, params, inputs, *, cache=None, mode: str = "train",
 
     new_cache = None
     if has_cache:
-        new_cache = {"layers": new_cache_layers,
-                     "index": cache_index + s}
+        if paged:
+            # lens/page_table are host-owned (the scheduler advances
+            # them between steps); pass through unchanged
+            new_cache = dict(cache, layers=new_cache_layers)
+        else:
+            new_cache = {"layers": new_cache_layers,
+                         "index": cache_index + s}
     return logits, new_cache, aux / cfg.num_layers
 
 
@@ -289,4 +332,34 @@ def decode_step(cfg, params, cache, tokens, *, shard_fn=None):
     logits, cache, _ = forward(cfg, params, tokens, cache=cache,
                                mode="decode", logits_mode="last",
                                shard_fn=shard_fn)
+    return logits[:, 0], cache
+
+
+# -------------------------------------------- continuous-batching steps
+def prefill_chunk(cfg, params, cache, tokens, *, page_size, logit_index,
+                  shard_fn=None):
+    """One chunked-prefill admission step against a paged cache.
+
+    tokens: [B, C] — a fixed-width chunk of one (or more) prompts, padded
+    past the prompt end; the pad rows' KV lands beyond the slot's length
+    counter and is either masked or overwritten before it is ever read.
+    Returns (logits [B, V] for row ``logit_index``, cache) — callers use
+    the logits only on a prompt's final chunk.
+    """
+    logits, cache, _ = forward(cfg, params, tokens, cache=cache,
+                               mode="prefill", logits_mode="index",
+                               logit_index=logit_index,
+                               page_size=page_size, shard_fn=shard_fn)
+    return logits[:, 0], cache
+
+
+def paged_decode_step(cfg, params, cache, tokens, *, page_size,
+                      shard_fn=None):
+    """One decode step for the whole slot pool against a paged cache:
+    per-slot positions come from ``cache['lens']``; slots outside
+    ``cache['write_mask']`` (idle / still prefilling) write nothing and
+    their logits are discarded by the scheduler."""
+    logits, cache, _ = forward(cfg, params, tokens, cache=cache,
+                               mode="decode", logits_mode="last",
+                               page_size=page_size, shard_fn=shard_fn)
     return logits[:, 0], cache

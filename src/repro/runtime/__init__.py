@@ -1,7 +1,13 @@
-"""Runtime: training loop, serving engine, fault tolerance."""
-from repro.runtime import fault_tolerance, serve_loop, train_loop
+"""Runtime: training loop, serving engine + continuous batching, fault
+tolerance."""
+from repro.runtime import (batching, fault_tolerance, kv_cache, serve_loop,
+                           train_loop)
+from repro.runtime.batching import ContinuousBatchingScheduler, ServeStats
+from repro.runtime.kv_cache import PagedKVCache
 from repro.runtime.train_loop import TrainState, make_train_step, train
 from repro.runtime.serve_loop import Engine
 
-__all__ = ["fault_tolerance", "serve_loop", "train_loop", "TrainState",
-           "make_train_step", "train", "Engine"]
+__all__ = ["batching", "fault_tolerance", "kv_cache", "serve_loop",
+           "train_loop", "TrainState", "make_train_step", "train",
+           "Engine", "ContinuousBatchingScheduler", "ServeStats",
+           "PagedKVCache"]

@@ -1,0 +1,373 @@
+"""Continuous batching: slot-refill scheduler + chunked prefill admission.
+
+The paper's throughput discipline — pack once at load, keep every
+compute block busy with fine panels each step — dies in a serving loop
+that phase-locks a static batch: one slow request holds ``batch_slots``
+slots hostage for ``max_new_tokens`` steps.  This module replaces that
+loop with a real scheduler over a *static-shape* slot pool:
+
+  * **Slot refill mid-generation.**  Requests queue FIFO; a slot whose
+    request finishes is freed and refilled immediately.  Shapes never
+    change — the decode step is always ``[batch_slots, 1]`` with a
+    per-slot length vector and write mask — so nothing recompiles and no
+    GEMM replans (``plan_cache_info().misses`` is flat in steady state).
+  * **Paged KV** (runtime/kv_cache): a refilled slot reuses the pages its
+    predecessor freed instead of re-allocating ``[B, max_len]``.
+  * **Chunked prefill admission.**  New prompts prefill in fixed-width
+    chunks (padded to a ``gemm.bucket_m`` bucket) interleaved with decode
+    steps, so admission never stalls decode for a whole prompt and the
+    K>=N fine-panel plans stay hot across both phases.
+
+Scheduling is host-side and deliberately simple: per tick, (1) admit
+from the queue into idle slots while the page budget holds, (2) run one
+prefill chunk for the earliest-admitted prefilling slot, (3) run one
+decode step for every decoding slot.  The device work is the Engine's
+jitted ``prefill_chunk`` / ``decode_step``; this module never traces.
+
+Outputs are bit-identical to per-request greedy ``Engine.generate`` —
+the serving analogue of the paper's bit-exactness gate, enforced by
+tests/test_serving.py.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import gemm as gemm_api
+from repro.runtime import kv_cache as KV
+
+
+# ------------------------------------------------------------------ stats
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request serving latency record (all seconds / tokens)."""
+    rid: int
+    prompt_len: int
+    new_tokens: int
+    queue_wait_s: float          # enqueue -> admitted to a slot
+    ttft_s: float                # enqueue -> first token emitted
+    total_s: float               # enqueue -> finished
+    decode_tps: float            # new_tokens over first-token -> finish
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Aggregate + per-request serving stats.
+
+    Token counts follow the live-slot, non-pad discipline:
+    ``prefill_tokens`` counts true prompt tokens (never chunk padding or
+    dead slots); ``decode_tokens`` counts tokens actually emitted to a
+    request (the first, prefill-sampled token included).
+    """
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    wall_s: float = 0.0
+    requests: list[RequestStats] = dataclasses.field(default_factory=list)
+
+    @property
+    def prefill_tps(self):
+        return self.prefill_tokens / max(self.prefill_s, 1e-9)
+
+    @property
+    def decode_tps(self):
+        return self.decode_tokens / max(self.decode_s, 1e-9)
+
+    @property
+    def total_tps(self):
+        """Emitted tokens over wall time — the cross-engine comparable."""
+        return self.decode_tokens / max(self.wall_s, 1e-9)
+
+    def percentile(self, field: str, q: float) -> float:
+        vals = [getattr(r, field) for r in self.requests]
+        return float(np.percentile(vals, q)) if vals else 0.0
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    tokens: np.ndarray
+    max_new: int
+    t_enqueue: float
+    t_admit: float = 0.0
+    t_first: float = 0.0
+
+
+class _Slot:
+    __slots__ = ("request", "n_prefilled", "n_emitted", "first_tok",
+                 "steps", "order")
+
+    def __init__(self):
+        self.request: _Request | None = None
+        self.n_prefilled = 0
+        self.n_emitted = 0
+        self.first_tok = None      # device scalar from the final chunk
+        self.steps: list[int] = []  # indices into the decode history
+        self.order = -1            # admission sequence number (FIFO tie)
+
+    @property
+    def prefill_done(self):
+        return (self.request is not None
+                and self.n_prefilled == len(self.request.tokens))
+
+
+# -------------------------------------------------------------- scheduler
+class ContinuousBatchingScheduler:
+    """Drives an Engine's paged ``prefill_chunk`` / ``decode_step`` over a
+    FIFO request queue with slot refill.
+
+    ``engine`` needs: ``cfg``, ``max_len``, and the two paged step
+    methods — the invariant tests drive the scheduler with a stub engine
+    to cover thousands of schedules without tracing.
+
+    ``num_pages`` below the dense-equivalent total turns on real paging
+    pressure: admission then waits until finished requests return enough
+    pages (the reservation check keeps the pool deadlock-free — a request
+    is only admitted when its *whole* worst-case footprint fits alongside
+    the outstanding growth of every live slot).
+
+    The token feedback loop stays on device: completion is a *count*
+    (max_new), never a token value, so the scheduler dispatches steps
+    without a host sync and materializes outputs once at the end — the
+    same async pipelining ``generate`` gets from its device-side loop.
+    ``sync_per_step=True`` blocks after every device call instead, making
+    the per-phase timings and TTFT exact (the launcher's percentile
+    report uses it); under async they are dispatch-time measurements.
+
+    ``trace`` records ``(event, ...)`` tuples — the scheduler's own audit
+    log, asserted over by the serving invariant tests.
+    """
+
+    def __init__(self, engine, *, batch_slots: int, prefill_chunk: int = 32,
+                 page_size: int = 16, num_pages: int | None = None,
+                 check_invariants: bool = False,
+                 sync_per_step: bool = False):
+        cfg = engine.cfg
+        if cfg.modality != "text":
+            raise NotImplementedError("continuous batching serves token "
+                                      "prompts; stub-embedding frontends "
+                                      "go through Engine.prefill")
+        self.engine = engine
+        self.cfg = cfg
+        self.batch_slots = batch_slots
+        self.page_size = page_size
+        # static admission width: pad to a plan bucket so every chunk in
+        # a mixed-length stream resolves the same GEMM plan keys
+        self.chunk = gemm_api.bucket_m(prefill_chunk)
+        self.check_invariants = check_invariants
+        self.sync_per_step = sync_per_step
+        self.kv = KV.PagedKVCache(
+            num_layers=cfg.num_layers, num_slots=batch_slots,
+            max_len=engine.max_len, page_size=page_size,
+            leaf_specs=KV.leaf_specs_for(cfg), num_pages=num_pages)
+        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.queue: collections.deque[_Request] = collections.deque()
+        self.trace: list[tuple] = []
+        self.stats = ServeStats()
+        self._results: dict[int, np.ndarray] = {}
+        self._next_rid = 0
+        self._admit_seq = 0
+        # device-side run state: last emitted token per slot, and the
+        # per-step [slots] token history (materialized at run end)
+        self._last = jnp.zeros((batch_slots,), jnp.int32)
+        self._history: list = []
+        self._pending: list[tuple] = []   # (rid, slot, first_tok, steps)
+
+    # ------------------------------------------------------------ intake
+    def submit(self, tokens, max_new: int) -> int:
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if tokens.size == 0:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        # written KV footprint: prompt + all but the final emitted token
+        if tokens.size + max_new - 1 > self.engine.max_len:
+            raise ValueError(
+                f"prompt {tokens.size} + max_new {max_new} exceeds "
+                f"engine max_len {self.engine.max_len}")
+        need = KV.pages_for(tokens.size + max_new - 1, self.page_size)
+        if need > self.kv.num_pages:
+            raise ValueError(
+                f"request needs {need} pages but the pool only has "
+                f"{self.kv.num_pages} — it could never be admitted")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(_Request(rid, tokens, max_new,
+                                   t_enqueue=time.perf_counter()))
+        self.trace.append(("enqueue", rid))
+        return rid
+
+    # ------------------------------------------------------- page budget
+    def _footprint(self, req: _Request) -> int:
+        return KV.pages_for(len(req.tokens) + req.max_new - 1,
+                            self.page_size)
+
+    def _outstanding_growth(self) -> int:
+        """Pages live slots may still demand before they finish."""
+        need = 0
+        for i, sl in enumerate(self.slots):
+            if sl.request is not None:
+                need += self._footprint(sl.request) - self.kv.held(i)
+        return need
+
+    # ------------------------------------------------------------- steps
+    def _admit(self):
+        for i, sl in enumerate(self.slots):
+            if sl.request is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            # deadlock-free reservation: admit only if the request's full
+            # footprint fits beside every live slot's remaining growth
+            if (self._footprint(req) + self._outstanding_growth()
+                    > self.kv.free_count):
+                break                      # FIFO: never skip the head
+            self.queue.popleft()
+            req.t_admit = time.perf_counter()
+            sl.request, sl.first_tok = req, None
+            sl.n_prefilled, sl.n_emitted, sl.steps = 0, 0, []
+            sl.order = self._admit_seq
+            self._admit_seq += 1
+            self.trace.append(("admit", req.rid, i))
+
+    def _prefill_step(self) -> bool:
+        cands = [(sl.order, i) for i, sl in enumerate(self.slots)
+                 if sl.request is not None and not sl.prefill_done]
+        if not cands:
+            return False
+        _, i = min(cands)                  # earliest admitted first
+        sl = self.slots[i]
+        req = sl.request
+        start = sl.n_prefilled
+        end = min(start + self.chunk, len(req.tokens))
+        final = end == len(req.tokens)
+        self.kv.alloc(i, end)
+        chunk = np.zeros((1, self.chunk), np.int32)
+        chunk[0, :end - start] = req.tokens[start:end]
+        t0 = time.perf_counter()
+        tok, pages = self.engine.prefill_chunk(
+            self.kv.pages, self.kv.table_device([i]),
+            self.kv.lens_device([i]), jnp.asarray(chunk),
+            jnp.asarray(end - start - 1, jnp.int32),
+            page_size=self.page_size)
+        self.kv.pages = pages
+        if self.sync_per_step:
+            jax.block_until_ready(tok)
+        self.stats.prefill_s += time.perf_counter() - t0
+        self.stats.prefill_tokens += end - start
+        self.kv.lens[i] = end
+        sl.n_prefilled = end
+        self.trace.append(("prefill", req.rid, i, start, end))
+        if final:
+            # first token stays on device — it feeds the slot's decode
+            # steps through the last-token row, no host sync needed
+            self._last = self._last.at[i].set(tok)
+            sl.first_tok = tok
+            req.t_first = time.perf_counter()
+            self._emit(i)
+        if self.check_invariants:
+            self.kv.check_no_aliasing()
+        return True
+
+    def _decode_step(self) -> bool:
+        dec = [i for i, sl in enumerate(self.slots) if sl.prefill_done]
+        if not dec:
+            return False
+        mask = np.zeros((self.batch_slots,), bool)
+        for i in dec:
+            self.kv.alloc(i, int(self.kv.lens[i]) + 1)
+            mask[i] = True
+        t0 = time.perf_counter()
+        self._last, pages = self.engine.decode_step(
+            self.kv.pages, self.kv.table_device(), self.kv.lens_device(),
+            jnp.asarray(mask), self._last, page_size=self.page_size)
+        self.kv.pages = pages
+        if self.sync_per_step:
+            jax.block_until_ready(self._last)
+        self.stats.decode_s += time.perf_counter() - t0
+        step_idx = len(self._history)
+        self._history.append(self._last)
+        self.trace.append(
+            ("decode", tuple(self.slots[i].request.rid for i in dec)))
+        for i in dec:
+            self.kv.lens[i] += 1
+            self.slots[i].steps.append(step_idx)
+            self._emit(i)
+        if self.check_invariants:
+            self.kv.check_no_aliasing()
+        return True
+
+    def _emit(self, i: int):
+        sl = self.slots[i]
+        req = sl.request
+        sl.n_emitted += 1
+        self.stats.decode_tokens += 1
+        if sl.n_emitted == req.max_new:
+            now = time.perf_counter()
+            self._pending.append((req.rid, i, sl.first_tok,
+                                  tuple(sl.steps)))
+            self.stats.requests.append(RequestStats(
+                rid=req.rid, prompt_len=len(req.tokens),
+                new_tokens=req.max_new,
+                queue_wait_s=req.t_admit - req.t_enqueue,
+                ttft_s=req.t_first - req.t_enqueue,
+                total_s=now - req.t_enqueue,
+                decode_tps=req.max_new / max(now - req.t_first, 1e-9)))
+            self.trace.append(("finish", req.rid, i))
+            freed = self.kv.free(i)
+            self.trace.append(("free", i, tuple(freed)))
+            sl.request, sl.first_tok = None, None
+            sl.n_prefilled, sl.n_emitted, sl.steps = 0, 0, []
+
+    def _materialize(self):
+        """Pull the device-side token history to host and assemble each
+        finished request's output (one transfer per run, not per step)."""
+        hist = (np.stack([np.asarray(h) for h in self._history])
+                if self._history else np.zeros((0, self.batch_slots),
+                                               np.int32))
+        for rid, slot, first, steps in self._pending:
+            toks = np.concatenate(
+                [[np.asarray(first)], hist[list(steps), slot]]
+                if steps else [[np.asarray(first)]])
+            self._results[rid] = toks.astype(np.int32)
+        self._pending.clear()
+
+    # --------------------------------------------------------------- run
+    def step(self) -> bool:
+        """One scheduler tick: admit, one prefill chunk, one decode step.
+        Returns False once no work remains."""
+        self._admit()
+        did_p = self._prefill_step()
+        did_d = self._decode_step()
+        return did_p or did_d or bool(self.queue)
+
+    def run(self, requests, max_new_tokens) -> tuple[list[np.ndarray],
+                                                     ServeStats]:
+        """Serve ``requests`` (list of int32 prompt arrays) to completion.
+        ``max_new_tokens``: int, or a per-request sequence.  Returns
+        (per-request generated tokens in submission order, ServeStats).
+        """
+        n = len(requests)
+        mn = ([int(max_new_tokens)] * n if np.isscalar(max_new_tokens)
+              else [int(m) for m in max_new_tokens])
+        if len(mn) != n:
+            raise ValueError("max_new_tokens list must match requests")
+        t0 = time.perf_counter()
+        rids = [self.submit(r, m) for r, m in zip(requests, mn)]
+        # every tick either prefills a chunk or decodes >=1 token, so this
+        # bound is generous; hitting it means a scheduler bug, not load
+        max_ticks = 10 + 2 * (sum(mn) + sum(
+            -(-len(np.atleast_1d(r)) // self.chunk) for r in requests))
+        for _ in range(max_ticks):
+            if not self.step():
+                break
+        else:
+            raise RuntimeError("scheduler made no progress")
+        self._materialize()
+        self.stats.wall_s += time.perf_counter() - t0
+        return [self._results[r] for r in rids], self.stats

@@ -1,0 +1,221 @@
+"""Paged KV cache: physical page pool + host-side slot allocator.
+
+The continuous-batching pool (runtime/batching.py) keeps a *static* slot
+batch alive across requests; what changes per request is only which KV
+storage a slot reads and writes.  A dense ``[slots, max_len]`` cache
+would force the refill path to re-zero (or worse, re-allocate) a full
+row per admitted request.  Instead the cache is paged, vLLM-style:
+
+  * the device holds one physical pool per cached tensor,
+    ``[layers, num_pages, page_size, *feat]``;
+  * each slot owns an ordered list of page ids — its *page table* row —
+    mapping logical token position ``p`` to physical location
+    ``(table[p // page_size], p % page_size)``;
+  * finishing a request returns its pages to the free list, and the next
+    admitted request reuses them — no allocation, no recompile, no shape
+    change anywhere on the device.
+
+Numerics contract: ``paged_gather`` reconstructs the *logical-order*
+dense view ``[slots, max_len, *feat]``, so attention over a paged cache
+is bit-identical to attention over the dense cache it replaces (asserted
+by tests/test_kv_cache.py on random alloc/free/refill traces, including
+the wrap case where a long-lived slot outlives several neighbors).
+
+Allocation is host-side (numpy + a free list): the scheduler calls
+``alloc``/``free`` between device steps, and ships ``page_table``/
+``lens`` as small int32 arrays into the jitted step — values change,
+shapes never do.
+"""
+from __future__ import annotations
+
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+
+PAGE_FREE = -1
+
+
+class OutOfPagesError(RuntimeError):
+    """The free list cannot cover a requested allocation."""
+
+
+class PageAliasError(RuntimeError):
+    """A physical page is referenced by two live slots (or a live slot
+    and the free list) — the invariant continuous batching must never
+    break."""
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Number of pages covering ``tokens`` token positions."""
+    return -(-int(tokens) // page_size) if tokens > 0 else 0
+
+
+def leaf_specs_for(cfg) -> dict:
+    """Per-token cached tensors for ``cfg`` as ``{name: (feat, dtype)}``.
+
+    Only the full-cache GQA layout is paged today; window (ring) caches
+    and SSM state are per-slot *constant-size* state with no paging win,
+    and MLA's latent cache is a straightforward extension left until an
+    MLA arch enters the serving matrix.
+    """
+    if cfg.attention_kind != "gqa" or cfg.resolved_cache_kind != "full":
+        raise NotImplementedError(
+            f"paged KV cache supports full-cache GQA archs; got "
+            f"attention_kind={cfg.attention_kind!r} / "
+            f"cache={cfg.resolved_cache_kind!r}")
+    dt = jnp.dtype(cfg.cache_dtype)
+    feat = (cfg.num_kv_heads, cfg.head_dim)
+    return {"pages_k": (feat, dt), "pages_v": (feat, dt)}
+
+
+# ------------------------------------------------------- device-side ops
+def paged_gather(pages: jnp.ndarray, page_table: jnp.ndarray,
+                 page_size: int) -> jnp.ndarray:
+    """Dense logical view of a paged pool.
+
+    pages: [P, page_size, *feat]; page_table: [B, n_view] int32 physical
+    ids (-1 = unmapped).  Returns [B, n_view * page_size, *feat]; the
+    contents of unmapped pages are arbitrary (physical page 0) — callers
+    mask them by position, exactly as the dense cache masks its
+    zero-initialized tail.
+    """
+    p_phys = pages.shape[0]
+    feat = pages.shape[2:]
+    b, n_view = page_table.shape
+    flat = pages.reshape(p_phys * page_size, *feat)
+    base = jnp.where(page_table >= 0, page_table, 0) * page_size
+    idx = base[:, :, None] + jnp.arange(page_size)[None, None, :]
+    return flat[idx.reshape(b, n_view * page_size)]
+
+
+def paged_update(pages: jnp.ndarray, new: jnp.ndarray,
+                 page_table: jnp.ndarray, lens: jnp.ndarray,
+                 page_size: int, write_mask=None) -> jnp.ndarray:
+    """Scatter ``new[b, i]`` to logical position ``lens[b] + i`` of slot b.
+
+    pages: [P, page_size, *feat]; new: [B, s, *feat]; lens: [B] int32;
+    write_mask: optional [B] bool — rows with False (slots that are
+    admitted but not decoding this step, or idle) write nothing.  Writes
+    through unmapped table entries (-1) or past the table end are
+    dropped, so chunk padding rows and masked slots can never touch a
+    freed or foreign page.
+    """
+    p_phys = pages.shape[0]
+    feat = pages.shape[2:]
+    b, s = new.shape[0], new.shape[1]
+    n_view = page_table.shape[1]
+    pos = lens[:, None] + jnp.arange(s)[None, :]              # [B, s]
+    page_idx = pos // page_size
+    phys = jnp.take_along_axis(page_table,
+                               jnp.clip(page_idx, 0, n_view - 1), axis=1)
+    valid = (phys >= 0) & (page_idx < n_view)
+    if write_mask is not None:
+        valid &= write_mask[:, None]
+    oob = p_phys * page_size                                  # drop sentinel
+    flat_idx = jnp.where(valid, phys * page_size + pos % page_size, oob)
+    flat = pages.reshape(p_phys * page_size, *feat)
+    flat = flat.at[flat_idx.reshape(b * s)].set(
+        new.reshape(b * s, *feat).astype(flat.dtype), mode="drop")
+    return flat.reshape(pages.shape)
+
+
+# ------------------------------------------------------ host-side pool
+class PagedKVCache:
+    """Physical page pool + per-slot page tables and length counters.
+
+    The device arrays in ``self.pages`` are *threaded* through the jitted
+    serving steps (donated and replaced each call); ``page_table`` /
+    ``lens`` live here as numpy and are shipped per call via
+    ``table_device()`` / ``lens_device()``.
+    """
+
+    def __init__(self, *, num_layers: int, num_slots: int, max_len: int,
+                 page_size: int, leaf_specs: dict, num_pages: int | None = None):
+        if max_len % page_size:
+            raise ValueError(f"max_len={max_len} must be a multiple of "
+                             f"page_size={page_size} so the gathered view "
+                             f"matches the dense cache length exactly")
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_slot = max_len // page_size
+        self.num_pages = (num_pages if num_pages is not None
+                          else num_slots * self.pages_per_slot)
+        self.pages = {
+            name: jnp.zeros((num_layers, self.num_pages, page_size, *feat),
+                            dtype)
+            for name, (feat, dtype) in leaf_specs.items()}
+        self.page_table = np.full((num_slots, self.pages_per_slot),
+                                  PAGE_FREE, np.int32)
+        self.lens = np.zeros((num_slots,), np.int32)
+        self._n_pages = np.zeros((num_slots,), np.int32)
+        self._free: collections.deque[int] = collections.deque(
+            range(self.num_pages))
+
+    # ------------------------------------------------------- allocation
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def held(self, slot: int) -> int:
+        """Pages currently mapped by ``slot``."""
+        return int(self._n_pages[slot])
+
+    def alloc(self, slot: int, token_len: int) -> None:
+        """Grow ``slot``'s mapping to cover ``token_len`` logical tokens."""
+        target = pages_for(token_len, self.page_size)
+        if target > self.pages_per_slot:
+            raise ValueError(f"slot {slot}: {token_len} tokens exceed "
+                             f"max_len={self.max_len}")
+        while self._n_pages[slot] < target:
+            if not self._free:
+                raise OutOfPagesError(
+                    f"slot {slot} needs page {int(self._n_pages[slot])} "
+                    f"but the free list is empty "
+                    f"({self.num_pages} pages total)")
+            self.page_table[slot, self._n_pages[slot]] = self._free.popleft()
+            self._n_pages[slot] += 1
+
+    def free(self, slot: int) -> list[int]:
+        """Release every page of ``slot``; returns the freed ids."""
+        n = int(self._n_pages[slot])
+        freed = [int(p) for p in self.page_table[slot, :n]]
+        self.page_table[slot, :] = PAGE_FREE
+        self._n_pages[slot] = 0
+        self.lens[slot] = 0
+        self._free.extend(freed)
+        return freed
+
+    def reset(self) -> None:
+        for s in range(self.num_slots):
+            if self._n_pages[s]:
+                self.free(s)
+        self.lens[:] = 0
+
+    # -------------------------------------------------- device shipping
+    def table_device(self, slots=None) -> jnp.ndarray:
+        t = self.page_table if slots is None else self.page_table[slots]
+        return jnp.asarray(t)
+
+    def lens_device(self, slots=None) -> jnp.ndarray:
+        l = self.lens if slots is None else self.lens[slots]
+        return jnp.asarray(l)
+
+    # ---------------------------------------------------- invariants
+    def check_no_aliasing(self) -> None:
+        """Raise PageAliasError unless live mappings and the free list
+        partition the physical pool (no page in two rows, none both live
+        and free, none leaked)."""
+        live = [int(p) for row in self.page_table for p in row if p >= 0]
+        if len(live) != len(set(live)):
+            dup = sorted(p for p in set(live) if live.count(p) > 1)
+            raise PageAliasError(f"pages {dup} mapped by two live slots")
+        overlap = set(live) & set(self._free)
+        if overlap:
+            raise PageAliasError(
+                f"pages {sorted(overlap)} both live and free")
+        if len(live) + len(self._free) != self.num_pages:
+            raise PageAliasError(
+                f"page leak: {len(live)} live + {len(self._free)} free "
+                f"!= {self.num_pages} total")

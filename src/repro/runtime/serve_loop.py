@@ -12,9 +12,12 @@ compute loop.  ``Engine`` is that discipline as a class:
   * per-call mode (``packed=False``) keeps raw weights — the
     cblas/BNNSMatMul analogue the benchmarks compare against.
 
-Batched requests run through a static-shape slot pool (continuous
-batching lite): finished rows are refilled from the queue without
-recompiling, since shapes never change.
+Batched requests run through ``serve`` — real continuous batching
+(runtime/batching): a static-shape slot pool whose finished rows are
+refilled *mid-generation*, a paged KV cache so refills reuse freed
+blocks, and chunked prefill admission interleaved with decode steps.
+The legacy phase-locked loop survives as ``serve_chunked`` — the
+baseline the serving benchmark measures against.
 """
 from __future__ import annotations
 
@@ -32,6 +35,14 @@ from repro.parallel import sharding as Sh
 
 @dataclasses.dataclass
 class GenStats:
+    """Token accounting for ``generate``/``serve_chunked``.
+
+    ``prefill_tokens`` counts prompt tokens *processed*; ``decode_tokens``
+    counts tokens *emitted* — ``rows x max_new_tokens`` for ``generate``
+    (the prefill-sampled first token included: generate emits
+    ``max_new_tokens`` per row, not ``max_new_tokens - 1``).  Both count
+    only live, non-pad tokens when accumulated by ``serve_chunked``.
+    """
     prefill_tokens: int = 0
     decode_tokens: int = 0
     prefill_s: float = 0.0
@@ -99,6 +110,44 @@ class Engine:
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode, donate_argnums=donate)
 
+        # ---- continuous-batching steps against the paged cache.  One
+        # trace each (shapes are static: [1, C] chunks, [slots, 1]
+        # decode), so the GEMM plans they resolve are resolved exactly
+        # once — the "plans stay hot" property tests/test_serving.py
+        # asserts via plan_cache_info().
+        # Greedy selection runs INSIDE the jit (same argmax the host-side
+        # _pick applies, so tokens stay bit-identical) — each scheduler
+        # tick is then a single device dispatch, which is what lets the
+        # pool's decode pipeline match generate's device-side loop.
+        def _paged_prefill(params, pages, page_table, lens, tokens,
+                           logit_index, *, page_size):
+            with gemm_api.use_backend(backend):
+                cache = {"layers": pages, "page_table": page_table,
+                         "lens": lens}
+                logits, cache = transformer.prefill_chunk(
+                    cfg, params, cache, tokens, page_size=page_size,
+                    logit_index=logit_index, shard_fn=shard_fn)
+                tok = jnp.argmax(logits[0]).astype(jnp.int32)
+                return tok, cache["layers"]
+
+        def _paged_decode(params, pages, page_table, lens, write_mask,
+                          last_tokens, *, page_size):
+            with gemm_api.use_backend(backend):
+                cache = {"layers": pages, "page_table": page_table,
+                         "lens": lens, "write_mask": write_mask}
+                logits, cache = transformer.paged_decode_step(
+                    cfg, params, cache, last_tokens[:, None],
+                    page_size=page_size, shard_fn=shard_fn)
+                toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                # masked rows (idle / still prefilling) keep their token
+                new_last = jnp.where(write_mask, toks, last_tokens)
+                return new_last, cache["layers"]
+
+        self._paged_prefill = jax.jit(_paged_prefill, donate_argnums=donate,
+                                      static_argnames=("page_size",))
+        self._paged_decode = jax.jit(_paged_decode, donate_argnums=donate,
+                                     static_argnames=("page_size",))
+
     # ------------------------------------------------------------- prefill
     def prefill(self, inputs):
         """inputs: [B, S] int32 (or [B, S, d] stub embeddings).
@@ -107,6 +156,27 @@ class Engine:
 
     def decode(self, cache, tokens):
         return self._decode(self.params, cache, tokens)
+
+    # ----------------------------------------- paged steps (slot pool)
+    def prefill_chunk(self, pages, page_table, lens, tokens, logit_index,
+                      *, page_size: int):
+        """One chunked-prefill admission step: write ``tokens`` [1, C]
+        into one slot's pages at its current length.  Returns
+        (greedy token for chunk row ``logit_index`` — the prompt's last
+        real row on the final chunk — as a device scalar, pages)."""
+        return self._paged_prefill(self.params, pages, page_table, lens,
+                                   tokens, logit_index,
+                                   page_size=page_size)
+
+    def decode_step(self, pages, page_table, lens, write_mask,
+                    last_tokens, *, page_size: int):
+        """One decode step for the whole pool: feeds ``last_tokens``
+        [slots] back through the model at per-slot lengths, write-masked
+        so idle / still-prefilling slots touch nothing.  Returns
+        (next last_tokens [slots] — masked rows unchanged, pages)."""
+        return self._paged_decode(self.params, pages, page_table, lens,
+                                  write_mask, last_tokens,
+                                  page_size=page_size)
 
     # ------------------------------------------------------------ generate
     def generate(self, prompts, max_new_tokens: int, *,
@@ -134,7 +204,7 @@ class Engine:
             out.append(tok)
         jax.block_until_ready(tok)
         stats.decode_s += time.perf_counter() - t0
-        stats.decode_tokens += b * max(max_new_tokens - 1, 0)
+        stats.decode_tokens += b * max_new_tokens      # emitted per row
         return jnp.stack(out, axis=1), stats
 
     @staticmethod
@@ -143,15 +213,46 @@ class Engine:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jax.random.categorical(key, logits).astype(jnp.int32)
 
-    # ------------------------------------------- continuous batching lite
+    # ------------------------------------------------ continuous batching
     def serve(self, requests: list[np.ndarray], *, batch_slots: int,
-              prompt_len: int, max_new_tokens: int):
-        """Slot-pool serving: static shapes, finished rows refilled.
+              max_new_tokens, prefill_chunk: int = 32,
+              page_size: int = 16, num_pages: int | None = None,
+              check_invariants: bool = False,
+              sync_per_step: bool = False):
+        """Real continuous batching (greedy): slot refill mid-generation,
+        paged KV cache, chunked prefill admission — runtime/batching.
 
-        requests: list of int32 prompt arrays (padded/truncated to
-        ``prompt_len``).  Returns list of generated-token arrays, one per
-        request, and GenStats.
+        requests: list of int32 prompt arrays, served at their true
+        lengths (no padding to a global prompt_len).  max_new_tokens:
+        int or per-request sequence.  Returns (list of generated-token
+        arrays in request order, batching.ServeStats).  Outputs are
+        bit-identical to per-request greedy ``generate``.
         """
+        from repro.runtime.batching import ContinuousBatchingScheduler
+        sched = ContinuousBatchingScheduler(
+            self, batch_slots=batch_slots, prefill_chunk=prefill_chunk,
+            page_size=page_size, num_pages=num_pages,
+            check_invariants=check_invariants,
+            sync_per_step=sync_per_step)
+        return sched.run(requests, max_new_tokens)
+
+    # -------------------------------------- legacy phase-locked baseline
+    def serve_chunked(self, requests: list[np.ndarray], *,
+                      batch_slots: int, prompt_len: int, max_new_tokens):
+        """The old "continuous batching lite": sequential static batches
+        where every slot waits for the chunk's slowest request.  Kept as
+        the baseline benchmarks/serving_mixed_lengths.py measures the
+        real scheduler against.
+
+        requests are padded/truncated to ``prompt_len``; max_new_tokens
+        may be per-request (each chunk then runs its max, and the extra
+        tokens of early finishers are wasted occupancy — exactly the
+        failure mode ``serve`` removes).  Stats count only live-slot,
+        non-pad tokens.
+        """
+        n = len(requests)
+        mn = ([int(max_new_tokens)] * n if np.isscalar(max_new_tokens)
+              else [int(m) for m in max_new_tokens])
         stats = GenStats()
         results: dict[int, np.ndarray] = {}
         queue = list(enumerate(requests))
@@ -159,13 +260,21 @@ class Engine:
             chunk = queue[:batch_slots]
             queue = queue[batch_slots:]
             ids = [i for i, _ in chunk]
+            step_new = max(mn[i] for i in ids)
             toks = np.zeros((batch_slots, prompt_len), np.int32)
             for r, (_, p) in enumerate(chunk):
                 p = np.asarray(p, np.int32)[:prompt_len]
                 toks[r, :len(p)] = p
-            gen, stats = self.generate(jnp.asarray(toks), max_new_tokens,
-                                       stats=stats)
+            gen, s = self.generate(jnp.asarray(toks), step_new)
+            stats.prefill_s += s.prefill_s
+            stats.decode_s += s.decode_s
+            # live-slot, non-pad accounting: dead rows (len(chunk) <
+            # batch_slots), prompt padding, and over-generation past a
+            # request's own max_new all count nothing
+            stats.prefill_tokens += sum(
+                min(len(np.asarray(requests[i])), prompt_len) for i in ids)
+            stats.decode_tokens += sum(mn[i] for i in ids)
             gen = np.asarray(gen)
             for r, i in enumerate(ids):
-                results[i] = gen[r]
+                results[i] = gen[r, :mn[i]]
         return [results[i] for i in range(len(requests))], stats

@@ -1,0 +1,219 @@
+"""Paged KV cache in isolation: alloc/free/refill round-trips must equal
+a dense [B, max_len] cache on random decode traces (including the wrap
+case where a long-running slot outlives several refilled neighbors), and
+the allocator must never alias or leak a page."""
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.models import model_zoo
+from repro.runtime import kv_cache as KV
+
+PAGE = 4
+MAX_LEN = 16
+FEAT = (2, 3)
+
+
+def _pool(num_slots=3, num_pages=None):
+    return KV.PagedKVCache(
+        num_layers=1, num_slots=num_slots, max_len=MAX_LEN,
+        page_size=PAGE, leaf_specs={"pages_k": (FEAT, jnp.float32)},
+        num_pages=num_pages)
+
+
+def _write(pool, slot, n_new, rng, dense):
+    """Write n_new tokens to `slot` through the paged path AND the dense
+    reference; returns nothing (mutates both)."""
+    start = int(pool.lens[slot])
+    pool.alloc(slot, start + n_new)
+    vals = rng.standard_normal((1, n_new, *FEAT)).astype(np.float32)
+    pool.pages["pages_k"] = KV.paged_update(
+        pool.pages["pages_k"][0], jnp.asarray(vals),
+        pool.table_device([slot]), pool.lens_device([slot]),
+        PAGE)[None]
+    dense[slot, start:start + n_new] = vals[0]
+    pool.lens[slot] = start + n_new
+
+
+def _check_equal(pool, dense):
+    view = np.asarray(KV.paged_gather(pool.pages["pages_k"][0],
+                                      pool.table_device(), PAGE))
+    for b in range(pool.num_slots):
+        n = int(pool.lens[b])
+        np.testing.assert_array_equal(view[b, :n], dense[b, :n])
+
+
+# ------------------------------------------------------------ round trips
+def test_roundtrip_single_slot():
+    rng = np.random.default_rng(0)
+    pool = _pool()
+    dense = np.zeros((3, MAX_LEN, *FEAT), np.float32)
+    _write(pool, 0, 5, rng, dense)      # ragged prefill chunk
+    _write(pool, 0, 1, rng, dense)      # decode steps
+    _write(pool, 0, 1, rng, dense)
+    _check_equal(pool, dense)
+    pool.check_no_aliasing()
+
+
+def test_refill_reuses_freed_pages_wrap_case():
+    """Slot 0 outlives several refilled neighbors; the neighbors' reused
+    pages must never perturb slot 0's data."""
+    rng = np.random.default_rng(1)
+    pool = _pool(num_slots=3, num_pages=8)   # tight: forces real reuse
+    dense = np.zeros((3, MAX_LEN, *FEAT), np.float32)
+    _write(pool, 0, 9, rng, dense)           # long-running resident
+    seen_pages = set()
+    for cycle in range(4):                   # neighbors churn
+        for slot in (1, 2):
+            _write(pool, slot, 3 + cycle, rng, dense)
+            _check_equal(pool, dense)
+            seen_pages.update(
+                int(p) for p in pool.page_table[slot] if p >= 0)
+            freed = pool.free(slot)
+            dense[slot] = 0.0
+            assert freed, "neighbor held pages"
+            pool.check_no_aliasing()
+    _write(pool, 0, 2, rng, dense)           # resident keeps decoding
+    _check_equal(pool, dense)
+    # churn actually recycled physical pages (the wrap happened)
+    assert len(seen_pages) <= pool.num_pages
+    assert any(p in seen_pages
+               for p in pool.page_table[0] if p >= 0) or len(seen_pages) < 8
+
+
+def test_random_trace_matches_dense():
+    rng = np.random.default_rng(2)
+    pool = _pool(num_slots=4)
+    dense = np.zeros((4, MAX_LEN, *FEAT), np.float32)
+    for _ in range(200):
+        slot = int(rng.integers(4))
+        room = MAX_LEN - int(pool.lens[slot])
+        if rng.random() < 0.2 and pool.lens[slot] > 0:
+            pool.free(slot)
+            dense[slot] = 0.0
+        elif room > 0:
+            _write(pool, slot, int(rng.integers(1, min(room, 6) + 1)),
+                   rng, dense)
+        pool.check_no_aliasing()
+    _check_equal(pool, dense)
+
+
+# ----------------------------------------------------- write-drop guards
+def test_write_mask_drops_rows():
+    rng = np.random.default_rng(3)
+    pool = _pool(num_slots=2)
+    dense = np.zeros((2, MAX_LEN, *FEAT), np.float32)
+    _write(pool, 0, 4, rng, dense)
+    _write(pool, 1, 4, rng, dense)
+    pool.alloc(0, 5)                     # room for the unmasked write
+    vals = rng.standard_normal((2, 1, *FEAT)).astype(np.float32)
+    pool.pages["pages_k"] = KV.paged_update(
+        pool.pages["pages_k"][0], jnp.asarray(vals), pool.table_device(),
+        pool.lens_device(), PAGE,
+        write_mask=jnp.asarray([True, False]))[None]
+    dense[0, 4] = vals[0, 0]             # row 1 masked: writes nothing
+    pool.lens[0] += 1
+    _check_equal(pool, dense)
+
+
+def test_unmapped_writes_dropped():
+    """Writes through -1 table entries (idle slot / chunk padding past
+    the allocation) must not corrupt page 0."""
+    rng = np.random.default_rng(4)
+    pool = _pool(num_slots=2)
+    dense = np.zeros((2, MAX_LEN, *FEAT), np.float32)
+    _write(pool, 0, 4, rng, dense)       # slot 0 owns page 0
+    vals = rng.standard_normal((1, 3, *FEAT)).astype(np.float32)
+    # slot 1 has NO pages mapped; its write must vanish, not land in
+    # someone else's page
+    pool.pages["pages_k"] = KV.paged_update(
+        pool.pages["pages_k"][0], jnp.asarray(vals),
+        pool.table_device([1]), pool.lens_device([1]), PAGE)[None]
+    _check_equal(pool, dense)
+
+
+# --------------------------------------------------------- allocator law
+def test_alloc_oom_raises():
+    pool = _pool(num_slots=2, num_pages=2)
+    pool.alloc(0, 8)                      # 2 pages: pool exhausted
+    with pytest.raises(KV.OutOfPagesError):
+        pool.alloc(1, 1)
+
+
+def test_alloc_beyond_max_len_raises():
+    pool = _pool()
+    with pytest.raises(ValueError):
+        pool.alloc(0, MAX_LEN + 1)
+
+
+def test_free_returns_pages_and_resets():
+    pool = _pool()
+    pool.alloc(0, 10)
+    held = pool.held(0)
+    assert held == KV.pages_for(10, PAGE) == 3
+    freed = pool.free(0)
+    assert len(freed) == held
+    assert pool.held(0) == 0 and int(pool.lens[0]) == 0
+    assert pool.free_count == pool.num_pages
+    pool.check_no_aliasing()
+
+
+def test_aliasing_detected():
+    pool = _pool()
+    pool.alloc(0, 4)
+    pool.page_table[1, 0] = pool.page_table[0, 0]     # corrupt: alias
+    with pytest.raises(KV.PageAliasError):
+        pool.check_no_aliasing()
+
+
+def test_leak_detected():
+    pool = _pool()
+    pool.alloc(0, 4)
+    pool.page_table[0, 0] = KV.PAGE_FREE              # drop w/o freeing
+    with pytest.raises(KV.PageAliasError):
+        pool.check_no_aliasing()
+
+
+def test_leaf_specs_rejects_unsupported_arch():
+    cfg = model_zoo.reduced_config(model_zoo.get_config("mamba2-370m"))
+    with pytest.raises(NotImplementedError):
+        KV.leaf_specs_for(cfg)
+
+
+def test_max_len_page_divisibility():
+    with pytest.raises(ValueError):
+        KV.PagedKVCache(num_layers=1, num_slots=1, max_len=10,
+                        page_size=4,
+                        leaf_specs={"pages_k": (FEAT, jnp.float32)})
+
+
+# ------------------------------------------------------------- property
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 9)),
+                    min_size=1, max_size=60),
+       num_pages=st.integers(4, 12))
+def test_allocator_invariants_property(ops, num_pages):
+    """Random alloc/free sequences never alias, never leak, and held
+    page counts always match the lengths they cover."""
+    pool = _pool(num_slots=4, num_pages=num_pages)
+    lens = [0, 0, 0, 0]
+    for slot, amount in ops:
+        if amount == 0:
+            pool.free(slot)
+            lens[slot] = 0
+        else:
+            target = min(lens[slot] + amount, MAX_LEN)
+            try:
+                pool.alloc(slot, target)
+            except KV.OutOfPagesError:
+                continue
+            lens[slot] = target
+            pool.lens[slot] = target
+        pool.check_no_aliasing()
+        for b in range(4):
+            assert pool.held(b) >= KV.pages_for(lens[b], PAGE)

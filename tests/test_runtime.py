@@ -117,8 +117,13 @@ def test_engine_slot_pool_serves_all(small):
     rng = np.random.default_rng(1)
     reqs = [rng.integers(0, cfg.vocab_size, rng.integers(3, 10))
             .astype(np.int32) for _ in range(5)]
-    outs, stats = eng.serve(reqs, batch_slots=2, prompt_len=12,
-                            max_new_tokens=4)
+    outs, stats = eng.serve(reqs, batch_slots=2, max_new_tokens=4,
+                            prefill_chunk=8, page_size=8)
     assert len(outs) == 5
     assert all(o.shape == (4,) for o in outs)
-    assert stats.decode_tokens > 0
+    assert stats.decode_tokens == 5 * 4
+    assert stats.prefill_tokens == sum(len(r) for r in reqs)
+    # the legacy phase-locked loop still serves (the benchmark baseline)
+    outs2, stats2 = eng.serve_chunked(reqs, batch_slots=2, prompt_len=12,
+                                      max_new_tokens=4)
+    assert len(outs2) == 5 and stats2.decode_tokens == 5 * 4

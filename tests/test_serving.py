@@ -1,0 +1,290 @@
+"""Continuous-batching serving gates.
+
+The serving analogue of the paper's bit-exactness protocol: for a fixed
+request set, the continuous-batching ``serve`` must return
+token-for-token identical outputs to per-request greedy ``generate``,
+across batch_slots in {1, 2, 4} and mixed prompt lengths — plus the
+scheduler invariants (slot exclusivity, exactly-once completion, FIFO
+admission, no freed-page aliasing) and the plans-stay-hot property
+(``plan_cache_info().misses`` flat after the first refill cycle).
+"""
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
+
+import jax.numpy as jnp
+
+from repro import gemm
+from repro.models import model_zoo
+from repro.runtime.batching import ContinuousBatchingScheduler
+from repro.runtime.serve_loop import Engine
+
+MAX_LEN = 48
+PAGE = 8
+CHUNK = 8
+# mixed prompt lengths: < chunk, == chunk, ragged tails, near max
+LENS = [5, 17, 8, 23, 3, 12]
+MNS = [6, 3, 8, 4, 5, 7]
+
+
+def _requests(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, l).astype(np.int32)
+            for l in lens]
+
+
+def _refs(eng, reqs, mns):
+    return [np.asarray(eng.generate(jnp.asarray(r)[None], m)[0][0])
+            for r, m in zip(reqs, mns)]
+
+
+@pytest.fixture(scope="module")
+def stablelm():
+    cfg = model_zoo.reduced_config(model_zoo.get_config("stablelm-3b"))
+    params = model_zoo.build(cfg)
+    return cfg, Engine(cfg, params, max_len=MAX_LEN, packed=False)
+
+
+@pytest.fixture(scope="module")
+def stablelm_packed():
+    cfg = model_zoo.reduced_config(model_zoo.get_config("stablelm-3b"))
+    params = model_zoo.build(cfg)
+    return cfg, Engine(cfg, params, max_len=MAX_LEN, packed=True)
+
+
+# ----------------------------------------------------------- parity gate
+@pytest.mark.parametrize("batch_slots", [1, 2, 4])
+def test_parity_vs_per_request_generate(stablelm, batch_slots):
+    cfg, eng = stablelm
+    reqs = _requests(cfg, LENS)
+    refs = _refs(eng, reqs, MNS)
+    outs, stats = eng.serve(reqs, batch_slots=batch_slots,
+                            max_new_tokens=MNS, prefill_chunk=CHUNK,
+                            page_size=PAGE, check_invariants=True)
+    for i, (o, r) in enumerate(zip(outs, refs)):
+        np.testing.assert_array_equal(
+            o, r, err_msg=f"request {i} diverged at batch_slots="
+                          f"{batch_slots}")
+    assert stats.prefill_tokens == sum(LENS)
+    assert stats.decode_tokens == sum(MNS)
+
+
+def test_parity_packed_engine(stablelm_packed):
+    """The packed (plan/execute) path must satisfy the same gate."""
+    cfg, eng = stablelm_packed
+    reqs = _requests(cfg, LENS[:4])
+    refs = _refs(eng, reqs, MNS[:4])
+    outs, _ = eng.serve(reqs, batch_slots=2, max_new_tokens=MNS[:4],
+                        prefill_chunk=CHUNK, page_size=PAGE)
+    for o, r in zip(outs, refs):
+        np.testing.assert_array_equal(o, r)
+
+
+def test_parity_softcap_window_arch():
+    """gemma2: logit softcap + alternating local/global windows."""
+    cfg = model_zoo.reduced_config(model_zoo.get_config("gemma2-9b"))
+    eng = Engine(cfg, model_zoo.build(cfg), max_len=MAX_LEN, packed=False)
+    reqs = _requests(cfg, [5, 20, 11], seed=1)
+    mns = [4, 6, 3]
+    refs = _refs(eng, reqs, mns)
+    outs, _ = eng.serve(reqs, batch_slots=2, max_new_tokens=mns,
+                        prefill_chunk=CHUNK, page_size=PAGE)
+    for o, r in zip(outs, refs):
+        np.testing.assert_array_equal(o, r)
+
+
+def test_parity_under_page_pressure(stablelm):
+    """A pool smaller than the dense equivalent forces admission to wait
+    for freed pages; outputs must not change."""
+    cfg, eng = stablelm
+    lens, mns = [20, 20, 20, 20], [8, 8, 8, 8]
+    reqs = _requests(cfg, lens, seed=2)
+    refs = _refs(eng, reqs, mns)
+    # 4 slots x 6 pages dense-equivalent = 24; 9 admits at most two
+    outs, stats = eng.serve(reqs, batch_slots=4, max_new_tokens=mns,
+                            prefill_chunk=CHUNK, page_size=PAGE,
+                            num_pages=9, check_invariants=True,
+                            sync_per_step=True)
+    for o, r in zip(outs, refs):
+        np.testing.assert_array_equal(o, r)
+    assert max(r.queue_wait_s for r in stats.requests) > 0
+
+
+# ------------------------------------------------------ plans stay hot
+def test_plan_misses_flat_after_first_refill_cycle(stablelm_packed):
+    cfg, eng = stablelm_packed
+    reqs = _requests(cfg, LENS, seed=3)
+    eng.serve(reqs, batch_slots=2, max_new_tokens=MNS,
+              prefill_chunk=CHUNK, page_size=PAGE)
+    misses = gemm.plan_cache_info().misses
+    # fresh mixed lengths, several refill cycles — same static shapes
+    reqs2 = _requests(cfg, [7, 19, 2, 11, 23, 4], seed=4)
+    eng.serve(reqs2, batch_slots=2, max_new_tokens=[3, 5, 2, 6, 4, 3],
+              prefill_chunk=CHUNK, page_size=PAGE)
+    assert gemm.plan_cache_info().misses == misses, \
+        "steady-state serving replanned a GEMM"
+
+
+def test_bucket_m_plan_key_stability():
+    """Ragged chunk row counts inside one bucket share one plan key."""
+    assert [gemm.bucket_m(m) for m in (1, 8, 9, 16, 33, 64, 65, 129)] \
+        == [8, 8, 16, 16, 64, 64, 128, 256]
+    with pytest.raises(ValueError):
+        gemm.bucket_m(0)
+    gemm.plan_cache_clear()
+    for m in (17, 20, 31, 32):           # all bucket to 32
+        gemm.plan(gemm.bucket_m(m), 64, 256)
+    assert gemm.plan_cache_info().misses == 1
+
+
+# ------------------------------------------------- scheduler invariants
+def _audit_trace(trace, n_requests):
+    """Replay the scheduler's event log against the serving invariants."""
+    active = {}                          # slot -> rid
+    admitted, finished = [], []
+    for ev in trace:
+        if ev[0] == "admit":
+            rid, slot = ev[1], ev[2]
+            assert slot not in active, \
+                f"slot {slot} admitted {rid} while serving {active[slot]}"
+            active[slot] = rid
+            admitted.append(rid)
+        elif ev[0] == "decode":
+            assert all(r in active.values() for r in ev[1]), \
+                "decoded a request not assigned to any slot"
+        elif ev[0] == "finish":
+            rid, slot = ev[1], ev[2]
+            assert active.get(slot) == rid
+            del active[slot]
+            finished.append(rid)
+    assert not active, f"requests never finished: {active}"
+    assert admitted == sorted(admitted), "FIFO admission order broken"
+    assert sorted(finished) == list(range(n_requests)), \
+        "each request must complete exactly once"
+
+
+class FakeEngine:
+    """Duck-typed engine: scheduling logic only, no tracing — lets the
+    invariant property run thousands of schedules cheaply."""
+
+    def __init__(self, cfg, max_len):
+        self.cfg = cfg
+        self.max_len = max_len
+
+    def prefill_chunk(self, pages, pt, lens, tokens, logit_index, *,
+                      page_size):
+        return jnp.zeros((), jnp.int32), pages
+
+    def decode_step(self, pages, pt, lens, mask, last, *, page_size):
+        return last, pages
+
+
+def _fake_cfg():
+    return model_zoo.reduced_config(model_zoo.get_config("stablelm-3b"))
+
+
+def _run_schedule(cfg, lens, mns, *, batch_slots, num_pages=None):
+    sched = ContinuousBatchingScheduler(
+        FakeEngine(cfg, MAX_LEN), batch_slots=batch_slots,
+        prefill_chunk=CHUNK, page_size=PAGE, num_pages=num_pages,
+        check_invariants=True)
+    reqs = _requests(cfg, lens, seed=7)
+    outs, stats = sched.run(reqs, mns)
+    _audit_trace(sched.trace, len(lens))
+    assert [len(o) for o in outs] == list(mns)
+    assert stats.prefill_tokens == sum(lens)
+    assert stats.decode_tokens == sum(mns)
+    sched.kv.check_no_aliasing()
+    assert sched.kv.free_count == sched.kv.num_pages, "pages leaked"
+    return sched
+
+
+def test_scheduler_invariants_deterministic():
+    cfg = _fake_cfg()
+    for slots in (1, 2, 4):
+        _run_schedule(cfg, LENS, MNS, batch_slots=slots)
+    # pressure: at most one live request's worth of pages
+    _run_schedule(cfg, [20, 20, 20], [8, 8, 8], batch_slots=3,
+                  num_pages=5)
+
+
+def test_real_engine_trace_invariants(stablelm):
+    cfg, eng = stablelm
+    sched = ContinuousBatchingScheduler(
+        eng, batch_slots=2, prefill_chunk=CHUNK, page_size=PAGE,
+        check_invariants=True)
+    sched.run(_requests(cfg, LENS), MNS)
+    _audit_trace(sched.trace, len(LENS))
+
+
+@settings(max_examples=40, deadline=None)
+@given(lens=st.lists(st.integers(1, 30), min_size=1, max_size=10),
+       seed=st.integers(0, 2 ** 16),
+       batch_slots=st.integers(1, 5),
+       tight=st.booleans())
+def test_scheduler_invariants_property(lens, seed, batch_slots, tight):
+    """No slot serves two requests at once, every request completes
+    exactly once, FIFO admission holds, freed pages never alias — for
+    arbitrary request mixes, pool widths, and page pressure."""
+    rng = np.random.default_rng(seed)
+    mns = [int(rng.integers(1, min(12, MAX_LEN - l + 1) + 1))
+           for l in lens]
+    need_max = max(-(-(l + m - 1) // PAGE) for l, m in zip(lens, mns))
+    num_pages = None
+    if tight:      # smallest pool that can still admit the largest req
+        num_pages = max(need_max, 2)
+    _run_schedule(_fake_cfg(), lens, mns, batch_slots=batch_slots,
+                  num_pages=num_pages)
+
+
+# --------------------------------------------------- stats + guard rails
+def test_genstats_generate_counts_emitted_tokens(stablelm):
+    """GenStats bug fix: generate emits max_new tokens per row and the
+    stats must say so (not b * (max_new - 1))."""
+    cfg, eng = stablelm
+    prompts = jnp.asarray(_requests(cfg, [6, 6, 6])[0])[None]
+    prompts = jnp.tile(prompts, (3, 1))
+    _, stats = eng.generate(prompts, 5)
+    assert stats.decode_tokens == 3 * 5
+    assert stats.prefill_tokens == 3 * 6
+
+
+def test_serve_chunked_counts_only_live_nonpad(stablelm):
+    """Dead slots (len(chunk) < batch_slots), prompt padding, and
+    over-generation past a request's own budget count nothing."""
+    cfg, eng = stablelm
+    lens, mns = [5, 9, 3], [4, 2, 6]       # 3 requests, 2 slots
+    reqs = _requests(cfg, lens, seed=5)
+    outs, stats = eng.serve_chunked(reqs, batch_slots=2, prompt_len=16,
+                                    max_new_tokens=mns)
+    assert stats.prefill_tokens == sum(lens)       # not 2 chunks * 2 * 16
+    assert stats.decode_tokens == sum(mns)         # not sum of chunk maxes
+    assert [len(o) for o in outs] == mns
+
+
+def test_serve_rejects_oversized_request(stablelm):
+    cfg, eng = stablelm
+    with pytest.raises(ValueError):
+        eng.serve(_requests(cfg, [MAX_LEN]), batch_slots=2,
+                  max_new_tokens=8, page_size=PAGE)
+    with pytest.raises(ValueError):
+        eng.serve([np.zeros((0,), np.int32)], batch_slots=2,
+                  max_new_tokens=2, page_size=PAGE)
+
+
+def test_serve_stats_latency_fields(stablelm):
+    cfg, eng = stablelm
+    reqs = _requests(cfg, LENS[:3], seed=6)
+    _, stats = eng.serve(reqs, batch_slots=2, max_new_tokens=3,
+                         prefill_chunk=CHUNK, page_size=PAGE,
+                         sync_per_step=True)
+    assert len(stats.requests) == 3
+    for r in stats.requests:
+        assert r.ttft_s >= r.queue_wait_s >= 0
+        assert r.total_s >= r.ttft_s
+        assert r.decode_tps > 0
+    assert stats.percentile("ttft_s", 95) >= stats.percentile("ttft_s", 5)
+    assert stats.wall_s > 0 and stats.total_tps > 0
