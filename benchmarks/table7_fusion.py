@@ -1,0 +1,236 @@
+"""Table 7 — horizontal fusion + fused epilogues, measured per shape.
+
+The fused-GEMM subsystem's two levers, isolated:
+
+  * **horizontal fusion** — Q/K/V (three same-input projections) as ONE
+    ``pack_fused`` GEMM with a static split map, and gate+up as one
+    glu-epilogue GEMM (``silu(gate) * up`` combined in the store step):
+    the shared activations stream from HBM once instead of 2-3 times and
+    the [M, 2F] gate-up intermediate never materializes.
+  * **fused epilogues** — bias / activation / softcap / residual applied
+    on the fp32 accumulator inside the store step instead of a separate
+    XLA op re-reading the GEMM output from HBM.
+
+Per shape the table times the fused path against the unfused
+``execute -> XLA op`` sequence computing the SAME function (both jitted,
+interleaved reps so machine drift cancels), asserts bitwise equality for
+fp32 operands first, and reports the per-block dispatch reduction.
+Emits ``benchmarks/out/table7_fusion.json`` (transient, gitignored) and
+the machine-readable ``benchmarks/BENCH_fusion.json`` baseline —
+version-tracked, so the perf trajectory is diffable from this PR on.
+
+``--dry-run`` (wired into the CI serving-smoke job) runs one tiny shape
+per mode with parity asserts and a single rep — the harness can't rot.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro import gemm as G
+from repro.core import bitexact, packing
+
+S = 128
+
+# (model, H, F) — the paper's table-3 models, FFN from their configs
+SHAPES = [
+    ("tinyllama-1.1b", 2048, 5632),
+    ("llama-7b", 4096, 11008),
+]
+
+EPILOGUES = [
+    ("bias", G.EpilogueSpec(bias=True)),
+    ("silu", G.EpilogueSpec(act="silu")),
+    ("softcap", G.EpilogueSpec(softcap=30.0)),
+    ("residual", G.EpilogueSpec(residual=True)),
+    ("bias+gelu+residual",
+     G.EpilogueSpec(bias=True, act="gelu", residual=True)),
+]
+
+
+def _timer(reps):
+    def time_modes(modes: dict) -> dict:
+        ts = {name: [] for name in modes}
+        for _ in range(reps):
+            for name, fn in modes.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                ts[name].append(time.perf_counter() - t0)
+        return {name: float(np.median(v)) for name, v in ts.items()}
+    return time_modes
+
+
+def _qkv_row(name, h, rng, reps, hkv_ratio=1):
+    """Q/K/V horizontal fusion: 3 GEMMs -> 1 (split map)."""
+    nk = h // hkv_ratio
+    ws = [jnp.asarray(rng.standard_normal((h, n)) * 0.02, jnp.float32)
+          for n in (h, nk, nk)]
+    x = jnp.asarray(rng.standard_normal((S, h)), jnp.float32)
+    pws = [packing.pack(w) for w in ws]
+    plans = [G.plan_for_packed(S, pw, backend="xla") for pw in pws]
+    fpw = packing.pack_fused(ws)
+    fplan = G.plan_for_packed(S, fpw, backend="xla")
+
+    @jax.jit
+    def unfused(x, pws):
+        return [G.execute(p, x, pw) for p, pw in zip(plans, pws)]
+
+    @jax.jit
+    def fused(x, fpw):
+        return list(G.split_fused(fplan, G.execute(fplan, x, fpw)))
+
+    a, b = unfused(x, pws), fused(x, fpw)
+    for ya, yb in zip(a, b):
+        bitexact.assert_bit_identical(np.asarray(ya), np.asarray(yb),
+                                      "fused qkv vs separate")
+    t = _timer(reps)({"unfused": lambda: unfused(x, pws),
+                      "fused": lambda: fused(x, fpw)})
+    return {
+        "model": name, "op": "qkv", "M": S, "K": h,
+        "N": "+".join(str(w.shape[1]) for w in ws),
+        "gemms_unfused": 3, "gemms_fused": 1,
+        "unfused_ms": round(t["unfused"] * 1e3, 3),
+        "fused_ms": round(t["fused"] * 1e3, 3),
+        "speedup": round(t["unfused"] / t["fused"], 3),
+        "bit_exact": True,
+    }
+
+
+def _glu_row(name, h, f, rng, reps):
+    """gate+up glu fusion: 2 GEMMs + 2 XLA ops -> 1 GEMM."""
+    wg = jnp.asarray(rng.standard_normal((h, f)) * 0.02, jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((h, f)) * 0.02, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((S, h)), jnp.float32)
+    glu = G.EpilogueSpec(glu="silu")
+    bn, bk = G.pack_blocks(2 * f, h, epilogue=glu)
+    fpw = packing.pack_fused([wg, wu], block_n=bn, block_k=bk)
+    fplan = G.plan_for_packed(S, fpw, backend="xla", epilogue=glu)
+    pg, pu = packing.pack(wg), packing.pack(wu)
+    plg = G.plan_for_packed(S, pg, backend="xla")
+    plu = G.plan_for_packed(S, pu, backend="xla")
+
+    @jax.jit
+    def unfused(x, pg, pu):
+        g = G.execute(plg, x, pg)
+        u = G.execute(plu, x, pu)
+        return jax.nn.silu(g) * u
+
+    @jax.jit
+    def fused(x, fpw):
+        return G.execute(fplan, x, fpw)
+
+    bitexact.assert_bit_identical(np.asarray(unfused(x, pg, pu)),
+                                  np.asarray(fused(x, fpw)),
+                                  "fused glu vs 2 GEMMs + ops")
+    t = _timer(reps)({"unfused": lambda: unfused(x, pg, pu),
+                      "fused": lambda: fused(x, fpw)})
+    return {
+        "model": name, "op": "gate_up", "M": S, "K": h, "N": f"2x{f}",
+        "gemms_unfused": 2, "gemms_fused": 1,
+        "unfused_ms": round(t["unfused"] * 1e3, 3),
+        "fused_ms": round(t["fused"] * 1e3, 3),
+        "speedup": round(t["unfused"] / t["fused"], 3),
+        "bit_exact": True,
+    }
+
+
+def _epilogue_row(label, spec, rng, reps, n=2048, k=2048):
+    """One epilogue spec: fused-in-execute vs execute -> XLA op."""
+    w = jnp.asarray(rng.standard_normal((k, n)) * 0.02, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((S, k)), jnp.float32)
+    pw = packing.pack(w)
+    base = G.plan_for_packed(S, pw, backend="xla")
+    fplan = G.plan_for_packed(S, pw, backend="xla", epilogue=spec)
+    bias = (jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+            if spec.bias else None)
+    res = (jnp.asarray(rng.standard_normal((S, n)), jnp.float32)
+           if spec.residual else None)
+
+    @jax.jit
+    def unfused(x, pw):
+        acc = G.execute(base, x, pw, out_dtype=jnp.float32)
+        return G.apply_epilogue(acc, spec, bias=bias,
+                                residual=res).astype(x.dtype)
+
+    @jax.jit
+    def fused(x, pw):
+        return G.execute(fplan, x, pw, bias=bias, residual=res)
+
+    bitexact.assert_bit_identical(np.asarray(unfused(x, pw)),
+                                  np.asarray(fused(x, pw)),
+                                  f"epilogue {label}")
+    t = _timer(reps)({"unfused": lambda: unfused(x, pw),
+                      "fused": lambda: fused(x, pw)})
+    return {
+        "model": "epilogue", "op": label, "M": S, "K": k, "N": n,
+        "gemms_unfused": 1, "gemms_fused": 1,
+        "unfused_ms": round(t["unfused"] * 1e3, 3),
+        "fused_ms": round(t["fused"] * 1e3, 3),
+        "speedup": round(t["unfused"] / t["fused"], 3),
+        "bit_exact": True,
+    }
+
+
+def run(scale: int = 4, reps: int = 7, dry_run: bool = False):
+    rng = np.random.default_rng(7)
+    rows = []
+    if dry_run:
+        rows.append(_qkv_row("dry", 256, rng, 1))
+        rows.append(_glu_row("dry", 256, 384, rng, 1))
+        rows.append(_epilogue_row("bias+gelu+residual", EPILOGUES[-1][1],
+                                  rng, 1, n=256, k=256))
+        return rows
+    for name, h, f in SHAPES:
+        rows.append(_qkv_row(name, h // scale, rng, reps))
+        rows.append(_glu_row(name, h // scale, f // scale, rng, reps))
+    for label, spec in EPILOGUES:
+        rows.append(_epilogue_row(label, spec, rng, reps,
+                                  n=2048 // scale * 2, k=2048 // scale * 2))
+    return rows
+
+
+def main(argv=()):
+    dry = "--dry-run" in argv
+    full = "--full" in argv
+    rows = run(scale=1 if full else 4, dry_run=dry)
+    common.print_csv("table7_fusion", rows)
+    if dry:
+        print("dry-run OK: fused == unfused bitwise on every mode")
+        return rows
+    common.write_table("table7_fusion", rows, meta={
+        "note": "horizontal QKV/gate-up fusion + fused epilogues vs the "
+                "unfused execute -> XLA op sequence; bit_exact asserted "
+                "for fp32 before timing; jitted, interleaved reps",
+        "scale": 1 if full else 4, "reps": 7})
+    # machine-readable perf baseline: the numbers later PRs diff
+    # against.  Written NEXT TO the benchmarks (benchmarks/out/ is
+    # gitignored; the baseline is version-tracked from this PR on).
+    summary = {
+        "per_block_gemms": {"unfused": 7, "fused": 4, "saved": 3},
+        "speedups": {f"{r['model']}/{r['op']}": r["speedup"]
+                     for r in rows},
+        "rows": rows,
+        "all_bit_exact": all(r["bit_exact"] for r in rows),
+    }
+    import json
+    import os
+    path = os.path.join(os.path.dirname(__file__), "BENCH_fusion.json")
+    with open(path, "w") as f:
+        json.dump({"meta": {"baseline_of": "table7_fusion",
+                            "tracked_since": "fused-epilogue panel GEMM "
+                                             "PR",
+                            "protocol": "jitted, interleaved reps, "
+                                        "median; scale=4 unless --full"},
+                   "baseline": summary}, f, indent=1)
+    print(f"baseline -> {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

@@ -10,6 +10,7 @@ Run: PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro import gemm as G
@@ -46,6 +47,26 @@ print("packed == per-call bitwise:", True)
 print("max|packed - xla| (fp32 reorder only): "
       f"{bitexact.max_abs_diff_sampled(y_packed, y_xla, 997):.2e}")
 print("plan cache:", G.plan_cache_info())
+
+# --- horizontal fusion + fused epilogue (one pass above the inner loop) --
+from repro.core import packing  # noqa: E402
+
+w_gate = jnp.asarray(rng.standard_normal((2048, 2048)), jnp.float32)
+w_up = jnp.asarray(rng.standard_normal((2048, 2048)), jnp.float32)
+# the pack blocks reserve VMEM for the glu store phase (two weight tiles
+# + two accumulators), so pack and plan agree — model_zoo does this for
+# every fused group at load
+glu = G.EpilogueSpec(glu="silu")
+bn, bk = G.pack_blocks(2 * 2048, 2048, epilogue=glu)
+pw_gu = packing.pack_fused([w_gate, w_up], block_n=bn, block_k=bk)
+p_glu = G.plan_for_packed(128, pw_gu, epilogue=glu)
+x2 = jnp.asarray(rng.standard_normal((128, 2048)), jnp.float32)
+h = G.execute(p_glu, x2, pw_gu)                  # silu(gate) * up, one GEMM
+unfused = jnp.asarray(
+    jax.jit(lambda a: (jax.nn.silu(a @ w_gate) * (a @ w_up)))(x2))
+bitexact.assert_bit_identical(np.asarray(h), unfused, "fused glu vs 2 GEMMs")
+print("fused gate-up (1 GEMM, glu epilogue) == unfused (2 GEMMs + 2 ops):",
+      True)
 
 # --- a whole model through the packed path ------------------------------
 cfg = model_zoo.reduced_config(model_zoo.get_config("deepseek-7b"))

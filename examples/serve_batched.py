@@ -37,6 +37,9 @@ def main():
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--no-fusion", action="store_true",
+                    help="serve with horizontal QKV/gate-up fusion OFF "
+                         "(A/B the fused GEMM path in place)")
     args = ap.parse_args()
 
     cfg = model_zoo.reduced_config(model_zoo.get_config(args.arch))
@@ -57,8 +60,10 @@ def main():
     max_len += (-max_len) % args.page_size
 
     t0 = time.perf_counter()
-    eng = Engine(cfg, params, mesh=mesh, max_len=max_len, packed=True)
-    print(f"model load + pack (untimed): {time.perf_counter() - t0:.2f}s")
+    eng = Engine(cfg, params, mesh=mesh, max_len=max_len, packed=True,
+                 fuse=not args.no_fusion)
+    print(f"model load + pack (untimed): {time.perf_counter() - t0:.2f}s  "
+          f"[fused GEMMs {'off' if args.no_fusion else 'on'}]")
 
     # warm both paths' traces (compile is part of model load, not serving)
     warm = requests[:2]

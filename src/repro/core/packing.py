@@ -36,15 +36,24 @@ class PackedWeight:
 
     data: [K_pad, N_pad] row-major, zero-padded to block multiples.
     n, k: logical (unpadded) dims.  block_n/block_k: the pack granularity.
+
+    A *fused* pack (``pack_fused``) concatenates several same-K weights
+    along N, each part individually padded to a ``block_n`` multiple so no
+    kernel column tile straddles two parts.  ``n_splits`` is the static
+    split map — the parts' LOGICAL widths, in order; for a fused pack
+    ``n`` is the kernel-visible concatenated width (interior zero padding
+    included).  ``n_splits == ()`` marks an ordinary single-weight pack.
     """
     data: jax.Array
     n: int = dataclasses.field(metadata=dict(static=True))
     k: int = dataclasses.field(metadata=dict(static=True))
     block_n: int = dataclasses.field(metadata=dict(static=True))
     block_k: int = dataclasses.field(metadata=dict(static=True))
+    n_splits: tuple = dataclasses.field(default=(),
+                                        metadata=dict(static=True))
 
     @property
-    def shape(self):  # logical shape
+    def shape(self):  # logical shape (fused: padded-concat width)
         return (self.k, self.n)
 
     @property
@@ -95,6 +104,55 @@ def pack(
     if sharding is not None:
         w = jax.device_put(w, sharding)
     return PackedWeight(data=w, n=n, k=k, block_n=block_n, block_k=block_k)
+
+
+def pack_fused(
+    parts,                             # sequence of [K, Ni] (or [Ni, K])
+    *,
+    transposed: bool = False,
+    block_n: int = _kernel.DEFAULT_BLOCK_N,
+    block_k: int = _kernel.DEFAULT_BLOCK_K,
+    dtype: Any = None,
+    sharding: jax.sharding.Sharding | None = None,
+) -> PackedWeight:
+    """Horizontally fuse same-input weights into ONE pack (paper lever 2
+    applied across projections): concatenate along N at load, so one
+    kernel pass streams the shared activations once and produces every
+    part (QKV; gate+up for the glu epilogue).
+
+    Each part is padded to a ``block_n`` multiple before the concat —
+    column tiles never straddle parts, which is what lets (a) the output
+    split map stay static (``gemm.split_fused``) and (b) the glu kernel
+    address gate/up halves by tile offset.  Parts may also be stacked
+    ``[L, K, Ni]`` (scan-over-layers weights); the leading dim rides
+    through untouched.
+    """
+    ws = [jnp.swapaxes(w, -1, -2) if transposed else w for w in parts]
+    if len(ws) < 2:
+        raise ValueError("pack_fused needs at least two weights; "
+                         "use pack() for one")
+    k = ws[0].shape[-2]
+    if any(w.shape[-2] != k or w.ndim != ws[0].ndim for w in ws):
+        raise ValueError(
+            f"fused parts must share K and rank; got "
+            f"{[tuple(w.shape) for w in ws]}")
+    if dtype is not None:
+        ws = [w.astype(dtype) for w in ws]
+    block_k = fit_block(k, block_k)
+    bn = min(fit_block(w.shape[-1], block_n) for w in ws)
+    n_splits = tuple(int(w.shape[-1]) for w in ws)
+    pk = (-k) % block_k
+
+    def pad(w):
+        pn = (-w.shape[-1]) % bn
+        cfg = [(0, 0)] * (w.ndim - 2) + [(0, pk), (0, pn)]
+        return jnp.pad(w, cfg) if pk or pn else w
+
+    data = jnp.concatenate([pad(w) for w in ws], axis=-1)
+    if sharding is not None:
+        data = jax.device_put(data, sharding)
+    return PackedWeight(data=data, n=int(data.shape[-1]), k=k,
+                        block_n=bn, block_k=block_k, n_splits=n_splits)
 
 
 def pack_percall(w: jax.Array, *, transposed: bool, block_n: int,

@@ -16,22 +16,25 @@ from repro.gemm.backends import (Backend, UnknownBackendError,
                                  list_backends, register_backend,
                                  unregister_backend, use_backend)
 from repro.gemm.execute import (PlanMismatchError, execute, lead_m,
-                                pack_for_plan, validate_plan)
-from repro.gemm.plan import (GemmPlan, LEVER_FINE_PANELS, LEVER_PREPACK,
-                             PACK_NONE, PACK_PERCALL, PACK_PREPACKED)
+                                pack_for_plan, split_fused, validate_plan)
+from repro.gemm.plan import (EpilogueSpec, GemmPlan, LEVER_FINE_PANELS,
+                             LEVER_PREPACK, PACK_NONE, PACK_PERCALL,
+                             PACK_PREPACKED)
 from repro.gemm.policy import (DEFAULT_NUM_CORES, PREFILL_M_BUCKETS,
                                bucket_m, pack_blocks, plan,
                                plan_cache_clear, plan_cache_info,
                                plan_for_packed, policy_table)
+from repro.kernels.panel_gemm import apply_epilogue
 
 __all__ = [
-    "Backend", "GemmPlan", "PlanMismatchError", "UnknownBackendError",
+    "Backend", "EpilogueSpec", "GemmPlan", "PlanMismatchError",
+    "UnknownBackendError",
     "LEVER_FINE_PANELS", "LEVER_PREPACK", "DEFAULT_NUM_CORES",
     "PACK_NONE", "PACK_PERCALL", "PACK_PREPACKED", "PREFILL_M_BUCKETS",
-    "bucket_m", "default_backend", "execute", "get_backend", "lead_m",
-    "list_backends",
+    "apply_epilogue", "bucket_m", "default_backend", "execute",
+    "get_backend", "lead_m", "list_backends",
     "pack_blocks", "pack_for_plan", "plan", "plan_cache_clear",
     "plan_cache_info", "plan_for_packed", "policy_table",
-    "register_backend", "unregister_backend", "use_backend",
-    "validate_plan",
+    "register_backend", "split_fused", "unregister_backend",
+    "use_backend", "validate_plan",
 ]

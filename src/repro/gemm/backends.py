@@ -124,21 +124,36 @@ def use_backend(name: str | None) -> Iterator[None]:
 
 
 # ------------------------------------------------------------ builtin runs
-def _run_xla(x_p, w_p, *, block_m, block_n, block_k, out_dtype):
+# Epilogue kwargs (epilogue=, bias=, residual=) are passed ONLY when the
+# plan carries an EpilogueSpec, so registered backends that predate the
+# fused-epilogue surface keep working for plain plans unchanged.
+def _run_xla(x_p, w_p, *, block_m, block_n, block_k, out_dtype,
+             epilogue=None, bias=None, residual=None):
     del block_m, block_n, block_k
-    return jnp.dot(x_p, w_p, preferred_element_type=jnp.float32).astype(
-        out_dtype or x_p.dtype)
+    acc = jnp.dot(x_p, w_p, preferred_element_type=jnp.float32)
+    if epilogue is not None:
+        # same jnp ops as the kernel store phase, on the fp32 result —
+        # the "fusion" here is XLA's own elementwise fusion, but the
+        # numerics contract (fp32 epilogue, single final cast) is
+        # identical to the Pallas path's
+        acc = _kernel.apply_epilogue(acc, epilogue, bias=bias,
+                                     residual=residual)
+    return acc.astype(out_dtype or x_p.dtype)
 
 
-def _run_pallas(x_p, w_p, *, block_m, block_n, block_k, out_dtype):
-    return _kernel.panel_gemm(x_p, w_p, block_m=block_m, block_n=block_n,
-                              block_k=block_k, out_dtype=out_dtype,
+def _run_pallas(x_p, w_p, *, block_m, block_n, block_k, out_dtype,
+                epilogue=None, bias=None, residual=None):
+    return _kernel.panel_gemm(x_p, w_p, bias, residual, block_m=block_m,
+                              block_n=block_n, block_k=block_k,
+                              out_dtype=out_dtype, epilogue=epilogue,
                               interpret=False)
 
 
-def _run_interpret(x_p, w_p, *, block_m, block_n, block_k, out_dtype):
-    return _kernel.panel_gemm(x_p, w_p, block_m=block_m, block_n=block_n,
-                              block_k=block_k, out_dtype=out_dtype,
+def _run_interpret(x_p, w_p, *, block_m, block_n, block_k, out_dtype,
+                   epilogue=None, bias=None, residual=None):
+    return _kernel.panel_gemm(x_p, w_p, bias, residual, block_m=block_m,
+                              block_n=block_n, block_k=block_k,
+                              out_dtype=out_dtype, epilogue=epilogue,
                               interpret=True)
 
 

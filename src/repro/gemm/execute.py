@@ -25,6 +25,7 @@ from repro.core import packing
 from repro.gemm import backends as _backends
 from repro.gemm.plan import GemmPlan, PACK_NONE
 from repro.gemm.policy import _bitexact_gate
+from repro.kernels.panel_gemm import EpilogueSpec  # noqa: F401 (re-export)
 
 
 class PlanMismatchError(ValueError):
@@ -55,8 +56,9 @@ def _pad_cols(x: jax.Array, to: int) -> jax.Array:
     return jnp.pad(x, ((0, 0), (0, pad))) if pad else x
 
 
-def execute(p: GemmPlan, x: jax.Array, w, *, out_dtype=None) -> jax.Array:
-    """y[..., N] = x[..., K] @ w, dispatched per ``p`` (see module doc).
+def execute(p: GemmPlan, x: jax.Array, w, *, bias=None, residual=None,
+            out_dtype=None) -> jax.Array:
+    """y[..., N_out] = epilogue(x[..., K] @ w), dispatched per ``p``.
 
     Shapes and pack blocks are checked against the plan; ``p.dtype`` is
     cache-keying metadata, NOT an executed constraint — mixed-dtype
@@ -64,8 +66,22 @@ def execute(p: GemmPlan, x: jax.Array, w, *, out_dtype=None) -> jax.Array:
     dry-run, and vice versa) are legitimate and promote as jnp.dot
     would.  The bit-exactness gate (``validate_plan``) attests the
     block-order accumulation discipline, which holds per operand dtype.
+
+    Epilogue operands: ``bias`` [N] and ``residual`` [..., N_out] must be
+    supplied exactly when the plan's ``EpilogueSpec`` declares them; both
+    are cast to fp32 here (the epilogue contract runs on the fp32
+    accumulator).  A plan with ``fused_n_splits`` returns the full
+    concatenated output — slice per part with :func:`split_fused` — except
+    under a glu epilogue, where the halves are combined in the store step
+    and only the single ``p.n_out``-wide result comes back.
     """
     backend = _backends.get_backend(p.backend)
+    spec = p.epilogue
+    _check((bias is not None) == bool(spec is not None and spec.bias),
+           f"bias operand vs plan epilogue {spec} ({p.describe()})")
+    _check((residual is not None) == bool(spec is not None
+                                          and spec.residual),
+           f"residual operand vs plan epilogue {spec} ({p.describe()})")
     lead = x.shape[:-1]
     _check(x.shape[-1] == p.k,
            f"operand K={x.shape[-1]} vs plan K={p.k} ({p.describe()})")
@@ -80,8 +96,13 @@ def execute(p: GemmPlan, x: jax.Array, w, *, out_dtype=None) -> jax.Array:
         _check((w.block_n, w.block_k) == (p.block_n, p.block_k),
                f"pack blocks ({w.block_n},{w.block_k}) vs plan "
                f"({p.block_n},{p.block_k}); pack with pack_for_plan()")
+        _check(w.n_splits == p.fused_n_splits,
+               f"pack splits {w.n_splits} vs plan {p.fused_n_splits}")
         w_p = w.data
     else:
+        _check(not p.fused_n_splits and not p.glu,
+               "fused plans execute against pack_fused weights only "
+               "(a raw concat cannot keep the parts block-aligned)")
         ww = w.T if p.transposed else w
         _check(ww.shape == (p.k, p.n),
                f"weight {tuple(ww.shape)} vs plan ({p.k},{p.n})")
@@ -102,9 +123,64 @@ def execute(p: GemmPlan, x: jax.Array, w, *, out_dtype=None) -> jax.Array:
     if backend.needs_blocks:
         x2 = _pad_rows(x2, p.block_m)
 
+    out_cols = w_p.shape[1] // 2 if p.glu else w_p.shape[1]
+    epi_kw = {}
+    if spec is not None:
+        b2 = r2 = None
+        if bias is not None:
+            if p.fused_n_splits:
+                # per-part biases, padded into the pack's column layout
+                parts = (list(bias) if isinstance(bias, (tuple, list))
+                         else None)
+                _check(parts is not None
+                       and len(parts) == len(p.fused_n_splits),
+                       f"fused plan needs one bias per part "
+                       f"{p.fused_n_splits}")
+                padded = []
+                for b, ni in zip(parts, p.fused_n_splits):
+                    b = jnp.asarray(b, jnp.float32).reshape(-1)
+                    _check(b.shape[0] == ni,
+                           f"bias width {b.shape[0]} vs part width {ni}")
+                    padded.append(jnp.pad(b, (0, (-ni) % p.block_n)))
+                b2 = jnp.concatenate(padded)
+            else:
+                b2 = jnp.asarray(bias, jnp.float32).reshape(-1)
+                _check(b2.shape[0] == p.n,
+                       f"bias width {b2.shape[0]} vs plan N={p.n}")
+            b2 = jnp.pad(b2, (0, w_p.shape[1] - b2.shape[0]))
+        if residual is not None:
+            r2 = residual.reshape(-1, residual.shape[-1])
+            _check(r2.shape == (m, p.n_out),
+                   f"residual {tuple(r2.shape)} vs plan ({m},{p.n_out})")
+            r2 = _pad_cols(r2.astype(jnp.float32), out_cols)
+            if backend.needs_blocks:
+                r2 = _pad_rows(r2, p.block_m)
+        epi_kw = dict(epilogue=spec, bias=b2, residual=r2)
+
     y = backend.run(x2, w_p, block_m=p.block_m, block_n=p.block_n,
-                    block_k=p.block_k, out_dtype=out_dtype)
-    return y[:m, :p.n].reshape(*lead, p.n)
+                    block_k=p.block_k, out_dtype=out_dtype, **epi_kw)
+    return y[:m, :p.n_out].reshape(*lead, p.n_out)
+
+
+def split_fused(p: GemmPlan, y: jax.Array) -> tuple:
+    """Slice a fused execute()'s output into its logical parts.
+
+    The split map is static: part ``i`` starts at the sum of the earlier
+    parts' PADDED widths (each padded to ``p.block_n`` at pack time) and
+    is ``p.fused_n_splits[i]`` columns wide.  XLA fuses these slices into
+    the consumers, so the split costs nothing at run time.
+    """
+    if not p.fused_n_splits:
+        raise ValueError(f"plan carries no fused split map: "
+                         f"{p.describe()}")
+    if p.glu:
+        raise ValueError("glu plans combine their halves in the kernel; "
+                         "there is nothing to split")
+    outs, off = [], 0
+    for ni in p.fused_n_splits:
+        outs.append(y[..., off:off + ni])
+        off += -(-ni // p.block_n) * p.block_n
+    return tuple(outs)
 
 
 def pack_for_plan(p: GemmPlan, w: jax.Array, *, transposed: bool | None = None,
@@ -119,5 +195,9 @@ def pack_for_plan(p: GemmPlan, w: jax.Array, *, transposed: bool | None = None,
 
 def validate_plan(p: GemmPlan) -> bool:
     """Run (memoized) the autotune bit-exactness gate on the plan's block
-    triple: interpret-mode kernel vs ``kernels/ref.gemm_blocked``."""
-    return _bitexact_gate(p.block_m, p.block_n, p.block_k)
+    triple — and its epilogue, if any: the fused interpret-mode kernel
+    must be bit-identical to the unfused ``kernel -> jnp epilogue``
+    sequence (plain plans keep the ``kernels/ref.gemm_blocked`` oracle).
+    """
+    return _bitexact_gate(p.block_m, p.block_n, p.block_k,
+                          epilogue=p.epilogue)

@@ -25,6 +25,8 @@ import math
 
 import jax
 
+from repro.kernels.panel_gemm import EpilogueSpec  # noqa: F401  (re-export)
+
 LEVER_FINE_PANELS = "fine_panels"   # K >= N: occupancy-sized column panels
 LEVER_PREPACK = "prepack"           # N > K: deep-K pre-packed weight
 
@@ -44,6 +46,14 @@ class GemmPlan:
     ([N, K] llama.cpp convention when True); a ``PackedWeight`` operand
     ignores it.  ``sharding_key`` keeps plans for differently-placed
     operands distinct in the cache without holding device objects.
+
+    Fusion fields: ``epilogue`` is the statically-planned
+    :class:`~repro.kernels.panel_gemm.EpilogueSpec` the store step
+    applies (None = plain GEMM); ``fused_n_splits`` is the horizontal
+    split map of a ``pack_fused`` weight (logical part widths — ``n`` is
+    then the padded concatenated width).  ``vmem_clamped`` records that
+    the policy shrank the requested blocks to honor the kernel VMEM
+    budget.
     """
     m: int
     n: int
@@ -60,6 +70,9 @@ class GemmPlan:
     transposed: bool = False
     sharding_key: str = ""
     validated: bool = False
+    epilogue: EpilogueSpec | None = None
+    fused_n_splits: tuple = ()
+    vmem_clamped: bool = False
 
     # ----------------------------------------------------------- geometry
     @property
@@ -88,8 +101,34 @@ class GemmPlan:
     def shape(self) -> tuple[int, int, int]:
         return (self.m, self.n, self.k)
 
+    @property
+    def glu(self) -> bool:
+        return self.epilogue is not None and self.epilogue.glu is not None
+
+    @property
+    def n_out(self) -> int:
+        """Output column count execute() returns.
+
+        A glu epilogue combines the two column halves of the fused weight
+        (output = one logical part); everything else keeps the weight's
+        N (fused non-glu output carries every part — ``split_fused``
+        slices it by the static split map).
+        """
+        if self.glu:
+            return (self.fused_n_splits[0] if self.fused_n_splits
+                    else self.n // 2)
+        return self.n
+
     def describe(self) -> str:
         """One-line human summary (benchmarks / logs)."""
+        epi = ""
+        if self.epilogue is not None:
+            epi = f", epilogue={self.epilogue}"
+        if self.fused_n_splits:
+            epi += f", fused={self.fused_n_splits}"
+        if self.vmem_clamped:
+            epi += ", vmem_clamped"
         return (f"GemmPlan[{self.m}x{self.n}x{self.k} {self.dtype} "
                 f"-> {self.backend}, blocks=({self.block_m},{self.block_n},"
-                f"{self.block_k}), lever={self.lever}, pack={self.pack}]")
+                f"{self.block_k}), lever={self.lever}, pack={self.pack}"
+                f"{epi}]")

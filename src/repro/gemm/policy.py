@@ -31,10 +31,13 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
+import jax
+
 from repro.core import bitexact, packing, scheduler
 from repro.gemm import backends as _backends
-from repro.gemm.plan import (GemmPlan, LEVER_FINE_PANELS, LEVER_PREPACK,
-                             PACK_NONE, PACK_PERCALL, PACK_PREPACKED)
+from repro.gemm.plan import (EpilogueSpec, GemmPlan, LEVER_FINE_PANELS,
+                             LEVER_PREPACK, PACK_NONE, PACK_PERCALL,
+                             PACK_PREPACKED)
 from repro.kernels import panel_gemm as _kernel
 
 # Occupancy target of the fine-panel lever: the paper tunes panels against
@@ -93,10 +96,36 @@ def _fine_block_n(m: int, n: int, k: int, *, block_m: int, block_k: int,
     return min(cands, key=score)
 
 
+def _fit_vmem(bm: int, bn: int, bk: int, dtype: str,
+              epilogue: EpilogueSpec | None):
+    """Shrink the block triple until ``kernels.panel_gemm.vmem_bytes``
+    fits the VMEM budget (satellite: an explicit or fused-wide triple —
+    a glu epilogue doubles the weight + accumulator tiles — could
+    otherwise exceed it).  Shrinks the deeper of (block_k, block_n)
+    first; every candidate still divides the padded dim because padded
+    dims are 128-multiples and the shrink path halves toward 128."""
+    dt = jnp.dtype(dtype)
+    clamped = False
+    while _kernel.vmem_bytes(bm, bn, bk, dt,
+                             epilogue=epilogue) > _kernel.VMEM_BUDGET:
+        if bk >= bn and bk > 128:
+            bk = max(128, bk // 2)
+        elif bn > 128:
+            bn = max(128, bn // 2)
+        elif bm > 8:
+            bm = max(8, bm // 2)
+        else:
+            break                      # minimal blocks; nothing left
+        clamped = True
+    return bm, bn, bk, clamped
+
+
 def _resolve(m: int, n: int, k: int, *, dtype: str, backend: str,
              num_cores: int, block_m: int | None, block_n: int | None,
              block_k: int | None, pack: str | None, transposed: bool,
-             sharding_key: str, validate: bool) -> GemmPlan:
+             sharding_key: str, validate: bool,
+             epilogue: EpilogueSpec | None = None,
+             fused_n_splits: tuple = ()) -> GemmPlan:
     bm = block_m or min(_kernel.DEFAULT_BLOCK_M, _rnd_up(m, 8))
     if k >= n:                              # lever 1: fine panels
         lever = LEVER_FINE_PANELS
@@ -112,21 +141,25 @@ def _resolve(m: int, n: int, k: int, *, dtype: str, backend: str,
     pack = pack or default_pack
     if pack not in (PACK_PREPACKED, PACK_PERCALL, PACK_NONE):
         raise ValueError(f"unknown pack decision {pack!r}")
+    bm, bn, bk, clamped = _fit_vmem(bm, bn, bk, dtype, epilogue)
 
     sched = scheduler.plan(m, n, k, block_m=bm, block_n=bn, block_k=bk,
                            num_cores=num_cores)
     validated = False
     if validate:
-        if not _bitexact_gate(bm, bn, bk):
+        if not _bitexact_gate(bm, bn, bk, epilogue=epilogue):
             raise RuntimeError(
                 f"blocks ({bm},{bn},{bk}) failed the bit-exactness gate "
-                f"vs kernels/ref.gemm_blocked (autotune reject protocol)")
+                f"(epilogue={epilogue}) vs the unfused kernel -> op "
+                f"oracle (autotune reject protocol)")
         validated = True
     return GemmPlan(m=m, n=n, k=k, dtype=dtype, backend=backend,
                     block_m=bm, block_n=bn, block_k=bk, pack=pack,
                     lever=lever, t_pred=sched.t_pred,
                     occupancy=sched.occupancy, transposed=transposed,
-                    sharding_key=sharding_key, validated=validated)
+                    sharding_key=sharding_key, validated=validated,
+                    epilogue=epilogue, fused_n_splits=fused_n_splits,
+                    vmem_clamped=clamped)
 
 
 def _rnd_up(x: int, mult: int) -> int:
@@ -155,26 +188,48 @@ def bucket_m(m: int) -> int:
 
 
 # --------------------------------------------------------- bit-exact gate
-_gate_memo: dict[tuple[int, int, int], bool] = {}
+_gate_memo: dict[tuple, bool] = {}
 
 
-def _bitexact_gate(bm: int, bn: int, bk: int, *, reduced_k_blocks: int = 2,
-                   seed: int = 0) -> bool:
+def _bitexact_gate(bm: int, bn: int, bk: int, *,
+                   epilogue: EpilogueSpec | None = None,
+                   reduced_k_blocks: int = 2, seed: int = 0) -> bool:
     """core/autotune's reject protocol for one block triple: interpret-mode
     kernel on a reduced shape with a real K-carry must be BIT-IDENTICAL to
-    the blocked oracle.  Memoized — the gate runs once per triple."""
-    key = (bm, bn, bk)
+    the blocked oracle.  With an epilogue the oracle is the UNFUSED
+    sequence — plain kernel to an fp32 accumulator, then the same jnp
+    epilogue ops (``apply_epilogue``) under jit — so the gate covers
+    every ``EpilogueSpec``, glu included.  Memoized per (triple, spec)."""
+    key = (bm, bn, bk, epilogue)
     if key in _gate_memo:
         return _gate_memo[key]
     from repro.kernels import ref
     rng = np.random.default_rng(seed)
-    m_r, k_r, n_r = bm, reduced_k_blocks * bk, bn
+    glu = epilogue is not None and epilogue.glu is not None
+    m_r, k_r = bm, reduced_k_blocks * bk
+    n_r = 2 * bn if glu else bn
     x = jnp.asarray(rng.standard_normal((m_r, k_r)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((k_r, n_r)), jnp.float32)
-    y = _kernel.panel_gemm(x, w, block_m=bm, block_n=bn, block_k=bk,
-                           interpret=True)
-    ok = bitexact.bit_identical(np.asarray(y),
-                                np.asarray(ref.gemm_blocked(x, w, bk)))
+    if epilogue is None:
+        y = _kernel.panel_gemm(x, w, block_m=bm, block_n=bn, block_k=bk,
+                               interpret=True)
+        oracle = ref.gemm_blocked(x, w, bk)
+    else:
+        n_out = bn if glu else n_r
+        bias = (jnp.asarray(rng.standard_normal((n_r,)), jnp.float32)
+                if epilogue.bias else None)
+        res = (jnp.asarray(rng.standard_normal((m_r, n_out)), jnp.float32)
+               if epilogue.residual else None)
+        y = _kernel.panel_gemm(x, w, bias, res, block_m=bm, block_n=bn,
+                               block_k=bk, epilogue=epilogue,
+                               interpret=True)
+        acc = _kernel.panel_gemm(x, w, block_m=bm, block_n=bn, block_k=bk,
+                                 out_dtype=jnp.float32, interpret=True)
+        oracle = jax.jit(
+            lambda a, b, r: _kernel.apply_epilogue(
+                a, epilogue, bias=b, residual=r).astype(jnp.float32)
+        )(acc, bias, res)
+    ok = bitexact.bit_identical(np.asarray(y), np.asarray(oracle))
     _gate_memo[key] = ok
     return ok
 
@@ -185,7 +240,8 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
          block_m: int | None = None, block_n: int | None = None,
          block_k: int | None = None, pack: str | None = None,
          transposed: bool = False, sharding: Any = None,
-         validate: bool = False) -> GemmPlan:
+         validate: bool = False, epilogue: EpilogueSpec | None = None,
+         fused_n_splits: tuple = ()) -> GemmPlan:
     """Resolve (and cache) the dispatch plan for a ``[m,k] @ [k,n]`` GEMM.
 
     ``backend=None`` takes the current default (``use_backend`` scope or
@@ -193,14 +249,20 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
     the ``core/panel_gemm`` shims).  Explicit ``block_*`` / ``pack``
     override the policy (benchmark sweeps, baseline paths);
     ``validate=True`` runs the autotune bit-exactness gate on the
-    resolved blocks before the plan is issued.
+    resolved blocks (and ``epilogue``, if any) before the plan is issued.
+    ``epilogue`` / ``fused_n_splits`` are plan-keyed: a fused and an
+    unfused plan for the same shape are distinct cache entries.
     """
     global _hits, _misses
     backend = _backends.resolve_backend(backend)
     dtype = _dtype_name(dtype)
     skey = _sharding_key(sharding)
+    if epilogue is not None and epilogue.is_noop:
+        epilogue = None
+    fused_n_splits = tuple(int(s) for s in fused_n_splits)
     key = (int(m), int(n), int(k), dtype, backend, num_cores, block_m,
-           block_n, block_k, pack, bool(transposed), skey, bool(validate))
+           block_n, block_k, pack, bool(transposed), skey, bool(validate),
+           epilogue, fused_n_splits)
     with _cache_lock:
         hit = _cache.get(key)
         if hit is not None:
@@ -211,7 +273,8 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
     p = _resolve(int(m), int(n), int(k), dtype=dtype, backend=backend,
                  num_cores=num_cores, block_m=block_m, block_n=block_n,
                  block_k=block_k, pack=pack, transposed=bool(transposed),
-                 sharding_key=skey, validate=validate)
+                 sharding_key=skey, validate=validate, epilogue=epilogue,
+                 fused_n_splits=fused_n_splits)
     with _cache_lock:
         _cache[key] = p
         while len(_cache) > _CACHE_MAXSIZE:
@@ -219,26 +282,50 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
     return p
 
 
+def _packed_sharding(pw: packing.PackedWeight):
+    """The placement a packed weight actually carries, for the plan key.
+
+    Fixes the plan_for_packed aliasing bug: packs placed with distinct
+    ``NamedSharding``s used to collapse onto one ``sharding_key=""`` plan
+    entry.  Tracers (plan resolution happens at trace time inside jit)
+    and plain single-device arrays key as None — the placement-neutral
+    default — so cache behavior is unchanged for unsharded runs.
+    """
+    try:
+        s = pw.data.sharding
+    except Exception:
+        return None
+    return s if isinstance(s, jax.sharding.NamedSharding) else None
+
+
 def plan_for_packed(m: int, pw: packing.PackedWeight, *,
                     backend: str | None = None,
                     num_cores: int = DEFAULT_NUM_CORES,
-                    validate: bool = False) -> GemmPlan:
+                    validate: bool = False,
+                    epilogue: EpilogueSpec | None = None) -> GemmPlan:
     """Plan for a weight already packed at model load: the block decision
     was made when the pack happened; the plan adopts it (and still records
-    which lever the policy assigns the shape)."""
+    which lever the policy assigns the shape).  A fused pack's static
+    split map and the requested ``epilogue`` ride onto the plan."""
     return plan(m, pw.n, pw.k, dtype=pw.dtype, backend=backend,
                 num_cores=num_cores, block_n=pw.block_n,
-                block_k=pw.block_k, pack=PACK_PREPACKED, validate=validate)
+                block_k=pw.block_k, pack=PACK_PREPACKED, validate=validate,
+                sharding=_packed_sharding(pw), epilogue=epilogue,
+                fused_n_splits=pw.n_splits)
 
 
 def pack_blocks(n: int, k: int, *, m_hint: int = 128,
                 block_n: int | None = None, block_k: int | None = None,
-                num_cores: int = DEFAULT_NUM_CORES) -> tuple[int, int]:
+                num_cores: int = DEFAULT_NUM_CORES,
+                epilogue: EpilogueSpec | None = None) -> tuple[int, int]:
     """The load-time pack decision, policy-resolved: (block_n, block_k)
     for a [k, n] weight.  ``m_hint`` is the serving M the plan targets
-    (the paper's S = 128 prefill row panel)."""
+    (the paper's S = 128 prefill row panel).  ``epilogue`` lets a fused
+    pack reserve VMEM for its store-phase footprint (a glu epilogue
+    doubles the weight/accumulator tiles), so the blocks the pack adopts
+    already fit the budget the execute-time plan will enforce."""
     p = plan(m_hint, n, k, block_n=block_n, block_k=block_k,
-             num_cores=num_cores)
+             num_cores=num_cores, epilogue=epilogue)
     return p.block_n, p.block_k
 
 

@@ -21,9 +21,20 @@ The kernel expects its B operand ALREADY in the packed layout produced by
 ``repro.core.packing`` ([K_pad, N_pad], row-major, block-aligned).  The
 pack is paid once at model load (paper lever 2); this kernel is the
 per-call "compute loop only" path.
+
+Fused epilogue (the lever ABOVE the store): the baseline kernel flushes
+the fp32 accumulator to HBM only for XLA to re-read it for bias /
+activation / residual.  ``EpilogueSpec`` instead applies those ops on the
+fp32 VMEM accumulator inside the ``k == nk-1`` store step (the STZ
+analogue), so the tile leaves VMEM exactly once, already finished.  The
+``glu`` variant carries TWO accumulators over the K grid — gate and up
+column panels of a horizontally fused weight — and stores
+``act(gate) * up``: one pass streams x once for both projections and the
+[M, 2F] intermediate never exists in HBM.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -47,18 +58,164 @@ DEFAULT_BLOCK_K = 2048    # K-blocking depth (lever-2-unlocked knob)
 VMEM_BUDGET = 16 * 1024 * 1024
 
 
+# ------------------------------------------------------------- epilogue
+_EPI_ACTS = ("silu", "gelu", "tanh")
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueSpec:
+    """Statically-planned epilogue applied on the fp32 accumulator at the
+    kernel's single store step (see module docstring).
+
+    Application order: bias add -> glu combine (``act(gate) * up`` over
+    the two column halves) OR plain activation -> tanh softcap ->
+    residual add -> one cast + store.  ``bias`` / ``residual`` are flags;
+    the operands themselves ride the call (``execute(..., bias=,
+    residual=)``).  All ops run in fp32 — for fp32 operands the fused
+    result is bit-identical to the unfused ``kernel -> XLA op`` sequence
+    (the gate ``gemm.validate_plan`` runs per spec).
+    """
+    bias: bool = False
+    act: str | None = None          # "silu" | "gelu" | "tanh"
+    softcap: float | None = None    # cap * tanh(x / cap)
+    residual: bool = False
+    glu: str | None = None          # activation of the gate half
+
+    def __post_init__(self):
+        for name in (self.act, self.glu):
+            if name is not None and name not in _EPI_ACTS:
+                raise ValueError(f"unknown epilogue activation {name!r}; "
+                                 f"choose from {_EPI_ACTS}")
+        if self.act is not None and self.glu is not None:
+            raise ValueError("act and glu are mutually exclusive (glu "
+                             "already applies its activation to the gate)")
+
+    @property
+    def is_noop(self) -> bool:
+        return not (self.bias or self.act or self.softcap is not None
+                    or self.residual or self.glu)
+
+
+_GELU_C = 0.7978845608028654        # sqrt(2 / pi)
+
+
+def _gelu_tanh(x):
+    # jax.nn.gelu's internals get rewritten differently inside the Pallas
+    # interpreter vs plain XLA (bit drift ~5e-7); this explicit tanh
+    # formulation lowers identically in both, which the fused-vs-unfused
+    # bitwise contract needs.  Every epilogue-capable path (kernel, xla
+    # backend, unfused layers) routes gelu through here.
+    return 0.5 * x * (1.0 + jnp.tanh(_GELU_C * (x + 0.044715 * (x * x * x))))
+
+
+def act_fn(name: str):
+    """The repo-wide activation table (see ``_gelu_tanh`` for why gelu is
+    hand-rolled).  Shared by the kernel epilogue, the XLA epilogue path,
+    and the unfused ``models.layers`` ops, so fused == unfused holds
+    bitwise for fp32.  Unknown names raise — a typo'd ``cfg.act`` must
+    not silently compute tanh."""
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return _gelu_tanh
+    if name == "tanh":
+        return jnp.tanh
+    raise ValueError(f"unknown activation {name!r}; choose from "
+                     f"{_EPI_ACTS}")
+
+
+_act_fn = act_fn
+
+
+def _finish(spec: EpilogueSpec, acc, residual):
+    """Post-activation epilogue steps, shared by kernel and reference.
+
+    Softcap multiplies by the host-computed reciprocal instead of
+    dividing: XLA rewrites ``x / const`` to ``x * (1/const)`` outside
+    Pallas but not inside the interpreter, which would break the
+    fused-vs-unfused bitwise contract."""
+    if spec.softcap is not None:
+        acc = spec.softcap * jnp.tanh(acc * (1.0 / spec.softcap))
+    if spec.residual:
+        acc = acc + residual
+    return acc
+
+
+def apply_epilogue_glu(g: jax.Array, u: jax.Array, spec: EpilogueSpec, *,
+                       bias_g=None, bias_u=None, residual=None):
+    """The glu epilogue on pre-split gate/up fp32 accumulators — the ONE
+    definition shared by the kernel store step (two accumulator tiles)
+    and the xla backend (two half dots), so both are bit-identical to
+    the full-width reference."""
+    g = g.astype(jnp.float32)
+    u = u.astype(jnp.float32)
+    if spec.bias:
+        g = g + bias_g.astype(jnp.float32)
+        u = u + bias_u.astype(jnp.float32)
+    acc = _act_fn(spec.glu)(g) * u
+    res = residual.astype(jnp.float32) if spec.residual else None
+    return _finish(spec, acc, res)
+
+
+def apply_epilogue(acc: jax.Array, spec: EpilogueSpec, *, bias=None,
+                   residual=None) -> jax.Array:
+    """Reference epilogue on a full fp32 accumulator array.
+
+    This is THE semantics the fused kernel store step must match bitwise:
+    the same jnp ops, in the same order, in fp32.  Backends that cannot
+    fuse (xla) call this on the dot's fp32 result; the bit-exactness gate
+    compares the fused kernel against ``unfused kernel -> this``.  For a
+    ``glu`` spec ``acc`` is full width and the halves are combined here.
+    """
+    acc = acc.astype(jnp.float32)
+    if spec.glu is not None:
+        half = acc.shape[-1] // 2
+        b = bias.astype(jnp.float32) if spec.bias else None
+        return apply_epilogue_glu(
+            acc[..., :half], acc[..., half:], spec,
+            bias_g=b[..., :half] if spec.bias else None,
+            bias_u=b[..., half:] if spec.bias else None,
+            residual=residual)
+    if spec.bias:
+        acc = acc + bias.astype(jnp.float32)
+    if spec.act is not None:
+        acc = _act_fn(spec.act)(acc)
+    res = None
+    if spec.residual:
+        res = residual.astype(jnp.float32)
+    return _finish(spec, acc, res)
+
+
 def vmem_bytes(block_m: int, block_n: int, block_k: int,
-               in_dtype=jnp.float32) -> int:
-    """Static VMEM footprint model for one grid step (double-buffered ins)."""
+               in_dtype=jnp.float32, *,
+               epilogue: EpilogueSpec | None = None) -> int:
+    """Static VMEM footprint model for one grid step (double-buffered ins).
+
+    A ``glu`` epilogue streams two weight tiles and carries two fp32
+    accumulators.  The bias/residual operand tiles are budgeted
+    UNCONDITIONALLY: a weight is packed once but may execute under
+    different epilogues (w_down runs with and without the fused residual
+    add), so the footprint a pack's blocks are clamped against must be
+    the worst execute-time footprint — otherwise plan-time clamping
+    could shrink below the pack's blocks and every execute would raise
+    PlanMismatchError.
+    """
     isz = jnp.dtype(in_dtype).itemsize
     x = block_m * block_k * isz
     w = block_k * block_n * isz
     acc = block_m * block_n * 4          # fp32 accumulator scratch
     out = block_m * block_n * isz
-    return 2 * (x + w) + acc + out       # 2x: pipelined double buffering
+    glu = epilogue is not None and epilogue.glu is not None
+    if glu:
+        w *= 2
+        acc *= 2
+    # worst-case epilogue operand headroom (fp32 bias row + residual tile)
+    extra = block_n * 4 * (2 if glu else 1) + block_m * block_n * 4
+    return 2 * (x + w) + acc + out + extra   # 2x: pipelined double buffering
 
 
-def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+def _gemm_kernel(x_ref, w_ref, *refs, nk: int,
+                 spec: EpilogueSpec | None = None):
     """One (i, j, k) grid step: acc[i,j] += x[i,k] @ w[k,j].
 
     The Z-discipline of the paper, verbatim in Pallas terms: the accumulator
@@ -66,7 +223,16 @@ def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
     at the last K step (STZ).  Without the @pl.when guards, one (i, j)
     tile's partial sums leak into the next — the exact silent-drift bug the
     paper calls correctness-critical.
+
+    ``refs`` trail the optional epilogue operands: [bias], [residual],
+    then o_ref and the accumulator scratch.  The epilogue runs INSIDE the
+    STZ step, on the fp32 accumulator, before the single cast+store.
     """
+    refs = list(refs)
+    acc_ref = refs.pop()
+    o_ref = refs.pop()
+    bias_ref = refs.pop(0) if spec is not None and spec.bias else None
+    res_ref = refs.pop(0) if spec is not None and spec.residual else None
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -79,27 +245,78 @@ def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
 
     @pl.when(k == nk - 1)
     def _store():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        acc = acc_ref[...]
+        if spec is not None:
+            if spec.bias:
+                acc = acc + bias_ref[...]          # [1, bn] broadcasts
+            if spec.act is not None:
+                acc = _act_fn(spec.act)(acc)
+            acc = _finish(spec, acc, res_ref[...] if res_ref is not None
+                          else None)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _gemm_glu_kernel(x_ref, wg_ref, wu_ref, *refs, nk: int,
+                     spec: EpilogueSpec):
+    """GLU variant: TWO accumulators ride the K grid — the gate and up
+    column panels of one horizontally fused weight (``core.packing
+    .pack_fused``).  x is loaded once per step and feeds both dots; the
+    store step combines ``act(gate) * up`` on the fp32 accumulators, so
+    the [M, 2F] intermediate never reaches HBM."""
+    refs = list(refs)
+    acc_u_ref = refs.pop()
+    acc_g_ref = refs.pop()
+    o_ref = refs.pop()
+    bg_ref = refs.pop(0) if spec.bias else None
+    bu_ref = refs.pop(0) if spec.bias else None
+    res_ref = refs.pop(0) if spec.residual else None
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_g_ref[...] = jnp.zeros_like(acc_g_ref)
+        acc_u_ref[...] = jnp.zeros_like(acc_u_ref)
+
+    x = x_ref[...]
+    acc_g_ref[...] += jnp.dot(x, wg_ref[...],
+                              preferred_element_type=jnp.float32)
+    acc_u_ref[...] += jnp.dot(x, wu_ref[...],
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _store():
+        acc = apply_epilogue_glu(
+            acc_g_ref[...], acc_u_ref[...], spec,
+            bias_g=bg_ref[...] if bg_ref is not None else None,
+            bias_u=bu_ref[...] if bu_ref is not None else None,
+            residual=res_ref[...] if res_ref is not None else None)
+        o_ref[...] = acc.astype(o_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "interpret", "out_dtype"),
+    static_argnames=("block_m", "block_n", "block_k", "interpret",
+                     "out_dtype", "epilogue"),
 )
 def panel_gemm(
     x: jax.Array,               # [M_pad, K_pad]  activations (pre-padded)
     w: jax.Array,               # [K_pad, N_pad]  packed weight panels
+    bias: jax.Array | None = None,       # [N_pad] fp32 (iff epilogue.bias)
+    residual: jax.Array | None = None,   # [M_pad, N_out_pad] fp32
     *,
     block_m: int = DEFAULT_BLOCK_M,
     block_n: int = DEFAULT_BLOCK_N,
     block_k: int = DEFAULT_BLOCK_K,
     out_dtype=None,
+    epilogue: EpilogueSpec | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """C[M_pad, N_pad] = x @ w via MXU panel tiles.
+    """C[M_pad, N_pad] = epilogue(x @ w) via MXU panel tiles.
 
     Shapes must be pre-padded to block multiples (the pack does this once at
-    load for w; ops.py pads x per call — cheap, M=128 at prefill).
+    load for w; ops.py pads x per call — cheap, M=128 at prefill).  With a
+    ``glu`` epilogue ``w`` holds [gate | up] column halves (each half
+    block-aligned) and the output is [M_pad, N_pad // 2].
     """
     m, k = x.shape
     k2, n = w.shape
@@ -109,19 +326,60 @@ def panel_gemm(
         f"({block_m},{block_n},{block_k}); pack first")
     nk = k // block_k
     out_dtype = out_dtype or x.dtype
+    spec = epilogue
+    if spec is not None and spec.is_noop:
+        spec = None
+    glu = spec is not None and spec.glu is not None
+    n_out = n // 2 if glu else n
+    if glu:
+        assert n % 2 == 0 and n_out % block_n == 0, (
+            f"glu epilogue needs block-aligned column halves; got N={n} "
+            f"with block_n={block_n} — pack with pack_fused")
+    assert (bias is not None) == bool(spec is not None and spec.bias)
+    assert (residual is not None) == bool(spec is not None and spec.residual)
+
+    ops = [x, w]
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+    ]
+    half_tiles = n_out // block_n
+    if glu:        # up panel: same array, column-offset index map
+        ops.append(w)
+        in_specs.append(pl.BlockSpec(
+            (block_k, block_n), lambda i, j, kk: (kk, j + half_tiles)))
+    if spec is not None and spec.bias:
+        b2 = bias.reshape(1, n).astype(jnp.float32)
+        ops.append(b2)
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)))
+        if glu:
+            ops.append(b2)
+            in_specs.append(pl.BlockSpec(
+                (1, block_n), lambda i, j, kk: (0, j + half_tiles)))
+    if spec is not None and spec.residual:
+        assert residual.shape == (m, n_out), (
+            f"residual {residual.shape} vs output ({m},{n_out})")
+        ops.append(residual.astype(jnp.float32))
+        in_specs.append(pl.BlockSpec((block_m, block_n),
+                                     lambda i, j, kk: (i, j)))
+
+    if glu:
+        kernel = functools.partial(_gemm_glu_kernel, nk=nk, spec=spec)
+        scratch = [pltpu.VMEM((block_m, block_n), jnp.float32),
+                   pltpu.VMEM((block_m, block_n), jnp.float32)]
+    else:
+        kernel = functools.partial(_gemm_kernel, nk=nk, spec=spec)
+        scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)]
 
     return pl.pallas_call(
-        functools.partial(_gemm_kernel, nk=nk),
-        grid=(m // block_m, n // block_n, nk),
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
-        ],
+        kernel,
+        grid=(m // block_m, n_out // block_n, nk),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((m, n_out), out_dtype),
+        scratch_shapes=scratch,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x, w)
+    )(*ops)

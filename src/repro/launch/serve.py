@@ -41,6 +41,10 @@ def main():
                     choices=gemm_api.list_backends(),
                     help="GEMM backend for this engine's plans "
                          "(default: process default, xla on CPU)")
+    ap.add_argument("--no-fusion", action="store_true",
+                    help="disable horizontal QKV/gate-up fusion and the "
+                         "fused epilogues (A/B escape hatch; default: "
+                         "fusion on)")
     ap.add_argument("--compare-percall", action="store_true",
                     help="also time the unpacked (per-call) engine")
     ap.add_argument("--requests", type=int, default=0,
@@ -68,15 +72,17 @@ def main():
 
     t0 = time.perf_counter()
     eng = Engine(cfg, params, mesh=mesh, max_len=args.max_len, packed=True,
-                 backend=args.backend)
+                 backend=args.backend, fuse=not args.no_fusion)
     print(f"model load + pack (untimed in per-call metrics): "
-          f"{time.perf_counter() - t0:.2f}s")
+          f"{time.perf_counter() - t0:.2f}s  "
+          f"[fusion {'off' if args.no_fusion else 'on'}]")
     if cfg.modality != "text":
         logits, _ = eng.prefill(prompts)
         print(f"stub-frontend arch: prefill ok, logits {logits.shape}")
         return
     gen, stats = eng.generate(prompts, args.max_new)
-    print(f"packed engine: prefill {stats.prefill_tps:,.0f} tok/s, "
+    print(f"packed engine (fused={stats.fused}): "
+          f"prefill {stats.prefill_tps:,.0f} tok/s, "
           f"decode {stats.decode_tps:,.0f} tok/s")
     if args.compare_percall:
         eng2 = Engine(cfg, params, mesh=mesh, max_len=args.max_len,

@@ -204,9 +204,16 @@ def gqa_attention(p, cfg, x, *, positions, window=None, cache=None,
     from repro.models import layers as L
     b, s, _ = x.shape
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = L.linear(x, p["wq"]).reshape(b, s, h, hd)
-    k = L.linear(x, p["wk"]).reshape(b, s, hkv, hd)
-    v = L.linear(x, p["wv"]).reshape(b, s, hkv, hd)
+    if "wqkv" in p:
+        # horizontally fused pack (model_zoo.pack_for_inference): one
+        # GEMM pass streams x once and produces all three projections
+        q, k, v = L.fused_linear(x, p["wqkv"])
+    else:
+        q, k, v = (L.linear(x, p["wq"]), L.linear(x, p["wk"]),
+                   L.linear(x, p["wv"]))
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
     q = L.rope(q, positions, cfg.rope_theta)
     k = L.rope(k, positions, cfg.rope_theta)
     scale = cfg.attn_scale if cfg.attn_scale else hd ** -0.5
@@ -263,13 +270,19 @@ def mla_attention(p, cfg, x, *, positions, cache=None, cache_index=None,
     nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     r = cfg.kv_lora_rank
 
-    cq = L.linear(x, p["w_dq"])
+    if "w_dqkr" in p:
+        # fused down-projections: q-latent, kv-latent, and k-rope all
+        # consume x — one pass instead of three x reads
+        cq, ckv, kr = L.fused_linear(x, p["w_dqkr"])
+    else:
+        cq = L.linear(x, p["w_dq"])
+        ckv = L.linear(x, p["w_dkv"])                      # [B,S,r]
+        kr = L.linear(x, p["w_kr"])
     q = L.linear(cq, p["w_uq"]).reshape(b, s, h, nope + rope_d)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     q_rope = L.rope(q_rope, positions, cfg.rope_theta)
 
-    ckv = L.linear(x, p["w_dkv"])                          # [B,S,r]
-    krope = L.rope(L.linear(x, p["w_kr"])[:, :, None, :], positions,
+    krope = L.rope(kr[:, :, None, :], positions,
                    cfg.rope_theta)[:, :, 0]                # [B,S,rope_d]
 
     # absorb: q_abs[b,s,h,r] = q_nope . W_UK(per head)

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro import gemm as _gemm
 from repro.core.packing import PackedWeight
+from repro.kernels.panel_gemm import act_fn as _act_fn
 
 
 def dot_dtype(native):
@@ -29,19 +30,49 @@ def dot_dtype(native):
     return native
 
 
-def linear(x: jax.Array, w) -> jax.Array:
-    """x[..., K] @ w[K, N].  w may be a raw array or a PackedWeight
-    (pre-packed once at model load — paper lever 2).
+def linear(x: jax.Array, w, bias=None, *, softcap: float | None = None,
+           residual=None, out_dtype=None) -> jax.Array:
+    """x[..., K] @ w[K, N] (+ fused epilogue).  w may be a raw array or a
+    PackedWeight (pre-packed once at model load — paper lever 2).
 
     Packed weights dispatch through the plan/execute API: the plan is
     resolved at trace time (shape-keyed LRU cache, so prefill and decode
     each resolve once) on the backend of the enclosing
-    ``gemm.use_backend`` scope (e.g. the serving Engine's).
+    ``gemm.use_backend`` scope (e.g. the serving Engine's).  ``bias`` /
+    ``softcap`` / ``residual`` become the plan's ``EpilogueSpec`` —
+    applied on the fp32 accumulator inside the kernel's store step, so
+    the projection's output leaves the GEMM already finished instead of
+    round-tripping through HBM for a follow-up XLA op.  The raw-weight
+    path applies the identical fp32 ops (bit-identical for fp32
+    operands).
     """
     if isinstance(w, PackedWeight):
-        p = _gemm.plan_for_packed(_gemm.lead_m(x), w)
-        return _gemm.execute(p, x, w)
-    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+        spec = None
+        if bias is not None or softcap is not None or residual is not None:
+            spec = _gemm.EpilogueSpec(bias=bias is not None,
+                                      softcap=softcap,
+                                      residual=residual is not None)
+        p = _gemm.plan_for_packed(_gemm.lead_m(x), w, epilogue=spec)
+        return _gemm.execute(p, x, w, bias=bias, residual=residual,
+                             out_dtype=out_dtype)
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if softcap is not None:
+        y = softcap * jnp.tanh(y * (1.0 / softcap))
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    return y.astype(out_dtype or x.dtype)
+
+
+def fused_linear(x: jax.Array, w: PackedWeight) -> tuple:
+    """One GEMM pass over a horizontally fused pack (``pack_fused``):
+    streams x once, returns the per-part outputs of the static split map
+    (Q/K/V; MLA's down-projections).  Two HBM reads of x deleted per
+    call vs three separate projections.
+    """
+    p = _gemm.plan_for_packed(_gemm.lead_m(x), w)
+    return _gemm.split_fused(p, _gemm.execute(p, x, w))
 
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
@@ -69,15 +100,31 @@ def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
 
 
 def swiglu(x, w_gate, w_up, w_down, act: str = "silu"):
-    a = linear(x, w_gate)
-    a = jax.nn.silu(a) if act == "silu" else jax.nn.gelu(a, approximate=True)
+    """Unfused gated FFN (training / raw-weight path).  The activation
+    comes from the shared ``kernels.panel_gemm.act_fn`` table so the
+    fused epilogue path computes the identical function."""
+    a = _act_fn(act)(linear(x, w_gate))
     return linear(a * linear(x, w_up), w_down)
+
+
+def swiglu_fused(x, w_gate_up: PackedWeight, w_down, act: str = "silu",
+                 residual=None):
+    """Gated FFN over a horizontally fused gate+up pack: ONE kernel pass
+    streams x once, carries two accumulators, and combines
+    ``act(gate) * up`` on fp32 in the store step — the [.., 2F]
+    intermediate never reaches HBM (glu ``EpilogueSpec``).  ``residual``
+    rides the down-projection's epilogue (pre-norm blocks), deleting the
+    separate residual-add round-trip too."""
+    spec = _gemm.EpilogueSpec(glu=act)
+    p = _gemm.plan_for_packed(_gemm.lead_m(x), w_gate_up, epilogue=spec)
+    h = _gemm.execute(p, x, w_gate_up)
+    return linear(h, w_down, residual=residual)
 
 
 def softcap(x: jax.Array, cap: float | None) -> jax.Array:
     if cap is None:
         return x
-    return cap * jnp.tanh(x / cap)
+    return cap * jnp.tanh(x * (1.0 / cap))
 
 
 def embed_tokens(table: jax.Array, tokens: jax.Array) -> jax.Array:

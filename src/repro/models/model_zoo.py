@@ -156,10 +156,23 @@ _PACKABLE = {
 # MLA absorbed factors w_uk/w_uv (consumed reshaped to (r, H, d) inside the
 # einsum, not through `linear`), conv/norm vectors.
 
+# Horizontal fusion groups: same-input projections concatenated along N
+# into ONE pack at load (``packing.pack_fused``), so one kernel pass
+# streams the shared activations once.  The fused key is what the model
+# layers branch on (``attention.gqa_attention``: "wqkv";
+# ``transformer._layer_forward``: "w_gate_up"; ``mla_attention``:
+# "w_dqkr").  glu groups combine in the kernel store step, so their pack
+# blocks reserve VMEM for the two-accumulator epilogue.
+_FUSE_GROUPS = (
+    (("wq", "wk", "wv"), "wqkv", None),
+    (("w_gate", "w_up"), "w_gate_up", "glu"),
+    (("w_dq", "w_dkv", "w_kr"), "w_dqkr", None),
+)
+
 
 def pack_for_inference(cfg: ModelConfig, params, *, block_n=None,
                        block_k=None, shardings=None,
-                       m_hint: int = PAPER_M) -> dict:
+                       m_hint: int = PAPER_M, fuse: bool = True) -> dict:
     """Pack every projection weight once at model load (paper §3.2).
 
     The per-weight (block_n, block_k) decision is the dispatch POLICY's
@@ -169,46 +182,83 @@ def pack_for_inference(cfg: ModelConfig, params, *, block_n=None,
     projections get the deep-K pre-pack blocks.  Explicit ``block_n`` /
     ``block_k`` still override (benchmark sweeps).
 
+    ``fuse=True`` (the default) additionally fuses same-input projection
+    groups horizontally (``_FUSE_GROUPS``): Q/K/V (and MLA's three
+    down-projections) become one pack with a static split map, and
+    gate+up become one pack whose glu combine runs inside the kernel
+    store step — the prefill/decode hot paths then emit one GEMM where
+    they emitted three.  ``fuse=False`` is the A/B escape hatch
+    (``launch/serve.py --no-fusion``).
+
     Stacked per-layer weights (L, K, N) pack along their last two dims;
     lax.scan slices the leading dim, so inside the scan body each
     PackedWeight carries the 2-D panels the kernel consumes.  ``shardings``
     (a matching pytree) re-places each packed array so no resharding
     appears per call.
     """
-    def blocks_for(n, k):
+    def blocks_for(n, k, epilogue=None):
         # explicit overrides keep the legacy fit-to-dim behavior
         bn = packing.fit_block(n, block_n) if block_n else None
         bk = packing.fit_block(k, block_k) if block_k else None
         return gemm_api.pack_blocks(n, k, m_hint=m_hint,
-                                    block_n=bn, block_k=bk)
+                                    block_n=bn, block_k=bk,
+                                    epilogue=epilogue)
+
+    def place(data, shard_node):
+        if isinstance(shard_node, packing.PackedWeight):
+            shard_node = shard_node.data
+        return data if shard_node is None else jax.device_put(data,
+                                                              shard_node)
+
+    def pack_one(node, shard_node):
+        if node.ndim == 3:                          # stacked (L, K, N)
+            _, k, n = node.shape
+            bn, bk = blocks_for(n, k)
+            data = jnp.pad(node, ((0, 0), (0, (-k) % bk), (0, (-n) % bn)))
+            return packing.PackedWeight(data=place(data, shard_node), n=n,
+                                        k=k, block_n=bn, block_k=bk)
+        k, n = node.shape
+        bn, bk = blocks_for(n, k)
+        pw = packing.pack(node, block_n=bn, block_k=bk)
+        return dataclasses.replace(pw, data=place(pw.data, shard_node))
+
+    def pack_group(nodes, shard_node, glu: bool):
+        k = nodes[0].shape[-2]
+        n_cat = sum(int(w.shape[-1]) for w in nodes)
+        # glu packs budget VMEM for the two-tile/two-accumulator store
+        # phase, under the activation the layer will actually execute
+        # (vmem_bytes already reserves bias/residual operand headroom
+        # unconditionally, so pack-time and execute-time footprints
+        # agree whatever else the layer attaches)
+        spec = gemm_api.EpilogueSpec(glu=cfg.act) if glu else None
+        bn, bk = blocks_for(n_cat, k, epilogue=spec)
+        pw = packing.pack_fused(list(nodes), block_n=bn, block_k=bk)
+        return dataclasses.replace(pw, data=place(pw.data, shard_node))
 
     def walk(path, node, shard_node):
         if isinstance(node, dict):
-            return {k: walk(path + (k,), v,
-                            (shard_node or {}).get(k) if isinstance(
-                                shard_node, dict) else None)
-                    for k, v in node.items()}
+            shard = shard_node if isinstance(shard_node, dict) else {}
+            out = {}
+            done = set()
+            if fuse:
+                for group, fused_name, glu in _FUSE_GROUPS:
+                    if not all(g in node and hasattr(node[g], "ndim")
+                               and node[g].ndim >= 2 for g in group):
+                        continue
+                    out[fused_name] = pack_group(
+                        [node[g] for g in group], shard.get(fused_name),
+                        glu == "glu")
+                    done.update(group)
+            for key, v in node.items():
+                if key in done:
+                    continue
+                out[key] = walk(path + (key,), v, shard.get(key))
+            return out
         name = path[-1]
         if name not in _PACKABLE or node.ndim < 2:
             return node
         if name == "wo" and "moe" in path:
             return node                         # MoE expert bank, not attn
-        if isinstance(shard_node, packing.PackedWeight):
-            shard_node = shard_node.data        # sharding computed on the
-        if node.ndim == 3:                          # stacked (L, K, N)
-            _, k, n = node.shape
-            bn, bk = blocks_for(n, k)
-            data = jnp.pad(node, ((0, 0), (0, (-k) % bk), (0, (-n) % bn)))
-            if shard_node is not None:
-                data = jax.device_put(data, shard_node)
-            return packing.PackedWeight(data=data, n=n, k=k, block_n=bn,
-                                        block_k=bk)
-        k, n = node.shape
-        bn, bk = blocks_for(n, k)
-        pw = packing.pack(node, block_n=bn, block_k=bk)
-        if shard_node is not None:
-            pw = dataclasses.replace(
-                pw, data=jax.device_put(pw.data, shard_node))
-        return pw
+        return pack_one(node, shard_node)
 
     return walk((), params, shardings)

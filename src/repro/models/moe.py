@@ -125,9 +125,13 @@ def moe_ffn(p, cfg, x, *, capacity_factor: float = 1.25,
 
     if "shared" in p:
         xt_flat = xt.reshape(t, d)
-        out = out + L.swiglu(xt_flat, p["shared"]["w_gate"],
-                             p["shared"]["w_up"], p["shared"]["w_down"],
-                             cfg.act)
+        sh_p = p["shared"]
+        if "w_gate_up" in sh_p:       # horizontally fused gate+up pack
+            out = out + L.swiglu_fused(xt_flat, sh_p["w_gate_up"],
+                                       sh_p["w_down"], cfg.act)
+        else:
+            out = out + L.swiglu(xt_flat, sh_p["w_gate"], sh_p["w_up"],
+                                 sh_p["w_down"], cfg.act)
 
     # Switch-style load-balance aux loss, from the probs already computed.
     frac_tokens = jnp.mean(oh.astype(jnp.float32).reshape(t, k, e),

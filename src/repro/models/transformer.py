@@ -180,12 +180,27 @@ def _layer_forward(cfg, lp, x, *, window_l, positions, cache_l, cache_index,
         x = x + out2
     elif cfg.d_ff:
         h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps, cfg.norm_plus_one)
-        out2 = L.swiglu(h2, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
-                        lp["ffn"]["w_down"], cfg.act)
-        if cfg.post_norms:
-            out2 = L.rms_norm(out2, lp["ln2_post"], cfg.norm_eps,
-                              cfg.norm_plus_one)
-        x = x + out2
+        ffn = lp["ffn"]
+        if "w_gate_up" in ffn:
+            # fused gate+up pack: one pass, glu combine in the store
+            # step; in pre-norm blocks the residual add rides the
+            # down-projection's epilogue as well
+            if cfg.post_norms:
+                out2 = L.swiglu_fused(h2, ffn["w_gate_up"], ffn["w_down"],
+                                      cfg.act)
+                out2 = L.rms_norm(out2, lp["ln2_post"], cfg.norm_eps,
+                                  cfg.norm_plus_one)
+                x = x + out2
+            else:
+                x = L.swiglu_fused(h2, ffn["w_gate_up"], ffn["w_down"],
+                                   cfg.act, residual=x)
+        else:
+            out2 = L.swiglu(h2, ffn["w_gate"], ffn["w_up"],
+                            ffn["w_down"], cfg.act)
+            if cfg.post_norms:
+                out2 = L.rms_norm(out2, lp["ln2_post"], cfg.norm_eps,
+                                  cfg.norm_plus_one)
+            x = x + out2
 
     return x, (new_cache or None), aux
 
@@ -293,8 +308,17 @@ def forward(cfg, params, inputs, *, cache=None, mode: str = "train",
             else params["lm_head"])
     logits = None
     if logits_mode != "none":
-        logits = L.linear(x, head)
-        logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        from repro.core.packing import PackedWeight
+        if isinstance(head, PackedWeight) and cfg.logit_softcap:
+            # packed LM head: the tanh softcap runs on the fp32
+            # accumulator inside the GEMM's store step — the full-vocab
+            # logits tensor is written to HBM exactly once, capped
+            logits = L.linear(x, head, softcap=cfg.logit_softcap,
+                              out_dtype=jnp.float32)
+        else:
+            logits = L.linear(x, head)
+            logits = L.softcap(logits.astype(jnp.float32),
+                               cfg.logit_softcap)
         logits = shard(logits, "batch", "seq", "vocab")
 
     new_cache = None

@@ -47,6 +47,7 @@ PARAM_RULES = {
     "wq": P("data", "model"),
     "wk": P("data", "model"),
     "wv": P("data", "model"),
+    "wqkv": P("data", "model"),           # fused [K, Nq+Nk+Nv] pack
     "wo": P("model", "data"),
     # MLA
     "w_dq": P("data", "model"),
@@ -58,7 +59,10 @@ PARAM_RULES = {
     # dense / shared-expert FFN
     "w_gate": P("data", "model"),
     "w_up": P("data", "model"),
+    "w_gate_up": P("data", "model"),      # fused [K, 2F] glu pack
     "w_down": P("model", "data"),
+    # MLA fused down-projections [K, q_lora + kv_lora + rope]
+    "w_dqkr": P("data", "model"),
     # MoE (EP: experts over model)
     "router": P("data", None),
     "wi_gate": P("model", "data", None),  # (E, d, f)

@@ -69,6 +69,7 @@ class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     wall_s: float = 0.0
+    fused: bool | None = None       # engine ran the fused GEMM path
     requests: list[RequestStats] = dataclasses.field(default_factory=list)
 
     @property

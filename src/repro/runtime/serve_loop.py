@@ -42,11 +42,14 @@ class GenStats:
     (the prefill-sampled first token included: generate emits
     ``max_new_tokens`` per row, not ``max_new_tokens - 1``).  Both count
     only live, non-pad tokens when accumulated by ``serve_chunked``.
+    ``fused`` records whether the engine ran the horizontally fused
+    QKV / gate-up GEMM path (None: raw-weight engine, fusion n/a).
     """
     prefill_tokens: int = 0
     decode_tokens: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    fused: bool | None = None
 
     @property
     def prefill_tps(self):
@@ -61,17 +64,26 @@ class Engine:
     def __init__(self, cfg, params, *, mesh=None, max_len: int = 2048,
                  packed: bool = True, block_n: int | None = None,
                  block_k: int | None = None, donate_cache: bool = True,
-                 backend: str | None = None):
+                 backend: str | None = None, fuse: bool = True):
         """``backend`` pins this engine's GEMM backend (a registry name
         from ``repro.gemm.list_backends()``); None keeps the process
         default.  The choice is scoped to this engine's traces — two
         engines with different backends coexist in one process, which the
-        old ``REPRO_GEMM_IMPL`` process global could not express."""
+        old ``REPRO_GEMM_IMPL`` process global could not express.
+
+        ``fuse`` (default on) packs same-input projection groups
+        horizontally at load — Q/K/V and gate+up each become one fused
+        GEMM with an in-kernel epilogue — cutting >= 2 GEMM dispatches
+        (and as many re-reads of the activations) per transformer block.
+        ``fuse=False`` is the A/B escape hatch; it only applies to the
+        packed path (raw engines always run unfused).
+        """
         self.cfg = cfg
         self.mesh = mesh
         self.max_len = max_len
         self.packed = packed
         self.backend = backend
+        self.fused = bool(packed and fuse)
         if backend is not None:
             gemm_api.get_backend(backend)       # fail fast on a typo
 
@@ -82,11 +94,12 @@ class Engine:
             if mesh is not None:
                 packed_abs = jax.eval_shape(
                     lambda p: model_zoo.pack_for_inference(
-                        cfg, p, block_n=block_n, block_k=block_k), params)
+                        cfg, p, block_n=block_n, block_k=block_k,
+                        fuse=fuse), params)
                 shardings = Sh.param_shardings(packed_abs, mesh)
             self.params = model_zoo.pack_for_inference(
                 cfg, params, block_n=block_n, block_k=block_k,
-                shardings=shardings)
+                shardings=shardings, fuse=fuse)
         else:
             self.params = params
             if mesh is not None:
@@ -185,6 +198,7 @@ class Engine:
         """Greedy/sampled continuation.  prompts: [B, S0] int32.
         Returns tokens [B, max_new_tokens]."""
         stats = stats if stats is not None else GenStats()
+        stats.fused = self.fused if self.packed else None
         b, s0 = prompts.shape[0], prompts.shape[1]
         t0 = time.perf_counter()
         logits, cache = self.prefill(prompts)
@@ -234,7 +248,9 @@ class Engine:
             page_size=page_size, num_pages=num_pages,
             check_invariants=check_invariants,
             sync_per_step=sync_per_step)
-        return sched.run(requests, max_new_tokens)
+        outs, stats = sched.run(requests, max_new_tokens)
+        stats.fused = self.fused if self.packed else None
+        return outs, stats
 
     # -------------------------------------- legacy phase-locked baseline
     def serve_chunked(self, requests: list[np.ndarray], *,
@@ -253,7 +269,7 @@ class Engine:
         n = len(requests)
         mn = ([int(max_new_tokens)] * n if np.isscalar(max_new_tokens)
               else [int(m) for m in max_new_tokens])
-        stats = GenStats()
+        stats = GenStats(fused=self.fused if self.packed else None)
         results: dict[int, np.ndarray] = {}
         queue = list(enumerate(requests))
         while queue:

@@ -240,6 +240,186 @@ def test_use_backend_scope_nests():
         assert G.default_backend() == "xla"
 
 
+# ------------------------------------------- epilogue / fusion bitexact
+EPI_SPECS = [
+    G.EpilogueSpec(bias=True),
+    G.EpilogueSpec(act="silu"),
+    G.EpilogueSpec(act="gelu"),
+    G.EpilogueSpec(act="tanh"),
+    G.EpilogueSpec(softcap=30.0),
+    G.EpilogueSpec(residual=True),
+    G.EpilogueSpec(bias=True, act="silu", softcap=50.0, residual=True),
+    G.EpilogueSpec(glu="silu"),
+    G.EpilogueSpec(glu="gelu"),
+    G.EpilogueSpec(glu="silu", bias=True, residual=True),
+]
+
+
+def _epi_id(s):
+    parts = [k for k, v in (("bias", s.bias), ("res", s.residual)) if v]
+    if s.act:
+        parts.insert(0, s.act)
+    if s.glu:
+        parts.insert(0, f"glu-{s.glu}")
+    if s.softcap:
+        parts.append("softcap")
+    return "+".join(parts)
+
+
+@pytest.mark.parametrize("backend", ["interpret", "xla"])
+@pytest.mark.parametrize("spec", EPI_SPECS, ids=_epi_id)
+def test_epilogue_bitexact_vs_unfused_sequence(spec, backend):
+    """THE fusion contract: for fp32 operands, every EpilogueSpec x
+    backend is BIT-identical to the unfused ``execute -> jnp op``
+    sequence (ops under jit, as the model runs them)."""
+    m, k = 32, 256
+    n = 512 if spec.glu else 256
+    x, w = _rand((m, k)), _rand((k, n))
+    kw = dict(backend=backend, block_m=32, block_n=128, block_k=128)
+    base = G.plan(m, n, k, **kw)
+    pw = G.pack_for_plan(base, w)
+    p = G.plan(m, n, k, epilogue=spec, **kw)
+    assert G.validate_plan(p)       # interpret gate covers this spec
+    bias = _rand((n,)) if spec.bias else None
+    res = _rand((m, p.n_out)) if spec.residual else None
+
+    # both sides under jit — exactly how the model invokes them (jit
+    # generates FMAs eager dispatch does not, so eager-vs-jit is NOT
+    # bit-stable; jit-vs-jit is the deployed contract)
+    @jax.jit
+    def fused(x, pw):
+        return G.execute(p, x, pw, bias=bias, residual=res)
+
+    @jax.jit
+    def unfused(x, pw):
+        acc = G.execute(base, x, pw, out_dtype=jnp.float32)
+        return G.apply_epilogue(acc, spec, bias=bias,
+                                residual=res).astype(jnp.float32)
+
+    bitexact.assert_bit_identical(np.asarray(fused(x, pw)),
+                                  np.asarray(unfused(x, pw)))
+
+
+@pytest.mark.parametrize("backend", ["interpret", "xla"])
+def test_fused_qkv_pack_split_matches_separate(backend):
+    """Horizontal fusion: one pass over a pack_fused weight, split by the
+    static map, bit-identical per part to the separate GEMMs (ragged
+    part widths exercise the interior padding)."""
+    m, k = 128, 256
+    widths = (192, 64, 64)
+    parts = [_rand((k, n)) for n in widths]
+    x = _rand((m, k))
+    pwf = packing.pack_fused(parts, block_n=128, block_k=128)
+    assert pwf.n_splits == widths
+    assert pwf.data.shape == (256, 512)      # parts padded to 256/128/128
+    p = G.plan_for_packed(m, pwf, backend=backend)
+    outs = G.split_fused(p, G.execute(p, x, pwf))
+    assert tuple(o.shape[-1] for o in outs) == widths
+    for out, part in zip(outs, parts):
+        pw1 = packing.pack(part, block_n=128, block_k=128)
+        p1 = G.plan_for_packed(m, pw1, backend=backend)
+        bitexact.assert_bit_identical(np.asarray(out),
+                                      np.asarray(G.execute(p1, x, pw1)))
+
+
+def test_fused_glu_pack_blocks_flow():
+    """pack_blocks(epilogue=glu) reserves the two-accumulator VMEM
+    footprint, so pack and execute-time plan agree on blocks."""
+    n_cat, k = 2 * 2048, 2048
+    glu = G.EpilogueSpec(glu="silu")
+    bn, bk = G.pack_blocks(n_cat, k, epilogue=glu)
+    wg, wu = _rand((k, n_cat // 2)), _rand((k, n_cat // 2))
+    pw = packing.pack_fused([wg, wu], block_n=bn, block_k=bk)
+    p = G.plan_for_packed(128, pw, epilogue=glu)
+    assert (p.block_n, p.block_k) == (pw.block_n, pw.block_k)
+    assert p.n_out == n_cat // 2
+    from repro.kernels.panel_gemm import VMEM_BUDGET, vmem_bytes
+    assert vmem_bytes(p.block_m, p.block_n, p.block_k,
+                      epilogue=glu) <= VMEM_BUDGET
+
+
+def test_fused_plan_rejects_raw_weights_and_bad_operands():
+    parts = [_rand((256, 128)), _rand((256, 128))]
+    pwf = packing.pack_fused(parts, block_n=128, block_k=128)
+    x = _rand((8, 256))
+    p = G.plan_for_packed(8, pwf)
+    with pytest.raises(G.PlanMismatchError):
+        G.execute(p, x, jnp.concatenate(parts, axis=1))   # raw concat
+    with pytest.raises(G.PlanMismatchError):
+        G.execute(p, x, pwf, bias=_rand((256,)))          # no epilogue
+    pglu = G.plan_for_packed(8, pwf, epilogue=G.EpilogueSpec(glu="silu"))
+    with pytest.raises(ValueError):
+        G.split_fused(pglu, _rand((8, 128)))   # glu combines in-kernel
+    with pytest.raises(ValueError):
+        G.split_fused(G.plan(8, 128, 256), x)  # no split map
+
+
+def test_plan_cache_keys_fusion_and_epilogue():
+    """Fused / epilogue plans are distinct cache entries, and repeated
+    fused planning is a cache hit (plans stay hot under fusion)."""
+    a = G.plan(128, 512, 256)
+    b = G.plan(128, 512, 256, epilogue=G.EpilogueSpec(act="silu"))
+    c = G.plan(128, 512, 256, fused_n_splits=(256, 256))
+    assert len({a, b, c}) == 3
+    assert G.plan_cache_info().misses == 3
+    G.plan(128, 512, 256, epilogue=G.EpilogueSpec(act="silu"))
+    assert G.plan_cache_info().hits == 1
+    # a no-op epilogue normalizes to the plain plan's key
+    assert G.plan(128, 512, 256, epilogue=G.EpilogueSpec()) is a
+
+
+def test_epilogue_spec_validation():
+    with pytest.raises(ValueError):
+        G.EpilogueSpec(act="relu")
+    with pytest.raises(ValueError):
+        G.EpilogueSpec(act="silu", glu="silu")
+    assert G.EpilogueSpec().is_noop
+    assert not G.EpilogueSpec(softcap=1.0).is_noop
+
+
+# ------------------------------------------------------- vmem satellite
+def test_policy_clamps_blocks_to_vmem_budget():
+    """Satellite: an explicit (or fused-wide) block triple that exceeds
+    the kernel VMEM budget is shrunk until it fits, and the plan says
+    so."""
+    from repro.kernels.panel_gemm import VMEM_BUDGET, vmem_bytes
+    p = G.plan(128, 4096, 8192, block_n=2048, block_k=4096)
+    assert p.vmem_clamped
+    assert vmem_bytes(p.block_m, p.block_n, p.block_k) <= VMEM_BUDGET
+    assert "vmem_clamped" in p.describe()
+    # glu doubles the weight/accumulator tiles: the same explicit triple
+    # must clamp harder than the plain plan
+    glu = G.EpilogueSpec(glu="silu")
+    pg = G.plan(128, 4096, 8192, block_n=2048, block_k=4096, epilogue=glu)
+    assert vmem_bytes(pg.block_m, pg.block_n, pg.block_k,
+                      epilogue=glu) <= VMEM_BUDGET
+    # policy-resolved plans stay un-clamped at sane shapes
+    assert not G.plan(128, 2048, 2048).vmem_clamped
+
+
+# ------------------------------------------- sharding-key satellite fix
+def test_plan_for_packed_keys_on_named_sharding():
+    """Satellite: packs placed with distinct NamedShardings no longer
+    alias one plan entry (the sharding_key='' bug)."""
+    import jax.sharding as JS
+    dev = jax.devices()[0]
+    mesh_a = JS.Mesh(np.array([dev]), ("model",))
+    mesh_b = JS.Mesh(np.array([dev]), ("data",))
+    w = _rand((256, 128))
+    pa = packing.pack(w, block_n=128, block_k=128,
+                      sharding=JS.NamedSharding(mesh_a, JS.PartitionSpec()))
+    pb = packing.pack(w, block_n=128, block_k=128,
+                      sharding=JS.NamedSharding(mesh_b, JS.PartitionSpec()))
+    plan_a = G.plan_for_packed(8, pa)
+    plan_b = G.plan_for_packed(8, pb)
+    assert plan_a.sharding_key and plan_b.sharding_key
+    assert plan_a.sharding_key != plan_b.sharding_key
+    assert plan_a is not plan_b
+    # unplaced packs keep the neutral key (cache behavior unchanged)
+    pc = packing.pack(w, block_n=128, block_k=128)
+    assert G.plan_for_packed(8, pc).sharding_key == ""
+
+
 # ------------------------------------------------------------ model path
 def test_linear_packed_routes_through_plan_cache():
     from repro.models.layers import linear

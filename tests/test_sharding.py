@@ -149,8 +149,22 @@ def test_pack_for_inference_specs_follow_raw_weights():
         lambda p: model_zoo.pack_for_inference(cfg, p), raw)
     specs = Sh.param_specs(packed, SINGLE)
     _check_tree(packed, specs, SINGLE)
-    # PackedWeight data under "wq" must inherit the wq rule
+    # the fused QKV pack must inherit the wqkv rule (column-sharded like
+    # its parts), and the glu pack the w_gate_up rule
     pw_spec = jax.tree.leaves(
-        specs["layers"]["attn"]["wq"],
+        specs["layers"]["attn"]["wqkv"],
+        is_leaf=lambda x: isinstance(x, P))[0]
+    assert pw_spec == P(None, "data", "model")
+    gu_spec = jax.tree.leaves(
+        specs["layers"]["ffn"]["w_gate_up"],
+        is_leaf=lambda x: isinstance(x, P))[0]
+    assert gu_spec == P(None, "data", "model")
+    # the --no-fusion escape hatch keeps the per-projection rules
+    unfused = jax.eval_shape(
+        lambda p: model_zoo.pack_for_inference(cfg, p, fuse=False), raw)
+    uspecs = Sh.param_specs(unfused, SINGLE)
+    _check_tree(unfused, uspecs, SINGLE)
+    pw_spec = jax.tree.leaves(
+        uspecs["layers"]["attn"]["wq"],
         is_leaf=lambda x: isinstance(x, P))[0]
     assert pw_spec == P(None, "data", "model")
