@@ -249,6 +249,10 @@ def run(scale: int = 4, reps: int = 7) -> list[dict]:
 def main(full: bool = False):
     rs = run(scale=1 if full else 4)
     common.print_csv("table6_e2e_prefill", rs)
+    info = G.plan_cache_info()
+    clamped = G.vmem_clamped_count()
+    print(f"# plan cache: {info.hits} hits / {info.misses} misses "
+          f"({info.currsize} cached, {clamped} vmem-clamped)")
     common.write_table("table6_e2e_prefill", rs, meta={
         "note": "paper T6: packed weights win the full prefill GEMM "
                 "sequence (paper: 1.42x/1.50x vs BNNSMatMul, 1.80x/2.67x "
@@ -258,7 +262,10 @@ def main(full: bool = False):
                 "sequence at the serving pool's admission width, "
                 "chunk_plan_misses must be 0 (plans stay hot under "
                 "continuous batching)",
-        "s_chunk": S_CHUNK, "scale": 1 if full else 4})
+        "s_chunk": S_CHUNK, "scale": 1 if full else 4,
+        # dispatch observability (previously invisible in reports):
+        # plan churn + how many plans the VMEM budget clamped
+        "plan_cache": tuple(info), "vmem_clamped_plans": clamped})
     return rs
 
 

@@ -1,15 +1,15 @@
 """Core: packing, scheduling model, autotune, bit-exactness.
 
-The GEMM *dispatch* surface moved to :mod:`repro.gemm` (plan/execute);
-``gemm``/``gemm_percall``/``gemm_xla`` below are the deprecated shims
-from ``core/panel_gemm.py`` — kept importable for one release (see
-``docs/gemm_api.md``).
+The GEMM *dispatch* surface lives in :mod:`repro.gemm` (plan/execute).
+The legacy ``core/panel_gemm`` shims (``gemm`` / ``gemm_percall`` /
+``gemm_xla`` and the ``REPRO_GEMM_IMPL`` env var) completed their
+deprecation cycle and are removed — importing ``repro.core.panel_gemm``
+raises with the migration table (see docs/gemm_api.md).
 """
-from repro.core import autotune, bitexact, packing, panel_gemm, scheduler
-from repro.core.packing import PackedWeight, pack
-from repro.core.panel_gemm import gemm, gemm_percall, gemm_xla
+from repro.core import autotune, bitexact, packing, scheduler
+from repro.core.packing import PackedWeight, pack, pack_fused
 
 __all__ = [
-    "autotune", "bitexact", "packing", "panel_gemm", "scheduler",
-    "PackedWeight", "pack", "gemm", "gemm_percall", "gemm_xla",
+    "autotune", "bitexact", "packing", "scheduler",
+    "PackedWeight", "pack", "pack_fused",
 ]

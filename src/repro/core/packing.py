@@ -14,9 +14,9 @@ On TPU the per-call costs a stateless GEMM pays are the analogues we remove:
                        collective appears in the per-step HLO.  Once.
 
 ``PackedWeight`` is a pytree, so it flows through jit/pjit/scan/checkpoint
-like any array.  The stateless baseline (pack-every-call) lives in
-core/panel_gemm.gemm_percall and is benchmarked against this path
-(benchmarks/table3_prefill_gemms.py).
+like any array.  The stateless baseline (pack-every-call) is a plan
+decision (``gemm.plan(..., pack=PACK_PERCALL)``) and is benchmarked
+against this path (benchmarks/table3_prefill_gemms.py).
 """
 from __future__ import annotations
 
@@ -89,8 +89,25 @@ def pack(
     block_k: int = _kernel.DEFAULT_BLOCK_K,
     dtype: Any = None,
     sharding: jax.sharding.Sharding | None = None,
+    quant: str | None = None,
 ) -> PackedWeight:
-    """Pack a weight once at model load (see module docstring)."""
+    """Pack a weight once at model load (see module docstring).
+
+    ``quant`` ("int8" | "ternary") additionally QUANTIZES at pack time —
+    the pre-pack lever extended below fp32 (repro.quant): the returned
+    :class:`~repro.quant.QuantizedPackedWeight` carries codes + scales,
+    the plan carries the format, and execute() streams 4x/16x fewer
+    weight bytes per tile through the dequant-fused kernel.  The error
+    ledger measures and tolerance-gates every concrete quantized pack
+    (docs/quantization.md)."""
+    if quant is not None:
+        from repro.quant.formats import quantize_pack
+        if dtype is not None:
+            raise ValueError("dtype casts do not compose with quant= "
+                             "(codes have a fixed storage type)")
+        return quantize_pack(w, quant, transposed=transposed,
+                             block_n=block_n, block_k=block_k,
+                             sharding=sharding)
     if transposed:
         n, k = w.shape
         w = w.T
@@ -114,6 +131,7 @@ def pack_fused(
     block_k: int = _kernel.DEFAULT_BLOCK_K,
     dtype: Any = None,
     sharding: jax.sharding.Sharding | None = None,
+    quant: str | None = None,
 ) -> PackedWeight:
     """Horizontally fuse same-input weights into ONE pack (paper lever 2
     applied across projections): concatenate along N at load, so one
@@ -125,8 +143,16 @@ def pack_fused(
     split map stay static (``gemm.split_fused``) and (b) the glu kernel
     address gate/up halves by tile offset.  Parts may also be stacked
     ``[L, K, Ni]`` (scan-over-layers weights); the leading dim rides
-    through untouched.
+    through untouched.  ``quant`` quantizes every part at pack time
+    (per-part per-column scales — see ``pack(quant=)``).
     """
+    if quant is not None:
+        from repro.quant.formats import quantize_pack_fused
+        if dtype is not None:
+            raise ValueError("dtype casts do not compose with quant=")
+        return quantize_pack_fused(parts, quant, transposed=transposed,
+                                   block_n=block_n, block_k=block_k,
+                                   sharding=sharding)
     ws = [jnp.swapaxes(w, -1, -2) if transposed else w for w in parts]
     if len(ws) < 2:
         raise ValueError("pack_fused needs at least two weights; "

@@ -1,12 +1,10 @@
-"""DEPRECATED — legacy GEMM entry points, now thin shims over
-:mod:`repro.gemm` (plan/execute).  **Migration note.**
+"""REMOVED — the legacy GEMM entry points completed their deprecation
+cycle (docs/gemm_api.md §Deprecation timeline).
 
-This module used to BE the GEMM surface: three unrelated functions
-steered by a process-global ``REPRO_GEMM_IMPL`` env var, which meant no
-caller could express the paper's shape-resolved lever choice.  That
-surface moved to ``repro.gemm`` in the plan/execute redesign
-(``docs/gemm_api.md``); the names below keep working for one release and
-will then be removed:
+``gemm`` / ``gemm_percall`` / ``gemm_xla`` shipped one release as
+``DeprecationWarning`` shims over :mod:`repro.gemm`; this release they
+are gone, and with them the last reader of the ``REPRO_GEMM_IMPL`` env
+var.  Migration (the same table the shims carried):
 
   ==============================  =========================================
   legacy call                     replacement
@@ -20,83 +18,16 @@ will then be removed:
                                   pack=gemm.PACK_NONE)`` then
                                   ``gemm.execute(p, x, w)``
   ``impl="..."`` keyword          ``backend="..."`` at plan time, or a
-                                  ``gemm.use_backend("...")`` scope
-  ``REPRO_GEMM_IMPL`` env var     honoured ONLY by these shims (the single
-                                  remaining reader); the new surface takes
-                                  backends explicitly / by scope
+                                  ``gemm.use_backend(...)`` scope
+  ``REPRO_GEMM_IMPL`` env var     removed — backends are explicit
+                                  (``Engine(backend=)``, ``--backend``)
+                                  or scoped (``use_backend``)
   ==============================  =========================================
-
-Every shim resolves a plan through the same policy + LRU cache as native
-callers, so results (including bit-exactness vs ``kernels/ref``) are
-identical to the new API by construction.
 """
-from __future__ import annotations
-
-import os
-import warnings
-
-import jax
-
-from repro import gemm as _G
-from repro.core import packing
-from repro.kernels import panel_gemm as _kernel
-
-
-def _warn(old: str, new: str):
-    warnings.warn(
-        f"repro.core.panel_gemm.{old} is deprecated; use {new} "
-        f"(see docs/gemm_api.md)", DeprecationWarning, stacklevel=3)
-
-
-def _legacy_backend(impl: str | None) -> str | None:
-    """impl kwarg, else the deprecated env var, else the new-API default.
-
-    This is deliberately the ONLY place left that reads REPRO_GEMM_IMPL.
-    """
-    return impl or os.environ.get("REPRO_GEMM_IMPL") or None
-
-
-def _lead_m(x: jax.Array) -> int:
-    return _G.lead_m(x)     # resolved lazily: repro.gemm may still be
-                            # mid-import when this module loads (cycle)
-
-
-def gemm(x: jax.Array, pw: packing.PackedWeight, *,
-         block_m: int = _kernel.DEFAULT_BLOCK_M,
-         impl: str | None = None, out_dtype=None) -> jax.Array:
-    """DEPRECATED: pre-packed GEMM.  Delegates to plan/execute."""
-    _warn("gemm", "gemm.plan_for_packed + gemm.execute")
-    p = _G.plan(_lead_m(x), pw.n, pw.k, dtype=x.dtype,
-                backend=_legacy_backend(impl), block_m=block_m,
-                block_n=pw.block_n, block_k=pw.block_k,
-                pack=_G.PACK_PREPACKED)
-    return _G.execute(p, x, pw, out_dtype=out_dtype)
-
-
-def gemm_percall(x: jax.Array, w: jax.Array, *, transposed: bool = False,
-                 block_m: int = _kernel.DEFAULT_BLOCK_M,
-                 block_n: int = _kernel.DEFAULT_BLOCK_N,
-                 block_k: int = _kernel.DEFAULT_BLOCK_K,
-                 impl: str | None = None, out_dtype=None) -> jax.Array:
-    """DEPRECATED: stateless pack-every-call GEMM.  Delegates to
-    plan/execute with ``pack=PACK_PERCALL``."""
-    _warn("gemm_percall", "gemm.plan(..., pack=PACK_PERCALL) + gemm.execute")
-    n = w.shape[0] if transposed else w.shape[1]
-    k = w.shape[1] if transposed else w.shape[0]
-    p = _G.plan(_lead_m(x), n, k, dtype=x.dtype,
-                backend=_legacy_backend(impl), block_m=block_m,
-                block_n=block_n, block_k=block_k, pack=_G.PACK_PERCALL,
-                transposed=transposed)
-    return _G.execute(p, x, w, out_dtype=out_dtype)
-
-
-def gemm_xla(x: jax.Array, w: jax.Array, *, transposed: bool = False):
-    """DEPRECATED: raw shape-agnostic dot.  Delegates to plan/execute on
-    the ``xla`` backend with ``pack=PACK_NONE``."""
-    _warn("gemm_xla", 'gemm.plan(..., backend="xla", pack=PACK_NONE) '
-          "+ gemm.execute")
-    n = w.shape[0] if transposed else w.shape[1]
-    k = w.shape[1] if transposed else w.shape[0]
-    p = _G.plan(_lead_m(x), n, k, dtype=x.dtype, backend="xla",
-                pack=_G.PACK_NONE, transposed=transposed)
-    return _G.execute(p, x, w)
+raise ImportError(
+    "repro.core.panel_gemm was removed: the gemm/gemm_percall/gemm_xla "
+    "shims completed their one-release deprecation cycle.  Use the "
+    "plan/execute API in repro.gemm (gemm.plan / gemm.plan_for_packed + "
+    "gemm.execute); the REPRO_GEMM_IMPL env var is gone too — pass "
+    "backend= at plan time or scope gemm.use_backend(...).  Migration "
+    "table: docs/gemm_api.md §Deprecation timeline.")

@@ -8,8 +8,8 @@ runs (replaces the three ad-hoc entry points in ``core/panel_gemm``).
     y = gemm.execute(p, x, pw)             # per call: compute loop only
 
 See ``docs/gemm_api.md`` for the policy table, cache semantics, backend
-registry, and the migration path off the deprecated
-``core.panel_gemm.{gemm, gemm_percall, gemm_xla}`` shims.
+registry, the quantized ``weight_format`` plans (docs/quantization.md),
+and the migration table for the REMOVED ``core.panel_gemm`` shims.
 """
 from repro.gemm.backends import (Backend, UnknownBackendError,
                                  default_backend, get_backend,
@@ -23,7 +23,8 @@ from repro.gemm.plan import (EpilogueSpec, GemmPlan, LEVER_FINE_PANELS,
 from repro.gemm.policy import (DEFAULT_NUM_CORES, PREFILL_M_BUCKETS,
                                bucket_m, pack_blocks, plan,
                                plan_cache_clear, plan_cache_info,
-                               plan_for_packed, policy_table)
+                               plan_for_packed, policy_table,
+                               vmem_clamped_count)
 from repro.kernels.panel_gemm import apply_epilogue
 
 __all__ = [
@@ -36,5 +37,5 @@ __all__ = [
     "pack_blocks", "pack_for_plan", "plan", "plan_cache_clear",
     "plan_cache_info", "plan_for_packed", "policy_table",
     "register_backend", "split_fused", "unregister_backend",
-    "use_backend", "validate_plan",
+    "use_backend", "validate_plan", "vmem_clamped_count",
 ]

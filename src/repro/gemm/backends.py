@@ -14,10 +14,12 @@ Here backends are first-class registry entries:
                     kernel-validation mode, bit-identical to
                     ``kernels/ref.gemm_blocked`` by construction.
 
-``register_backend`` is the hook later PRs (batched GEMM, quantized
-weights, remote offload) extend.  The deprecated ``REPRO_GEMM_IMPL`` env
-var is honoured only by the legacy shims in ``core/panel_gemm.py`` — the
-new surface takes ``backend=`` explicitly or via ``use_backend(...)``.
+``register_backend`` is the hook extensions use (the quant subsystem's
+dequant-fused runs ride the same registry as ``run_quant`` entries;
+batched GEMM / remote offload are future extensions).  The
+``REPRO_GEMM_IMPL`` env var is REMOVED along with the legacy
+``core/panel_gemm`` shims — this surface takes ``backend=`` explicitly
+or via ``use_backend(...)``.
 """
 from __future__ import annotations
 
@@ -37,10 +39,18 @@ RunFn = Callable[..., jax.Array]
 
 @dataclasses.dataclass(frozen=True)
 class Backend:
+    """``run`` executes fp-dtype operands.  ``run_quant`` (optional) is
+    the dequant-fused entry for quantized packs —
+    ``run_quant(x_p, codes, scales, *, weight_format, block_m, block_n,
+    block_k, out_dtype, [epilogue kwargs])`` — dispatched by execute()
+    only when the plan's ``weight_format`` is quantized.  A backend
+    without it rejects quantized plans (registered extensions predating
+    the quant subsystem keep working for fp32 plans unchanged)."""
     name: str
     run: RunFn
     needs_blocks: bool = True    # False: shape-agnostic, skip block padding
     description: str = ""
+    run_quant: RunFn | None = None
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -54,6 +64,7 @@ class UnknownBackendError(KeyError):
 
 def register_backend(name: str, run: RunFn, *, needs_blocks: bool = True,
                      description: str = "",
+                     run_quant: RunFn | None = None,
                      overwrite: bool = False) -> Backend:
     """Register a GEMM backend under ``name`` (the extension hook)."""
     with _LOCK:
@@ -61,7 +72,7 @@ def register_backend(name: str, run: RunFn, *, needs_blocks: bool = True,
             raise ValueError(f"backend {name!r} already registered; "
                              f"pass overwrite=True to replace it")
         b = Backend(name=name, run=run, needs_blocks=needs_blocks,
-                    description=description)
+                    description=description, run_quant=run_quant)
         _REGISTRY[name] = b
         return b
 
@@ -157,10 +168,52 @@ def _run_interpret(x_p, w_p, *, block_m, block_n, block_k, out_dtype,
                               interpret=True)
 
 
+# Dequant-fused runs (repro.quant): same trio, streaming codes + scales.
+# The xla run dequantizes inside ONE jitted computation, so XLA fuses
+# the cast/scale into the dot's operand path — the dequant-THEN-sgemm
+# baseline (benchmarks/table8_quant.py) instead materializes the fp32
+# weight as a separate dispatch, which is exactly the round-trip the
+# fused path deletes.
+def _run_quant_xla(x_p, codes, scales, *, weight_format, block_m, block_n,
+                   block_k, out_dtype, epilogue=None, bias=None,
+                   residual=None):
+    del block_m, block_n, block_k
+    from repro.quant import formats as _F
+    w = _F.dequantize_padded(codes, scales, weight_format)
+    # keep the dequantized panels a materialized dot operand: letting
+    # XLA:CPU fuse the convert/scale INTO the dot knocks it off the
+    # fast library-dot path (measured 20-30% slower at wide N); the
+    # barrier costs nothing numerically (values are identical bitwise)
+    w = jax.lax.optimization_barrier(w)
+    acc = jnp.dot(x_p, w, preferred_element_type=jnp.float32)
+    if epilogue is not None:
+        acc = _kernel.apply_epilogue(acc, epilogue, bias=bias,
+                                     residual=residual)
+    return acc.astype(out_dtype or x_p.dtype)
+
+
+def _run_quant_pallas(x_p, codes, scales, *, weight_format, block_m,
+                      block_n, block_k, out_dtype, epilogue=None,
+                      bias=None, residual=None, interpret=False):
+    from repro.quant import kernels as _qk
+    return _qk.quant_panel_gemm(x_p, codes, scales, bias, residual,
+                                weight_format=weight_format,
+                                block_m=block_m, block_n=block_n,
+                                block_k=block_k, out_dtype=out_dtype,
+                                epilogue=epilogue, interpret=interpret)
+
+
+def _run_quant_interpret(x_p, codes, scales, **kw):
+    return _run_quant_pallas(x_p, codes, scales, interpret=True, **kw)
+
+
 register_backend("xla", _run_xla, needs_blocks=False,
-                 description="shape-agnostic XLA dot (Accelerate analogue)")
+                 description="shape-agnostic XLA dot (Accelerate analogue)",
+                 run_quant=_run_quant_xla)
 register_backend("pallas", _run_pallas,
-                 description="compiled Pallas panel kernel (TPU deploy)")
+                 description="compiled Pallas panel kernel (TPU deploy)",
+                 run_quant=_run_quant_pallas)
 register_backend("interpret", _run_interpret,
-                 description="Pallas interpreter (kernel validation)")
+                 description="Pallas interpreter (kernel validation)",
+                 run_quant=_run_quant_interpret)
 _BUILTIN = frozenset(_REGISTRY)

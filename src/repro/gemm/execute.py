@@ -5,6 +5,9 @@ The weight operand may be:
 
   * a ``PackedWeight`` (paid once at model load — the plan's ``prepack``
     lever): per call only M-padding of the activations remains;
+  * a ``QuantizedPackedWeight`` (repro.quant — quantized AND packed at
+    load): the plan carries its ``weight_format`` and the backend's
+    dequant-fused ``run_quant`` entry streams codes + scales;
   * a raw array (``[K, N]``, or ``[N, K]`` when the plan was built with
     ``transposed=True``): the transpose+pad runs inside the call — the
     honest cblas/BNNSMatMul baseline the benchmarks compare against.
@@ -26,6 +29,7 @@ from repro.gemm import backends as _backends
 from repro.gemm.plan import GemmPlan, PACK_NONE
 from repro.gemm.policy import _bitexact_gate
 from repro.kernels.panel_gemm import EpilogueSpec  # noqa: F401 (re-export)
+from repro.quant.formats import QuantizedPackedWeight
 
 
 class PlanMismatchError(ValueError):
@@ -90,6 +94,15 @@ def execute(p: GemmPlan, x: jax.Array, w, *, bias=None, residual=None,
     _check(m == p.m, f"operand M={m} vs plan M={p.m}; plans are "
                      f"shape-resolved — re-plan for this batch")
 
+    quant = isinstance(w, QuantizedPackedWeight)
+    _check(quant == p.quantized,
+           f"operand {'is' if quant else 'is not'} a quantized pack but "
+           f"plan weight_format={p.weight_format!r} ({p.describe()}); "
+           f"re-plan via plan_for_packed")
+    if quant:
+        _check(w.fmt == p.weight_format,
+               f"pack format {w.fmt!r} vs plan "
+               f"weight_format={p.weight_format!r}")
     if isinstance(w, packing.PackedWeight):
         _check((w.k, w.n) == (p.k, p.n),
                f"packed weight {w.shape} vs plan ({p.k},{p.n})")
@@ -118,12 +131,16 @@ def execute(p: GemmPlan, x: jax.Array, w, *, bias=None, residual=None,
         else:
             w_p = ww
 
-    if w_p.shape[0] != p.k:          # weight K was pack-padded: pad x too
-        x2 = _pad_cols(x2, w_p.shape[0])
+    # padded geometry: a ternary pack stores four K rows per codes row,
+    # so the codes' leading dim is NOT the padded contraction depth
+    k_pad = w.k_pad if quant else w_p.shape[0]
+    n_pad = w_p.shape[1]
+    if k_pad != p.k:                 # weight K was pack-padded: pad x too
+        x2 = _pad_cols(x2, k_pad)
     if backend.needs_blocks:
         x2 = _pad_rows(x2, p.block_m)
 
-    out_cols = w_p.shape[1] // 2 if p.glu else w_p.shape[1]
+    out_cols = n_pad // 2 if p.glu else n_pad
     epi_kw = {}
     if spec is not None:
         b2 = r2 = None
@@ -147,7 +164,7 @@ def execute(p: GemmPlan, x: jax.Array, w, *, bias=None, residual=None,
                 b2 = jnp.asarray(bias, jnp.float32).reshape(-1)
                 _check(b2.shape[0] == p.n,
                        f"bias width {b2.shape[0]} vs plan N={p.n}")
-            b2 = jnp.pad(b2, (0, w_p.shape[1] - b2.shape[0]))
+            b2 = jnp.pad(b2, (0, n_pad - b2.shape[0]))
         if residual is not None:
             r2 = residual.reshape(-1, residual.shape[-1])
             _check(r2.shape == (m, p.n_out),
@@ -157,8 +174,18 @@ def execute(p: GemmPlan, x: jax.Array, w, *, bias=None, residual=None,
                 r2 = _pad_rows(r2, p.block_m)
         epi_kw = dict(epilogue=spec, bias=b2, residual=r2)
 
-    y = backend.run(x2, w_p, block_m=p.block_m, block_n=p.block_n,
-                    block_k=p.block_k, out_dtype=out_dtype, **epi_kw)
+    if quant:
+        run_q = backend.run_quant
+        _check(run_q is not None,
+               f"backend {p.backend!r} has no dequant-fused run "
+               f"(register_backend(..., run_quant=)); it cannot execute "
+               f"weight_format={p.weight_format!r} plans")
+        y = run_q(x2, w_p, w.scales, weight_format=p.weight_format,
+                  block_m=p.block_m, block_n=p.block_n,
+                  block_k=p.block_k, out_dtype=out_dtype, **epi_kw)
+    else:
+        y = backend.run(x2, w_p, block_m=p.block_m, block_n=p.block_n,
+                        block_k=p.block_k, out_dtype=out_dtype, **epi_kw)
     return y[:m, :p.n_out].reshape(*lead, p.n_out)
 
 
@@ -198,6 +225,23 @@ def validate_plan(p: GemmPlan) -> bool:
     triple — and its epilogue, if any: the fused interpret-mode kernel
     must be bit-identical to the unfused ``kernel -> jnp epilogue``
     sequence (plain plans keep the ``kernels/ref.gemm_blocked`` oracle).
+
+    A QUANTIZED plan swaps the bit-exact gate for the two-part quant
+    contract (docs/quantization.md): (1) the error-ledger tolerance gate
+    — if the ledger holds an entry for this (n, k, format) whose
+    measured max-rel error vs the fp32 oracle exceeds the format's
+    declared tolerance, the plan is REJECTED; (2) the structural gate —
+    the dequant-fused interpret kernel must stay bit-identical to
+    ``gemm_blocked`` over the dequantized panels, so the tolerance spent
+    on the format is never silently spent twice by the kernel.
     """
+    if p.quantized:
+        from repro.quant import ledger as _ledger
+        from repro.quant.kernels import quant_gate
+        ent = _ledger.lookup(p.n, p.k, p.weight_format)
+        if ent is not None and not ent.within_tol:
+            return False
+        return quant_gate(p.block_m, p.block_n, p.block_k,
+                          p.weight_format, epilogue=p.epilogue)
     return _bitexact_gate(p.block_m, p.block_n, p.block_k,
                           epilogue=p.epilogue)

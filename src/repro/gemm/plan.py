@@ -54,6 +54,15 @@ class GemmPlan:
     then the padded concatenated width).  ``vmem_clamped`` records that
     the policy shrank the requested blocks to honor the kernel VMEM
     budget.
+
+    ``weight_format`` is the pack-time weight format the plan executes
+    against: ``"fp32"`` (any raw/packed fp-dtype weight — ``dtype``
+    carries the actual operand dtype) or a quantized format from
+    ``repro.quant.FORMATS`` (``"int8"`` / ``"ternary"``), in which case
+    execute() requires a ``QuantizedPackedWeight`` operand and
+    dispatches the backend's dequant-fused run.  Plan-keyed: quantized
+    and fp32 plans for one shape are distinct cache entries, and the
+    VMEM fit uses the format's bytes-per-element.
     """
     m: int
     n: int
@@ -73,6 +82,7 @@ class GemmPlan:
     epilogue: EpilogueSpec | None = None
     fused_n_splits: tuple = ()
     vmem_clamped: bool = False
+    weight_format: str = "fp32"
 
     # ----------------------------------------------------------- geometry
     @property
@@ -106,6 +116,11 @@ class GemmPlan:
         return self.epilogue is not None and self.epilogue.glu is not None
 
     @property
+    def quantized(self) -> bool:
+        """True when this plan executes a quantized pack-time format."""
+        return self.weight_format != "fp32"
+
+    @property
     def n_out(self) -> int:
         """Output column count execute() returns.
 
@@ -126,6 +141,8 @@ class GemmPlan:
             epi = f", epilogue={self.epilogue}"
         if self.fused_n_splits:
             epi += f", fused={self.fused_n_splits}"
+        if self.quantized:
+            epi += f", weight_format={self.weight_format}"
         if self.vmem_clamped:
             epi += ", vmem_clamped"
         return (f"GemmPlan[{self.m}x{self.n}x{self.k} {self.dtype} "

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import collections
 import threading
+import warnings
 from typing import Any
 
 import jax.numpy as jnp
@@ -66,11 +67,20 @@ def plan_cache_info() -> CacheInfo:
         return CacheInfo(_hits, _misses, _CACHE_MAXSIZE, len(_cache))
 
 
+def vmem_clamped_count() -> int:
+    """How many currently-cached plans had their blocks shrunk to honor
+    the kernel VMEM budget (serving observability: surfaced in
+    ``GenStats``/``ServeStats`` and the benchmark reports)."""
+    with _cache_lock:
+        return sum(1 for p in _cache.values() if p.vmem_clamped)
+
+
 def plan_cache_clear() -> None:
     global _hits, _misses
     with _cache_lock:
         _cache.clear()
         _hits = _misses = 0
+    _vmem_warned.clear()
 
 
 def _dtype_name(dtype: Any) -> str:
@@ -96,20 +106,50 @@ def _fine_block_n(m: int, n: int, k: int, *, block_m: int, block_k: int,
     return min(cands, key=score)
 
 
+_vmem_warned: set = set()
+
+
+def _warn_vmem_clamp(key: tuple, requested: tuple, got: tuple):
+    """Satellite: a clamped block triple used to be silent unless the
+    caller inspected ``plan.vmem_clamped`` — now the FIRST resolution of
+    each clamped plan key warns, naming the key (cleared alongside the
+    plan cache so tests can re-arm it)."""
+    if key in _vmem_warned:
+        return
+    _vmem_warned.add(key)
+    warnings.warn(
+        f"gemm policy clamped the block triple {requested} -> {got} to "
+        f"fit the kernel VMEM budget for plan key {key} (the plan "
+        f"records this as vmem_clamped=True)", RuntimeWarning,
+        stacklevel=3)
+
+
 def _fit_vmem(bm: int, bn: int, bk: int, dtype: str,
-              epilogue: EpilogueSpec | None):
+              epilogue: EpilogueSpec | None,
+              weight_format: str = "fp32"):
     """Shrink the block triple until ``kernels.panel_gemm.vmem_bytes``
     fits the VMEM budget (satellite: an explicit or fused-wide triple —
     a glu epilogue doubles the weight + accumulator tiles — could
     otherwise exceed it).  Shrinks the deeper of (block_k, block_n)
     first; every candidate still divides the padded dim because padded
-    dims are 128-multiples and the shrink path halves toward 128."""
+    dims are 128-multiples and the shrink path halves toward 128.
+
+    ``weight_format`` re-resolves the budget for quantized packs: int8
+    tiles stream 4x and ternary 16x fewer weight bytes, so block
+    triples that clamp at fp32 can stand at reduced precision."""
     dt = jnp.dtype(dtype)
     clamped = False
-    while _kernel.vmem_bytes(bm, bn, bk, dt,
-                             epilogue=epilogue) > _kernel.VMEM_BUDGET:
+    quant = weight_format != "fp32"
+    while _kernel.vmem_bytes(bm, bn, bk, dt, epilogue=epilogue,
+                             weight_format=weight_format
+                             ) > _kernel.VMEM_BUDGET:
         if bk >= bn and bk > 128:
             bk = max(128, bk // 2)
+            if quant and bk % 128:
+                # quantized tiles must span whole GROUP_K scale groups;
+                # 128 always divides the pack-padded K, so it is the
+                # one shrink target that keeps both contracts
+                bk = 128
         elif bn > 128:
             bn = max(128, bn // 2)
         elif bm > 8:
@@ -125,7 +165,8 @@ def _resolve(m: int, n: int, k: int, *, dtype: str, backend: str,
              block_k: int | None, pack: str | None, transposed: bool,
              sharding_key: str, validate: bool,
              epilogue: EpilogueSpec | None = None,
-             fused_n_splits: tuple = ()) -> GemmPlan:
+             fused_n_splits: tuple = (),
+             weight_format: str = "fp32") -> GemmPlan:
     bm = block_m or min(_kernel.DEFAULT_BLOCK_M, _rnd_up(m, 8))
     if k >= n:                              # lever 1: fine panels
         lever = LEVER_FINE_PANELS
@@ -138,20 +179,41 @@ def _resolve(m: int, n: int, k: int, *, dtype: str, backend: str,
         default_pack = PACK_PREPACKED
         bk = block_k or packing.fit_block(k, _kernel.DEFAULT_BLOCK_K)
         bn = block_n or packing.fit_block(n, _kernel.DEFAULT_BLOCK_N)
+    if weight_format != "fp32":
+        from repro.quant.formats import _check_fmt
+        _check_fmt(weight_format)
+        # quantization is a pack-time format: whatever lever the shape
+        # resolves to, the weight must have been quantize-packed at load
+        if pack is not None and pack != PACK_PREPACKED:
+            raise ValueError(
+                f"weight_format={weight_format!r} is a pack-time format; "
+                f"it requires pack={PACK_PREPACKED!r} (got {pack!r})")
+        default_pack = PACK_PREPACKED
     pack = pack or default_pack
     if pack not in (PACK_PREPACKED, PACK_PERCALL, PACK_NONE):
         raise ValueError(f"unknown pack decision {pack!r}")
-    bm, bn, bk, clamped = _fit_vmem(bm, bn, bk, dtype, epilogue)
+    req = (bm, bn, bk)
+    bm, bn, bk, clamped = _fit_vmem(bm, bn, bk, dtype, epilogue,
+                                    weight_format)
+    if clamped:
+        _warn_vmem_clamp((m, n, k, dtype, backend, weight_format), req,
+                         (bm, bn, bk))
 
     sched = scheduler.plan(m, n, k, block_m=bm, block_n=bn, block_k=bk,
                            num_cores=num_cores)
     validated = False
     if validate:
-        if not _bitexact_gate(bm, bn, bk, epilogue=epilogue):
+        if weight_format != "fp32":
+            from repro.quant.kernels import quant_gate
+            ok = quant_gate(bm, bn, bk, weight_format, epilogue=epilogue)
+        else:
+            ok = _bitexact_gate(bm, bn, bk, epilogue=epilogue)
+        if not ok:
             raise RuntimeError(
                 f"blocks ({bm},{bn},{bk}) failed the bit-exactness gate "
-                f"(epilogue={epilogue}) vs the unfused kernel -> op "
-                f"oracle (autotune reject protocol)")
+                f"(epilogue={epilogue}, weight_format={weight_format}) "
+                f"vs the unfused kernel -> op oracle (autotune reject "
+                f"protocol)")
         validated = True
     return GemmPlan(m=m, n=n, k=k, dtype=dtype, backend=backend,
                     block_m=bm, block_n=bn, block_k=bk, pack=pack,
@@ -159,7 +221,7 @@ def _resolve(m: int, n: int, k: int, *, dtype: str, backend: str,
                     occupancy=sched.occupancy, transposed=transposed,
                     sharding_key=sharding_key, validated=validated,
                     epilogue=epilogue, fused_n_splits=fused_n_splits,
-                    vmem_clamped=clamped)
+                    vmem_clamped=clamped, weight_format=weight_format)
 
 
 def _rnd_up(x: int, mult: int) -> int:
@@ -241,17 +303,21 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
          block_k: int | None = None, pack: str | None = None,
          transposed: bool = False, sharding: Any = None,
          validate: bool = False, epilogue: EpilogueSpec | None = None,
-         fused_n_splits: tuple = ()) -> GemmPlan:
+         fused_n_splits: tuple = (),
+         weight_format: str = "fp32") -> GemmPlan:
     """Resolve (and cache) the dispatch plan for a ``[m,k] @ [k,n]`` GEMM.
 
     ``backend=None`` takes the current default (``use_backend`` scope or
-    the process default — never the env var; that compat lives only in
-    the ``core/panel_gemm`` shims).  Explicit ``block_*`` / ``pack``
-    override the policy (benchmark sweeps, baseline paths);
-    ``validate=True`` runs the autotune bit-exactness gate on the
-    resolved blocks (and ``epilogue``, if any) before the plan is issued.
-    ``epilogue`` / ``fused_n_splits`` are plan-keyed: a fused and an
-    unfused plan for the same shape are distinct cache entries.
+    the process default — never the removed ``REPRO_GEMM_IMPL`` env
+    var).  Explicit ``block_*`` / ``pack`` override the policy
+    (benchmark sweeps, baseline paths); ``validate=True`` runs the
+    autotune bit-exactness gate on the resolved blocks (and
+    ``epilogue``, if any) before the plan is issued.  ``epilogue`` /
+    ``fused_n_splits`` / ``weight_format`` are plan-keyed: fused,
+    quantized and plain plans for one shape are distinct cache entries.
+    ``weight_format`` other than ``"fp32"`` marks a quantized pack-time
+    format (``repro.quant``): the VMEM fit uses its bytes-per-element
+    and execute() dispatches the backend's dequant-fused run.
     """
     global _hits, _misses
     backend = _backends.resolve_backend(backend)
@@ -262,7 +328,7 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
     fused_n_splits = tuple(int(s) for s in fused_n_splits)
     key = (int(m), int(n), int(k), dtype, backend, num_cores, block_m,
            block_n, block_k, pack, bool(transposed), skey, bool(validate),
-           epilogue, fused_n_splits)
+           epilogue, fused_n_splits, weight_format)
     with _cache_lock:
         hit = _cache.get(key)
         if hit is not None:
@@ -274,7 +340,8 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
                  num_cores=num_cores, block_m=block_m, block_n=block_n,
                  block_k=block_k, pack=pack, transposed=bool(transposed),
                  sharding_key=skey, validate=validate, epilogue=epilogue,
-                 fused_n_splits=fused_n_splits)
+                 fused_n_splits=fused_n_splits,
+                 weight_format=weight_format)
     with _cache_lock:
         _cache[key] = p
         while len(_cache) > _CACHE_MAXSIZE:
@@ -306,26 +373,34 @@ def plan_for_packed(m: int, pw: packing.PackedWeight, *,
     """Plan for a weight already packed at model load: the block decision
     was made when the pack happened; the plan adopts it (and still records
     which lever the policy assigns the shape).  A fused pack's static
-    split map and the requested ``epilogue`` ride onto the plan."""
-    return plan(m, pw.n, pw.k, dtype=pw.dtype, backend=backend,
+    split map, a quantized pack's format (``QuantizedPackedWeight.fmt``
+    -> ``weight_format``), and the requested ``epilogue`` ride onto the
+    plan.  A quantized pack's ``dtype`` keys as the fp32 the dequant
+    produces (codes are not an operand dtype)."""
+    fmt = getattr(pw, "fmt", "fp32")
+    dtype = "float32" if fmt != "fp32" else pw.dtype
+    return plan(m, pw.n, pw.k, dtype=dtype, backend=backend,
                 num_cores=num_cores, block_n=pw.block_n,
                 block_k=pw.block_k, pack=PACK_PREPACKED, validate=validate,
                 sharding=_packed_sharding(pw), epilogue=epilogue,
-                fused_n_splits=pw.n_splits)
+                fused_n_splits=pw.n_splits, weight_format=fmt)
 
 
 def pack_blocks(n: int, k: int, *, m_hint: int = 128,
                 block_n: int | None = None, block_k: int | None = None,
                 num_cores: int = DEFAULT_NUM_CORES,
-                epilogue: EpilogueSpec | None = None) -> tuple[int, int]:
+                epilogue: EpilogueSpec | None = None,
+                weight_format: str = "fp32") -> tuple[int, int]:
     """The load-time pack decision, policy-resolved: (block_n, block_k)
     for a [k, n] weight.  ``m_hint`` is the serving M the plan targets
     (the paper's S = 128 prefill row panel).  ``epilogue`` lets a fused
     pack reserve VMEM for its store-phase footprint (a glu epilogue
-    doubles the weight/accumulator tiles), so the blocks the pack adopts
+    doubles the weight/accumulator tiles), and ``weight_format`` sizes
+    the streamed tile for quantized packs, so the blocks the pack adopts
     already fit the budget the execute-time plan will enforce."""
     p = plan(m_hint, n, k, block_n=block_n, block_k=block_k,
-             num_cores=num_cores, epilogue=epilogue)
+             num_cores=num_cores, epilogue=epilogue,
+             weight_format=weight_format)
     return p.block_n, p.block_k
 
 

@@ -1,8 +1,8 @@
 """Jit'd convenience wrappers around the Pallas kernels.
 
-``repro.core.panel_gemm`` is the deployment surface (packed/per-call/xla
-paths); these wrappers expose the raw kernels with shape massaging for
-tests, benchmarks, and the attention layer.
+``repro.gemm`` (plan/execute) is the deployment surface
+(packed/per-call/xla paths); these wrappers expose the raw kernels with
+shape massaging for tests, benchmarks, and the attention layer.
 """
 from __future__ import annotations
 

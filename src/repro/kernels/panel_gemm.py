@@ -188,7 +188,8 @@ def apply_epilogue(acc: jax.Array, spec: EpilogueSpec, *, bias=None,
 
 def vmem_bytes(block_m: int, block_n: int, block_k: int,
                in_dtype=jnp.float32, *,
-               epilogue: EpilogueSpec | None = None) -> int:
+               epilogue: EpilogueSpec | None = None,
+               weight_format: str = "fp32") -> int:
     """Static VMEM footprint model for one grid step (double-buffered ins).
 
     A ``glu`` epilogue streams two weight tiles and carries two fp32
@@ -199,19 +200,32 @@ def vmem_bytes(block_m: int, block_n: int, block_k: int,
     the worst execute-time footprint — otherwise plan-time clamping
     could shrink below the pack's blocks and every execute would raise
     PlanMismatchError.
+
+    ``weight_format`` sizes the STREAMED weight tile: a quantized pack
+    streams int8 codes (1 B/elem) or 2-bit ternary bytes (0.25 B/elem)
+    plus a per-column fp32 scale row, so quantized plans fit deeper /
+    wider blocks in the same budget (repro.quant).
     """
     isz = jnp.dtype(in_dtype).itemsize
     x = block_m * block_k * isz
-    w = block_k * block_n * isz
+    if weight_format == "fp32":
+        w = block_k * block_n * isz
+        scales = 0
+    else:
+        from repro.quant.formats import GROUP_K, weight_itemsize
+        w = int(block_k * block_n * weight_itemsize(weight_format))
+        # per-(column, K-group) fp32 scale slab for this tile
+        scales = max(1, block_k // GROUP_K) * block_n * 4
     acc = block_m * block_n * 4          # fp32 accumulator scratch
     out = block_m * block_n * isz
     glu = epilogue is not None and epilogue.glu is not None
     if glu:
         w *= 2
+        scales *= 2
         acc *= 2
     # worst-case epilogue operand headroom (fp32 bias row + residual tile)
     extra = block_n * 4 * (2 if glu else 1) + block_m * block_n * 4
-    return 2 * (x + w) + acc + out + extra   # 2x: pipelined double buffering
+    return 2 * (x + w + scales) + acc + out + extra   # 2x: double buffering
 
 
 def _gemm_kernel(x_ref, w_ref, *refs, nk: int,

@@ -45,6 +45,11 @@ def main():
                     help="disable horizontal QKV/gate-up fusion and the "
                          "fused epilogues (A/B escape hatch; default: "
                          "fusion on)")
+    ap.add_argument("--quant", default=None, choices=["int8", "ternary"],
+                    help="serve on quantized packed weights (mixed "
+                         "precision: LM head + embeddings stay fp32); "
+                         "every pack is tolerance-gated by the error "
+                         "ledger (docs/quantization.md)")
     ap.add_argument("--compare-percall", action="store_true",
                     help="also time the unpacked (per-call) engine")
     ap.add_argument("--requests", type=int, default=0,
@@ -72,18 +77,33 @@ def main():
 
     t0 = time.perf_counter()
     eng = Engine(cfg, params, mesh=mesh, max_len=args.max_len, packed=True,
-                 backend=args.backend, fuse=not args.no_fusion)
+                 backend=args.backend, fuse=not args.no_fusion,
+                 quant=args.quant)
     print(f"model load + pack (untimed in per-call metrics): "
           f"{time.perf_counter() - t0:.2f}s  "
-          f"[fusion {'off' if args.no_fusion else 'on'}]")
+          f"[fusion {'off' if args.no_fusion else 'on'}, "
+          f"quant {args.quant or 'off'}]")
+    if args.quant:
+        from repro.quant import ledger
+        ents = ledger.entries()
+        if ents:
+            worst = max(ents, key=lambda e: e.max_rel / e.tol)
+            print(f"error ledger: {len(ents)} packs measured, all within "
+                  f"tolerance; worst max_rel {worst.max_rel:.2e} "
+                  f"(tol {worst.tol:.0e}, shape {worst.k}x{worst.n})")
     if cfg.modality != "text":
         logits, _ = eng.prefill(prompts)
         print(f"stub-frontend arch: prefill ok, logits {logits.shape}")
         return
     gen, stats = eng.generate(prompts, args.max_new)
-    print(f"packed engine (fused={stats.fused}): "
+    print(f"packed engine (fused={stats.fused}, quant={stats.quant}): "
           f"prefill {stats.prefill_tps:,.0f} tok/s, "
           f"decode {stats.decode_tps:,.0f} tok/s")
+    print(f"  plan cache: {stats.plan_cache.hits} hits / "
+          f"{stats.plan_cache.misses} misses "
+          f"({stats.plan_cache.currsize} cached, "
+          f"{stats.vmem_clamped_plans} vmem-clamped)"
+          if stats.plan_cache else "")
     if args.compare_percall:
         eng2 = Engine(cfg, params, mesh=mesh, max_len=args.max_len,
                       packed=False, backend=args.backend)

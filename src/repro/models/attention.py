@@ -10,8 +10,8 @@ so a single scan-over-layers body serves alternating local/global patterns
 ring buffer only needs true positions, not re-sorting).
 
 On TPU the same math runs as the Pallas kernel in kernels/flash_attention.py
-(validated against the same oracle); runtime selection mirrors
-core/panel_gemm's impl switch.
+(validated against the same oracle); runtime selection mirrors the
+gemm backend registry's explicit choice.
 """
 from __future__ import annotations
 

@@ -32,8 +32,10 @@ def dot_dtype(native):
 
 def linear(x: jax.Array, w, bias=None, *, softcap: float | None = None,
            residual=None, out_dtype=None) -> jax.Array:
-    """x[..., K] @ w[K, N] (+ fused epilogue).  w may be a raw array or a
-    PackedWeight (pre-packed once at model load — paper lever 2).
+    """x[..., K] @ w[K, N] (+ fused epilogue).  w may be a raw array, a
+    PackedWeight (pre-packed once at model load — paper lever 2), or a
+    QuantizedPackedWeight (quantized at pack time — the plan picks up
+    its format and dispatches the dequant-fused path, repro.quant).
 
     Packed weights dispatch through the plan/execute API: the plan is
     resolved at trace time (shape-keyed LRU cache, so prefill and decode

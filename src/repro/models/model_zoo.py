@@ -170,9 +170,22 @@ _FUSE_GROUPS = (
 )
 
 
+# keep_fp32 aliases: user-facing role names -> the param keys they pin.
+_KEEP_FP32_ALIASES = {"head": ("lm_head",), "embed": ("embed",)}
+
+
+def _resolve_keep_fp32(keep_fp32) -> frozenset:
+    names: set[str] = set()
+    for entry in keep_fp32 or ():
+        names.update(_KEEP_FP32_ALIASES.get(entry, (entry,)))
+    return frozenset(names)
+
+
 def pack_for_inference(cfg: ModelConfig, params, *, block_n=None,
                        block_k=None, shardings=None,
-                       m_hint: int = PAPER_M, fuse: bool = True) -> dict:
+                       m_hint: int = PAPER_M, fuse: bool = True,
+                       quant: str | None = None,
+                       keep_fp32=("head", "embed")) -> dict:
     """Pack every projection weight once at model load (paper §3.2).
 
     The per-weight (block_n, block_k) decision is the dispatch POLICY's
@@ -190,50 +203,86 @@ def pack_for_inference(cfg: ModelConfig, params, *, block_n=None,
     they emitted three.  ``fuse=False`` is the A/B escape hatch
     (``launch/serve.py --no-fusion``).
 
+    ``quant`` ("int8" | "ternary") is the MIXED-PRECISION tree rewrite
+    (repro.quant): every packable projection quantizes at pack time —
+    fused groups included — EXCEPT the roles named by ``keep_fp32``
+    ("head" -> lm_head, "embed" -> the embedding table, or literal
+    param names), which keep the fp32 pack.  The default pins the LM
+    head and embeddings, the two spots where quantization error lands
+    directly on the logits.  Each concrete quantized pack is measured
+    and tolerance-gated by the error ledger (docs/quantization.md).
+
     Stacked per-layer weights (L, K, N) pack along their last two dims;
     lax.scan slices the leading dim, so inside the scan body each
     PackedWeight carries the 2-D panels the kernel consumes.  ``shardings``
     (a matching pytree) re-places each packed array so no resharding
     appears per call.
     """
-    def blocks_for(n, k, epilogue=None):
+    keep = _resolve_keep_fp32(keep_fp32)
+    if quant is not None:
+        from repro.quant.formats import _check_fmt
+        _check_fmt(quant)
+
+    def blocks_for(n, k, epilogue=None, fmt=None):
         # explicit overrides keep the legacy fit-to-dim behavior
         bn = packing.fit_block(n, block_n) if block_n else None
         bk = packing.fit_block(k, block_k) if block_k else None
         return gemm_api.pack_blocks(n, k, m_hint=m_hint,
                                     block_n=bn, block_k=bk,
-                                    epilogue=epilogue)
+                                    epilogue=epilogue,
+                                    weight_format=fmt or "fp32")
 
-    def place(data, shard_node):
+    def place_pw(pw, shard_node):
+        if shard_node is None:
+            return pw
+        kw = {}
         if isinstance(shard_node, packing.PackedWeight):
-            shard_node = shard_node.data
-        return data if shard_node is None else jax.device_put(data,
-                                                              shard_node)
+            if shard_node.data is not None:
+                kw["data"] = jax.device_put(pw.data, shard_node.data)
+            scales_s = getattr(shard_node, "scales", None)
+            if scales_s is not None and getattr(pw, "scales",
+                                                None) is not None:
+                kw["scales"] = jax.device_put(pw.scales, scales_s)
+        else:
+            kw["data"] = jax.device_put(pw.data, shard_node)
+        return dataclasses.replace(pw, **kw) if kw else pw
 
-    def pack_one(node, shard_node):
+    def pack_one(name, node, shard_node):
+        fmt = quant if (quant and name not in keep) else None
         if node.ndim == 3:                          # stacked (L, K, N)
             _, k, n = node.shape
-            bn, bk = blocks_for(n, k)
-            data = jnp.pad(node, ((0, 0), (0, (-k) % bk), (0, (-n) % bn)))
-            return packing.PackedWeight(data=place(data, shard_node), n=n,
-                                        k=k, block_n=bn, block_k=bk)
+            bn, bk = blocks_for(n, k, fmt=fmt)
+            if fmt:
+                from repro.quant.formats import quantize_pack
+                pw = quantize_pack(node, fmt, block_n=bn, block_k=bk)
+            else:
+                data = jnp.pad(node,
+                               ((0, 0), (0, (-k) % bk), (0, (-n) % bn)))
+                pw = packing.PackedWeight(data=data, n=n, k=k,
+                                          block_n=bn, block_k=bk)
+            return place_pw(pw, shard_node)
         k, n = node.shape
-        bn, bk = blocks_for(n, k)
-        pw = packing.pack(node, block_n=bn, block_k=bk)
-        return dataclasses.replace(pw, data=place(pw.data, shard_node))
+        bn, bk = blocks_for(n, k, fmt=fmt)
+        pw = packing.pack(node, block_n=bn, block_k=bk, quant=fmt)
+        return place_pw(pw, shard_node)
 
-    def pack_group(nodes, shard_node, glu: bool):
+    def pack_group(group, nodes, shard_node, glu: bool):
         k = nodes[0].shape[-2]
         n_cat = sum(int(w.shape[-1]) for w in nodes)
+        # a group quantizes only when every member is quantizable (a
+        # keep_fp32 member pins the whole fused pack to fp32)
+        fmt = quant if (quant and not any(g in keep for g in group)) \
+            else None
         # glu packs budget VMEM for the two-tile/two-accumulator store
         # phase, under the activation the layer will actually execute
         # (vmem_bytes already reserves bias/residual operand headroom
         # unconditionally, so pack-time and execute-time footprints
         # agree whatever else the layer attaches)
         spec = gemm_api.EpilogueSpec(glu=cfg.act) if glu else None
-        bn, bk = blocks_for(n_cat, k, epilogue=spec)
-        pw = packing.pack_fused(list(nodes), block_n=bn, block_k=bk)
-        return dataclasses.replace(pw, data=place(pw.data, shard_node))
+        bn, bk = blocks_for(n_cat, k, epilogue=spec, fmt=fmt)
+        pw = packing.pack_fused(list(nodes), block_n=bn, block_k=bk,
+                                quant=fmt)
+        return place_pw(pw, shard_node)
 
     def walk(path, node, shard_node):
         if isinstance(node, dict):
@@ -246,8 +295,8 @@ def pack_for_inference(cfg: ModelConfig, params, *, block_n=None,
                                and node[g].ndim >= 2 for g in group):
                         continue
                     out[fused_name] = pack_group(
-                        [node[g] for g in group], shard.get(fused_name),
-                        glu == "glu")
+                        group, [node[g] for g in group],
+                        shard.get(fused_name), glu == "glu")
                     done.update(group)
             for key, v in node.items():
                 if key in done:
@@ -259,6 +308,6 @@ def pack_for_inference(cfg: ModelConfig, params, *, block_n=None,
             return node
         if name == "wo" and "moe" in path:
             return node                         # MoE expert bank, not attn
-        return pack_one(node, shard_node)
+        return pack_one(name, node, shard_node)
 
     return walk((), params, shardings)

@@ -1,0 +1,32 @@
+"""Quantized pre-pack subsystem: weight formats that shrink the bytes
+the inner loop streams, a dequant-fused panel kernel, and the error
+ledger that keeps reduced precision honest.
+
+    from repro.core import packing
+    qpw = packing.pack(w, quant="int8")       # quantize + pack at load
+    p   = gemm.plan_for_packed(m, qpw)        # plan carries weight_format
+    y   = gemm.execute(p, x, qpw)             # dequant-fused compute loop
+
+See docs/quantization.md for the format definitions, the tolerance
+contract, the ledger schema, and the mixed-precision model policy.
+"""
+from repro.quant.formats import (FORMATS, GROUP_K, QuantFormatError,
+                                 QuantizedPackedWeight, dequantize,
+                                 dequantize_padded, expand_scales,
+                                 pack_ternary_codes, quantize,
+                                 quantize_int8, quantize_pack,
+                                 quantize_pack_fused, quantize_ternary,
+                                 unpack_ternary_codes, weight_itemsize)
+from repro.quant.kernels import quant_gate, quant_panel_gemm
+from repro.quant.ledger import (PROBE_M, TOLERANCES, LedgerEntry,
+                                QuantToleranceError)
+from repro.quant import ledger
+
+__all__ = [
+    "FORMATS", "GROUP_K", "LedgerEntry", "PROBE_M", "QuantFormatError",
+    "QuantToleranceError", "QuantizedPackedWeight", "TOLERANCES",
+    "dequantize", "dequantize_padded", "expand_scales", "ledger",
+    "pack_ternary_codes", "quant_gate", "quant_panel_gemm", "quantize",
+    "quantize_int8", "quantize_pack", "quantize_pack_fused",
+    "quantize_ternary", "unpack_ternary_codes", "weight_itemsize",
+]

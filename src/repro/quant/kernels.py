@@ -1,0 +1,285 @@
+"""Dequant-fused panel GEMM — the quantized formats' compute loop.
+
+Same Goto-style (block_m, block_n, block_k) panel schedule, Z-discipline
+and fused-epilogue store step as ``kernels/panel_gemm``, with ONE change
+in the streamed operand: the weight tile arrives as int8 codes (or 2-bit
+packed ternary bytes) plus a per-column scale row, is dequantized into
+registers (`codes -> fp32 * scale`), and feeds the same fp32 MXU
+accumulation.  The tile's HBM->VMEM traffic shrinks 4x (int8) / 16x
+(ternary) while the accumulation semantics stay those of the fp32
+kernel on the dequantized panels — which is exactly the contract the
+structural gate below enforces bitwise.
+
+Every ``EpilogueSpec`` composes: the store step applies bias /
+activation / softcap / residual (and the glu two-accumulator combine)
+on the fp32 accumulator through the SAME shared ``apply_epilogue`` /
+``apply_epilogue_glu`` definitions, so fused-quant == unfused-quant
+holds bit-identically just like the fp32 path.
+
+The interpret-mode oracle: ``quant_panel_gemm(interpret=True)`` must be
+BIT-IDENTICAL to ``ref.gemm_blocked(x, dequantize_padded(...),
+block_k)`` (+ the jnp epilogue under jit) — dequantization is
+elementwise identical tiled or whole, so the only degree of freedom
+left is the K accumulation order, which the blocked oracle pins.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
+from repro.kernels.panel_gemm import (DEFAULT_BLOCK_K, DEFAULT_BLOCK_M,
+                                      DEFAULT_BLOCK_N, EpilogueSpec,
+                                      _act_fn, _finish, apply_epilogue,
+                                      apply_epilogue_glu)
+from repro.quant import formats as F
+
+
+def _dequant_tile(w_vals, s_vals, fmt: str) -> jax.Array:
+    """codes tile -> fp32 weight tile (the in-registers dequant).
+    ``s_vals`` is the tile's ``[block_k // GROUP_K, block_n]`` scale
+    slab (tiles never straddle a group, so the slab is exact).
+    Elementwise identical to ``formats.dequantize_padded`` on the full
+    array — the bitwise contract with the blocked oracle depends on it,
+    so both route through the same unpack/cast/expand/multiply ops."""
+    if fmt == "ternary":
+        codes = F.unpack_ternary_codes(w_vals)
+    else:
+        codes = w_vals.astype(jnp.float32)
+    return codes * F.expand_scales(s_vals, codes.shape[-2])
+
+
+def _quant_gemm_kernel(x_ref, w_ref, s_ref, *refs, nk: int, fmt: str,
+                       spec: EpilogueSpec | None = None):
+    """One (i, j, k) grid step: acc += x @ dequant(codes, scale)."""
+    refs = list(refs)
+    acc_ref = refs.pop()
+    o_ref = refs.pop()
+    bias_ref = refs.pop(0) if spec is not None and spec.bias else None
+    res_ref = refs.pop(0) if spec is not None and spec.residual else None
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _dequant_tile(w_ref[...], s_ref[...], fmt)
+    acc_ref[...] += jnp.dot(x_ref[...], w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _store():
+        acc = acc_ref[...]
+        if spec is not None:
+            if spec.bias:
+                acc = acc + bias_ref[...]
+            if spec.act is not None:
+                acc = _act_fn(spec.act)(acc)
+            acc = _finish(spec, acc, res_ref[...] if res_ref is not None
+                          else None)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _quant_glu_kernel(x_ref, wg_ref, wu_ref, sg_ref, su_ref, *refs,
+                      nk: int, fmt: str, spec: EpilogueSpec):
+    """GLU variant: gate/up column panels of one quantized fused pack,
+    each dequantized into registers, two fp32 accumulators over the K
+    grid, ``act(gate) * up`` combined in the store step."""
+    refs = list(refs)
+    acc_u_ref = refs.pop()
+    acc_g_ref = refs.pop()
+    o_ref = refs.pop()
+    bg_ref = refs.pop(0) if spec.bias else None
+    bu_ref = refs.pop(0) if spec.bias else None
+    res_ref = refs.pop(0) if spec.residual else None
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_g_ref[...] = jnp.zeros_like(acc_g_ref)
+        acc_u_ref[...] = jnp.zeros_like(acc_u_ref)
+
+    x = x_ref[...]
+    acc_g_ref[...] += jnp.dot(
+        x, _dequant_tile(wg_ref[...], sg_ref[...], fmt),
+        preferred_element_type=jnp.float32)
+    acc_u_ref[...] += jnp.dot(
+        x, _dequant_tile(wu_ref[...], su_ref[...], fmt),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _store():
+        acc = apply_epilogue_glu(
+            acc_g_ref[...], acc_u_ref[...], spec,
+            bias_g=bg_ref[...] if bg_ref is not None else None,
+            bias_u=bu_ref[...] if bu_ref is not None else None,
+            residual=res_ref[...] if res_ref is not None else None)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("weight_format", "block_m", "block_n", "block_k",
+                     "interpret", "out_dtype", "epilogue"),
+)
+def quant_panel_gemm(
+    x: jax.Array,               # [M_pad, K_pad] activations (pre-padded)
+    data: jax.Array,            # codes: [K_pad, N_pad] int8 or
+                                #        [K_pad // 4, N_pad] uint8 ternary
+    scales: jax.Array,          # [K_pad // GROUP_K, N_pad] fp32 scales
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    *,
+    weight_format: str,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    out_dtype=None,
+    epilogue: EpilogueSpec | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = epilogue(x @ dequant(data, scales)) via dequant-fused tiles."""
+    fmt = weight_format
+    if fmt not in F.FORMATS:
+        raise ValueError(f"unknown weight_format {fmt!r}")
+    kdiv = 4 if fmt == "ternary" else 1
+    m, k = x.shape
+    krows, n = data.shape
+    assert k == krows * kdiv, (
+        f"contraction mismatch: x K={k} vs codes K={krows * kdiv}")
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        f"shapes ({m},{n},{k}) not aligned to blocks "
+        f"({block_m},{block_n},{block_k}); pack first")
+    assert block_k % kdiv == 0
+    assert block_k % F.GROUP_K == 0, (
+        f"block_k={block_k} must span whole GROUP_K={F.GROUP_K} scale "
+        f"groups (tiles never straddle a group)")
+    nk = k // block_k
+    wbk = block_k // kdiv               # codes-row depth of one K tile
+    out_dtype = out_dtype or x.dtype
+    spec = epilogue
+    if spec is not None and spec.is_noop:
+        spec = None
+    glu = spec is not None and spec.glu is not None
+    n_out = n // 2 if glu else n
+    if glu:
+        assert n % 2 == 0 and n_out % block_n == 0, (
+            f"glu epilogue needs block-aligned column halves; got N={n} "
+            f"with block_n={block_n} — pack with quantize_pack_fused")
+    assert (bias is not None) == bool(spec is not None and spec.bias)
+    assert (residual is not None) == bool(spec is not None and spec.residual)
+
+    sbk = block_k // F.GROUP_K          # scale rows per K tile
+    assert scales.shape[-2:] == (k // F.GROUP_K, n), (
+        f"scales {scales.shape} vs expected ({k // F.GROUP_K},{n})")
+    s2 = scales.reshape(k // F.GROUP_K, n).astype(jnp.float32)
+    half_tiles = n_out // block_n
+    x_spec = pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk))
+    w_spec = pl.BlockSpec((wbk, block_n), lambda i, j, kk: (kk, j))
+    s_spec = pl.BlockSpec((sbk, block_n), lambda i, j, kk: (kk, j))
+    if glu:      # up panel + its scale slab: column-offset index maps
+        ops = [x, data, data, s2, s2]
+        in_specs = [
+            x_spec, w_spec,
+            pl.BlockSpec((wbk, block_n),
+                         lambda i, j, kk: (kk, j + half_tiles)),
+            s_spec,
+            pl.BlockSpec((sbk, block_n),
+                         lambda i, j, kk: (kk, j + half_tiles)),
+        ]
+    else:
+        ops = [x, data, s2]
+        in_specs = [x_spec, w_spec, s_spec]
+    if spec is not None and spec.bias:
+        b2 = bias.reshape(1, n).astype(jnp.float32)
+        ops.append(b2)
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)))
+        if glu:
+            ops.append(b2)
+            in_specs.append(pl.BlockSpec(
+                (1, block_n), lambda i, j, kk: (0, j + half_tiles)))
+    if spec is not None and spec.residual:
+        assert residual.shape == (m, n_out), (
+            f"residual {residual.shape} vs output ({m},{n_out})")
+        ops.append(residual.astype(jnp.float32))
+        in_specs.append(pl.BlockSpec((block_m, block_n),
+                                     lambda i, j, kk: (i, j)))
+
+    if glu:
+        kernel = functools.partial(_quant_glu_kernel, nk=nk, fmt=fmt,
+                                   spec=spec)
+        scratch = [pltpu.VMEM((block_m, block_n), jnp.float32),
+                   pltpu.VMEM((block_m, block_n), jnp.float32)]
+    else:
+        kernel = functools.partial(_quant_gemm_kernel, nk=nk, fmt=fmt,
+                                   spec=spec)
+        scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n_out // block_n, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n_out), out_dtype),
+        scratch_shapes=scratch,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*ops)
+
+
+# --------------------------------------------------- structural gate
+_gate_memo: dict[tuple, bool] = {}
+
+
+def quant_gate(bm: int, bn: int, bk: int, fmt: str, *,
+               epilogue: EpilogueSpec | None = None,
+               reduced_k_blocks: int = 2, seed: int = 0) -> bool:
+    """The autotune reject protocol for a quantized block triple: the
+    interpret-mode dequant-fused kernel on a reduced shape with a real
+    K-carry must be BIT-IDENTICAL to ``ref.gemm_blocked`` over the
+    dequantized panels (+ the jnp epilogue under jit).  This attests the
+    KERNEL (tiling, dequant placement, accumulation order); the
+    format's numeric error vs fp32 is the error ledger's separate,
+    tolerance-gated concern."""
+    import numpy as np
+
+    from repro.core import bitexact
+    from repro.kernels import ref
+
+    key = (bm, bn, bk, fmt, epilogue)
+    if key in _gate_memo:
+        return _gate_memo[key]
+    rng = np.random.default_rng(seed)
+    glu = epilogue is not None and epilogue.glu is not None
+    m_r, k_r = bm, reduced_k_blocks * bk
+    n_r = 2 * bn if glu else bn
+    x = jnp.asarray(rng.standard_normal((m_r, k_r)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k_r, n_r)), jnp.float32)
+    q, s = F.quantize(w, fmt)
+    data = F.pack_ternary_codes(q) if fmt == "ternary" else q
+    deq = F.dequantize_padded(data, s, fmt)
+    bias = (jnp.asarray(rng.standard_normal((n_r,)), jnp.float32)
+            if epilogue is not None and epilogue.bias else None)
+    n_out = bn if glu else n_r
+    res = (jnp.asarray(rng.standard_normal((m_r, n_out)), jnp.float32)
+           if epilogue is not None and epilogue.residual else None)
+    y = quant_panel_gemm(x, data, s, bias, res, weight_format=fmt,
+                         block_m=bm, block_n=bn, block_k=bk,
+                         epilogue=epilogue, interpret=True)
+    acc = ref.gemm_blocked(x, deq, bk, out_dtype=jnp.float32)
+    if epilogue is None:
+        oracle = acc
+    else:
+        oracle = jax.jit(
+            lambda a, b, r: apply_epilogue(
+                a, epilogue, bias=b, residual=r).astype(jnp.float32)
+        )(acc, bias, res)
+    ok = bitexact.bit_identical(np.asarray(y), np.asarray(oracle))
+    _gate_memo[key] = ok
+    return ok

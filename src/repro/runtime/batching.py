@@ -63,6 +63,13 @@ class ServeStats:
     ``prefill_tokens`` counts true prompt tokens (never chunk padding or
     dead slots); ``decode_tokens`` counts tokens actually emitted to a
     request (the first, prefill-sampled token included).
+
+    GEMM-dispatch observability: ``plan_cache`` snapshots
+    ``gemm.plan_cache_info()`` at run end (plan churn — misses moving in
+    steady state means chunk bucketing broke) and ``vmem_clamped_plans``
+    counts cached plans whose blocks the policy shrank to fit the
+    kernel VMEM budget; ``quant`` is the engine's quantized weight
+    format (None: fp32).
     """
     prefill_tokens: int = 0
     decode_tokens: int = 0
@@ -70,6 +77,9 @@ class ServeStats:
     decode_s: float = 0.0
     wall_s: float = 0.0
     fused: bool | None = None       # engine ran the fused GEMM path
+    quant: str | None = None        # engine's quantized weight format
+    plan_cache: tuple | None = None
+    vmem_clamped_plans: int = 0
     requests: list[RequestStats] = dataclasses.field(default_factory=list)
 
     @property

@@ -43,13 +43,23 @@ class GenStats:
     ``max_new_tokens`` per row, not ``max_new_tokens - 1``).  Both count
     only live, non-pad tokens when accumulated by ``serve_chunked``.
     ``fused`` records whether the engine ran the horizontally fused
-    QKV / gate-up GEMM path (None: raw-weight engine, fusion n/a).
+    QKV / gate-up GEMM path (None: raw-weight engine, fusion n/a);
+    ``quant`` the engine's quantized weight format (None: fp32).
+
+    GEMM-dispatch observability (the previously-invisible plan churn):
+    ``plan_cache`` snapshots ``gemm.plan_cache_info()`` after the run —
+    (hits, misses, maxsize, currsize) — and ``vmem_clamped_plans``
+    counts cached plans whose blocks the policy shrank to fit the
+    kernel VMEM budget.
     """
     prefill_tokens: int = 0
     decode_tokens: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
     fused: bool | None = None
+    quant: str | None = None
+    plan_cache: tuple | None = None
+    vmem_clamped_plans: int = 0
 
     @property
     def prefill_tps(self):
@@ -64,7 +74,9 @@ class Engine:
     def __init__(self, cfg, params, *, mesh=None, max_len: int = 2048,
                  packed: bool = True, block_n: int | None = None,
                  block_k: int | None = None, donate_cache: bool = True,
-                 backend: str | None = None, fuse: bool = True):
+                 backend: str | None = None, fuse: bool = True,
+                 quant: str | None = None,
+                 keep_fp32=("head", "embed")):
         """``backend`` pins this engine's GEMM backend (a registry name
         from ``repro.gemm.list_backends()``); None keeps the process
         default.  The choice is scoped to this engine's traces — two
@@ -77,6 +89,12 @@ class Engine:
         (and as many re-reads of the activations) per transformer block.
         ``fuse=False`` is the A/B escape hatch; it only applies to the
         packed path (raw engines always run unfused).
+
+        ``quant`` ("int8" | "ternary") serves the model on QUANTIZED
+        packed weights (repro.quant): every projection quantizes at load
+        except the ``keep_fp32`` roles (default: LM head + embeddings),
+        GEMMs run the dequant-fused path, and the error ledger
+        tolerance-gates each pack.  Requires ``packed=True``.
         """
         self.cfg = cfg
         self.mesh = mesh
@@ -84,8 +102,12 @@ class Engine:
         self.packed = packed
         self.backend = backend
         self.fused = bool(packed and fuse)
+        self.quant = quant
         if backend is not None:
             gemm_api.get_backend(backend)       # fail fast on a typo
+        if quant is not None and not packed:
+            raise ValueError("quant= is a pack-time format; it requires "
+                             "packed=True")
 
         shard_fn = Sh.activation_sharder(mesh) if mesh is not None else None
         if packed:
@@ -95,11 +117,13 @@ class Engine:
                 packed_abs = jax.eval_shape(
                     lambda p: model_zoo.pack_for_inference(
                         cfg, p, block_n=block_n, block_k=block_k,
-                        fuse=fuse), params)
+                        fuse=fuse, quant=quant, keep_fp32=keep_fp32),
+                    params)
                 shardings = Sh.param_shardings(packed_abs, mesh)
             self.params = model_zoo.pack_for_inference(
                 cfg, params, block_n=block_n, block_k=block_k,
-                shardings=shardings, fuse=fuse)
+                shardings=shardings, fuse=fuse, quant=quant,
+                keep_fp32=keep_fp32)
         else:
             self.params = params
             if mesh is not None:
@@ -199,6 +223,7 @@ class Engine:
         Returns tokens [B, max_new_tokens]."""
         stats = stats if stats is not None else GenStats()
         stats.fused = self.fused if self.packed else None
+        stats.quant = self.quant if self.packed else None
         b, s0 = prompts.shape[0], prompts.shape[1]
         t0 = time.perf_counter()
         logits, cache = self.prefill(prompts)
@@ -219,6 +244,8 @@ class Engine:
         jax.block_until_ready(tok)
         stats.decode_s += time.perf_counter() - t0
         stats.decode_tokens += b * max_new_tokens      # emitted per row
+        stats.plan_cache = gemm_api.plan_cache_info()
+        stats.vmem_clamped_plans = gemm_api.vmem_clamped_count()
         return jnp.stack(out, axis=1), stats
 
     @staticmethod
@@ -250,6 +277,9 @@ class Engine:
             sync_per_step=sync_per_step)
         outs, stats = sched.run(requests, max_new_tokens)
         stats.fused = self.fused if self.packed else None
+        stats.quant = self.quant if self.packed else None
+        stats.plan_cache = gemm_api.plan_cache_info()
+        stats.vmem_clamped_plans = gemm_api.vmem_clamped_count()
         return outs, stats
 
     # -------------------------------------- legacy phase-locked baseline
@@ -269,7 +299,8 @@ class Engine:
         n = len(requests)
         mn = ([int(max_new_tokens)] * n if np.isscalar(max_new_tokens)
               else [int(m) for m in max_new_tokens])
-        stats = GenStats(fused=self.fused if self.packed else None)
+        stats = GenStats(fused=self.fused if self.packed else None,
+                         quant=self.quant if self.packed else None)
         results: dict[int, np.ndarray] = {}
         queue = list(enumerate(requests))
         while queue:
@@ -293,4 +324,6 @@ class Engine:
             gen = np.asarray(gen)
             for r, i in enumerate(ids):
                 results[i] = gen[r, :mn[i]]
+        stats.plan_cache = gemm_api.plan_cache_info()
+        stats.vmem_clamped_plans = gemm_api.vmem_clamped_count()
         return [results[i] for i in range(len(requests))], stats

@@ -1,16 +1,18 @@
 """Plan/execute GEMM dispatch API tests (the api_redesign acceptance
 grid): policy lever selection on the paper's twelve prefill shapes,
 plan-cache hit/miss/eviction behavior, bit-exactness of execute vs
-kernels/ref in interpret mode, legacy-shim delegation, and the backend
-registry hook.  Deliberately hypothesis-free — this module must run on a
-bare container."""
+kernels/ref in interpret mode, the retired-shim contract, and the
+backend registry hook.  Deliberately hypothesis-free — this module must
+run on a bare container."""
+import warnings
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro import gemm as G
-from repro.core import bitexact, packing, panel_gemm as legacy
+from repro.core import bitexact, packing
 from repro.kernels import ref
 from repro.models.model_zoo import PAPER_GEMM_SHAPES, PAPER_M
 
@@ -161,40 +163,23 @@ def test_pack_none_skips_relayout_on_xla():
         np.asarray(G.execute(p, x, w)), np.asarray(ref.gemm_xla(x, w)))
 
 
-# -------------------------------------------------------------- legacy shims
-def test_legacy_entry_points_delegate_and_deprecate():
-    x, w = _rand((128, 384)), _rand((384, 256))
-    pw = packing.pack(w, block_n=128, block_k=128)
-    with pytest.warns(DeprecationWarning):
-        y_packed = legacy.gemm(x, pw, impl="interpret")
-    with pytest.warns(DeprecationWarning):
-        y_percall = legacy.gemm_percall(x, w, block_n=128, block_k=128,
-                                        impl="interpret")
-    with pytest.warns(DeprecationWarning):
-        y_xla = legacy.gemm_xla(x, w)
-    bitexact.assert_bit_identical(np.asarray(y_packed),
-                                  np.asarray(y_percall))
-    np.testing.assert_allclose(y_packed, y_xla, rtol=1e-4, atol=1e-4)
-    # the shims go through the same plan cache as native callers
-    assert G.plan_cache_info().misses >= 3
+# -------------------------------------------- retired legacy shims
+def test_legacy_shim_import_raises_with_pointer():
+    """The core/panel_gemm shims completed their deprecation timeline:
+    importing the module is now a HARD error carrying the migration
+    pointer, and repro.core no longer re-exports the legacy names."""
+    import repro.core as core
+    with pytest.raises(ImportError, match="repro.gemm"):
+        import repro.core.panel_gemm  # noqa: F401
+    for name in ("gemm", "gemm_percall", "gemm_xla"):
+        assert not hasattr(core, name)
 
 
-def test_legacy_env_var_honored_only_by_shims(monkeypatch):
-    """REPRO_GEMM_IMPL steers the shims (compat) but never a native plan."""
+def test_env_var_never_steers_a_plan(monkeypatch):
+    """REPRO_GEMM_IMPL died with the shims: no surface reads it."""
     monkeypatch.setenv("REPRO_GEMM_IMPL", "interpret")
-    x, w = _rand((8, 128)), _rand((128, 128))
-    with pytest.warns(DeprecationWarning):
-        legacy.gemm_percall(x, w, block_n=128, block_k=128)
-    assert any(p.backend == "interpret"
-               for p in _cached_plans())           # shim respected it
     p = G.plan(8, 128, 128)
-    assert p.backend == "xla"                      # native default did not
-
-
-def _cached_plans():
-    from repro.gemm import policy as pol
-    with pol._cache_lock:
-        return list(pol._cache.values())
+    assert p.backend == "xla"                      # process default wins
 
 
 # --------------------------------------------------------- backend registry

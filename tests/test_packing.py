@@ -7,7 +7,8 @@ try:
 except ImportError:      # dev extra (requirements-dev.txt)
     from _hypothesis_stub import given, settings, st
 
-from repro.core import autotune, bitexact, packing, panel_gemm as pg, scheduler
+from repro import gemm as G
+from repro.core import autotune, bitexact, packing, scheduler
 from repro.kernels import ref
 
 RNG = np.random.default_rng(7)
@@ -15,6 +16,12 @@ RNG = np.random.default_rng(7)
 
 def _rand(shape):
     return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+def _packed_gemm(x, pw, backend):
+    """Plan/execute on a packed weight (the shim-free legacy idiom)."""
+    p = G.plan_for_packed(G.lead_m(x), pw, backend=backend)
+    return G.execute(p, x, pw)
 
 
 def test_pack_roundtrip_layouts():
@@ -35,10 +42,12 @@ def test_packed_equals_percall_equals_xla():
     other (same kernel math), xla within fp32 reorder tolerance."""
     x, w = _rand((128, 384)), _rand((384, 256))
     pw = packing.pack(w, block_n=128, block_k=128)
-    y_packed = pg.gemm(x, pw, impl="interpret")
-    y_percall = pg.gemm_percall(x, w, block_n=128, block_k=128,
-                                impl="interpret")
-    y_xla = pg.gemm_xla(x, w)
+    y_packed = _packed_gemm(x, pw, "interpret")
+    pc = G.plan(128, 256, 384, backend="interpret", block_n=128,
+                block_k=128, pack=G.PACK_PERCALL)
+    y_percall = G.execute(pc, x, w)
+    px = G.plan(128, 256, 384, backend="xla", pack=G.PACK_NONE)
+    y_xla = G.execute(px, x, w)
     bitexact.assert_bit_identical(np.asarray(y_packed),
                                   np.asarray(y_percall))
     np.testing.assert_allclose(y_packed, y_xla, rtol=1e-4, atol=1e-4)
@@ -48,7 +57,7 @@ def test_packed_gemm_batched_leading_dims():
     x = _rand((2, 64, 384))
     w = _rand((384, 256))
     pw = packing.pack(w, block_n=128, block_k=128)
-    y = pg.gemm(x, pw, impl="xla")
+    y = _packed_gemm(x, pw, "xla")
     np.testing.assert_allclose(
         y, np.einsum("bsk,kn->bsn", np.asarray(x), np.asarray(w)),
         rtol=1e-4, atol=1e-4)
@@ -59,7 +68,7 @@ def test_pack_pads_to_blocks():
     pw = packing.pack(w, block_n=128, block_k=128)
     assert pw.data.shape == (256, 128)
     x = _rand((5, 130))
-    y = pg.gemm(x, pw, impl="interpret")
+    y = _packed_gemm(x, pw, "interpret")
     np.testing.assert_allclose(y, np.asarray(x) @ np.asarray(w),
                                rtol=1e-4, atol=1e-4)
 
@@ -72,7 +81,7 @@ def test_pack_gemm_property(n, k, seed):
     w = jnp.asarray(r.standard_normal((k, n)).astype(np.float32))
     x = jnp.asarray(r.standard_normal((8, k)).astype(np.float32))
     pw = packing.pack(w, block_n=128, block_k=128)
-    y = pg.gemm(x, pw, impl="xla")
+    y = _packed_gemm(x, pw, "xla")
     np.testing.assert_allclose(y, np.asarray(x) @ np.asarray(w),
                                rtol=2e-4, atol=2e-4)
 
