@@ -39,7 +39,7 @@ class PanelPlan:
     block_n: int
     block_k: int
     grid: tuple[int, int, int]
-    panels: int                 # parallel (i, j) output panels
+    panels: int                 # parallel (i, j[, s]) output panels
     vmem: int
     vmem_ok: bool
     aligned: bool               # MXU 128-lane alignment
@@ -48,21 +48,34 @@ class PanelPlan:
     t_memory: float             # s
     t_pred: float               # max(compute, memory) / occupancy
     occupancy: float            # parallel-panel tail utilization
+    split_k: int = 1
 
 
 def plan(m: int, n: int, k: int, *, block_m: int, block_n: int,
          block_k: int, dtype_bytes: int = 4, num_cores: int = 1,
-         peak_flops: float = PEAK_FLOPS_F32) -> PanelPlan:
+         peak_flops: float = PEAK_FLOPS_F32, split_k: int = 1) -> PanelPlan:
+    """``split_k > 1`` scores the decode lane's reduction-side panels:
+    the grid gains ``split_k`` parallel K slices per output panel
+    (occupancy restored where a skinny M exposes almost none), paid for
+    by the combine epilogue — ``split_k`` fp32 partials written and
+    re-read plus ``split_k - 1`` panel adds.  The decode policy arm
+    picks the candidate whose predicted time wins (paper Fig. 2's
+    sweep, applied to the K dimension)."""
     gm, gn, gk = (math.ceil(m / block_m), math.ceil(n / block_n),
                   math.ceil(k / block_k))
-    panels = gm * gn
+    panels = gm * gn * split_k
     # tail utilization: last wave of panels may underfill the cores
     waves = math.ceil(panels / num_cores)
     occ = panels / (waves * num_cores)
-    vm = vmem_bytes(block_m, block_n, block_k)
+    vm = vmem_bytes(block_m, block_n, block_k, split_k=split_k)
     # HBM traffic: x re-read per column panel, w re-read per row panel.
     hbm = dtype_bytes * (m * k * gn + k * n * gm + 2 * m * n)
     t_c = 2.0 * m * n * k / (peak_flops * num_cores)
+    if split_k > 1:
+        # combine cost: the partials slab round-trips HBM once, and the
+        # tree adds are extra (cheap) vector work
+        hbm += 2.0 * 4 * split_k * m * n
+        t_c += 2.0 * (split_k - 1) * m * n / (peak_flops * num_cores)
     t_m = hbm / (HBM_BW * num_cores)
     aligned = (block_m % 8 == 0 and block_n % MXU_LANE == 0
                and block_k % MXU_LANE == 0)
@@ -75,7 +88,8 @@ def plan(m: int, n: int, k: int, *, block_m: int, block_n: int,
     if vm > VMEM_BUDGET:
         t = float("inf")
     return PanelPlan(block_m, block_n, block_k, (gm, gn, gk), panels, vm,
-                     vm <= VMEM_BUDGET, aligned, hbm, t_c, t_m, t, occ)
+                     vm <= VMEM_BUDGET, aligned, hbm, t_c, t_m, t, occ,
+                     split_k)
 
 
 def mesh_panels(n: int, model_shards: int, block_n: int) -> dict:

@@ -20,22 +20,25 @@ from repro.gemm.execute import (PlanMismatchError, execute, lead_m,
 from repro.gemm.plan import (EpilogueSpec, GemmPlan, LEVER_FINE_PANELS,
                              LEVER_PREPACK, PACK_NONE, PACK_PERCALL,
                              PACK_PREPACKED)
-from repro.gemm.policy import (DEFAULT_NUM_CORES, PREFILL_M_BUCKETS,
-                               bucket_m, pack_blocks, plan,
-                               plan_cache_clear, plan_cache_info,
-                               plan_for_packed, policy_table,
-                               vmem_clamped_count)
-from repro.kernels.panel_gemm import apply_epilogue
+from repro.gemm.policy import (DECODE_M_BUCKETS, DECODE_SPLIT_K_CANDIDATES,
+                               DEFAULT_NUM_CORES, PREFILL_M_BUCKETS,
+                               bucket_m, decode_lane, in_decode_lane,
+                               pack_blocks, plan, plan_cache_clear,
+                               plan_cache_info, plan_for_packed,
+                               policy_table, vmem_clamped_count)
+from repro.kernels.panel_gemm import apply_epilogue, splitk_combine
 
 __all__ = [
     "Backend", "EpilogueSpec", "GemmPlan", "PlanMismatchError",
     "UnknownBackendError",
     "LEVER_FINE_PANELS", "LEVER_PREPACK", "DEFAULT_NUM_CORES",
     "PACK_NONE", "PACK_PERCALL", "PACK_PREPACKED", "PREFILL_M_BUCKETS",
-    "apply_epilogue", "bucket_m", "default_backend", "execute",
-    "get_backend", "lead_m", "list_backends",
-    "pack_blocks", "pack_for_plan", "plan", "plan_cache_clear",
-    "plan_cache_info", "plan_for_packed", "policy_table",
-    "register_backend", "split_fused", "unregister_backend",
-    "use_backend", "validate_plan", "vmem_clamped_count",
+    "DECODE_M_BUCKETS", "DECODE_SPLIT_K_CANDIDATES",
+    "apply_epilogue", "bucket_m", "decode_lane", "default_backend",
+    "execute", "get_backend", "in_decode_lane", "lead_m",
+    "list_backends", "pack_blocks", "pack_for_plan", "plan",
+    "plan_cache_clear", "plan_cache_info", "plan_for_packed",
+    "policy_table", "register_backend", "split_fused", "splitk_combine",
+    "unregister_backend", "use_backend", "validate_plan",
+    "vmem_clamped_count",
 ]

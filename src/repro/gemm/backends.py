@@ -136,12 +136,32 @@ def use_backend(name: str | None) -> Iterator[None]:
 
 # ------------------------------------------------------------ builtin runs
 # Epilogue kwargs (epilogue=, bias=, residual=) are passed ONLY when the
-# plan carries an EpilogueSpec, so registered backends that predate the
-# fused-epilogue surface keep working for plain plans unchanged.
+# plan carries an EpilogueSpec, and split_k= only when the plan's
+# split_k > 1, so registered backends that predate either surface keep
+# working for plain plans unchanged.
+def _xla_splitk_acc(x_p, w_p, split_k):
+    """Slice dots + the shared fixed-order combine tree: the xla form of
+    the decode lane's split-K accumulation.  Deterministic per backend;
+    within-slice accumulation is XLA's dot (allclose, not bitwise, to
+    the kernel's blocked partials — the standing xla-vs-kernel
+    contract), while the combine order is the shared tree, so the
+    result is a pure function of the slice-dot values."""
+    k = x_p.shape[-1]
+    ks = k // split_k
+    parts = [jnp.dot(x_p[:, s * ks:(s + 1) * ks],
+                     w_p[s * ks:(s + 1) * ks, :],
+                     preferred_element_type=jnp.float32)
+             for s in range(split_k)]
+    return _kernel.splitk_combine(parts)
+
+
 def _run_xla(x_p, w_p, *, block_m, block_n, block_k, out_dtype,
-             epilogue=None, bias=None, residual=None):
+             epilogue=None, bias=None, residual=None, split_k=1):
     del block_m, block_n, block_k
-    acc = jnp.dot(x_p, w_p, preferred_element_type=jnp.float32)
+    if split_k > 1:
+        acc = _xla_splitk_acc(x_p, w_p, split_k)
+    else:
+        acc = jnp.dot(x_p, w_p, preferred_element_type=jnp.float32)
     if epilogue is not None:
         # same jnp ops as the kernel store phase, on the fp32 result —
         # the "fusion" here is XLA's own elementwise fusion, but the
@@ -153,19 +173,21 @@ def _run_xla(x_p, w_p, *, block_m, block_n, block_k, out_dtype,
 
 
 def _run_pallas(x_p, w_p, *, block_m, block_n, block_k, out_dtype,
-                epilogue=None, bias=None, residual=None):
+                epilogue=None, bias=None, residual=None, split_k=1,
+                interpret=False):
+    if split_k > 1:
+        return _kernel.panel_gemm_splitk(
+            x_p, w_p, bias, residual, split_k=split_k, block_m=block_m,
+            block_n=block_n, block_k=block_k, out_dtype=out_dtype,
+            epilogue=epilogue, interpret=interpret)
     return _kernel.panel_gemm(x_p, w_p, bias, residual, block_m=block_m,
                               block_n=block_n, block_k=block_k,
                               out_dtype=out_dtype, epilogue=epilogue,
-                              interpret=False)
+                              interpret=interpret)
 
 
-def _run_interpret(x_p, w_p, *, block_m, block_n, block_k, out_dtype,
-                   epilogue=None, bias=None, residual=None):
-    return _kernel.panel_gemm(x_p, w_p, bias, residual, block_m=block_m,
-                              block_n=block_n, block_k=block_k,
-                              out_dtype=out_dtype, epilogue=epilogue,
-                              interpret=True)
+def _run_interpret(x_p, w_p, **kw):
+    return _run_pallas(x_p, w_p, interpret=True, **kw)
 
 
 # Dequant-fused runs (repro.quant): same trio, streaming codes + scales.
@@ -176,16 +198,36 @@ def _run_interpret(x_p, w_p, *, block_m, block_n, block_k, out_dtype,
 # fused path deletes.
 def _run_quant_xla(x_p, codes, scales, *, weight_format, block_m, block_n,
                    block_k, out_dtype, epilogue=None, bias=None,
-                   residual=None):
+                   residual=None, split_k=1):
     del block_m, block_n, block_k
     from repro.quant import formats as _F
-    w = _F.dequantize_padded(codes, scales, weight_format)
-    # keep the dequantized panels a materialized dot operand: letting
-    # XLA:CPU fuse the convert/scale INTO the dot knocks it off the
-    # fast library-dot path (measured 20-30% slower at wide N); the
-    # barrier costs nothing numerically (values are identical bitwise)
-    w = jax.lax.optimization_barrier(w)
-    acc = jnp.dot(x_p, w, preferred_element_type=jnp.float32)
+    if split_k > 1:
+        # per-slice dequant + slice dots: each K slice's dequantized
+        # panel is materialized (barriered, same rationale as below) and
+        # consumed immediately, then the shared combine tree sums the
+        # fp32 partials in fixed order
+        kdiv = 4 if weight_format == "ternary" else 1
+        from repro.quant.formats import GROUP_K
+        k = x_p.shape[-1]
+        ks = k // split_k
+        parts = []
+        for s in range(split_k):
+            w_s = _F.dequantize_padded(
+                codes[s * ks // kdiv:(s + 1) * ks // kdiv],
+                scales[s * ks // GROUP_K:(s + 1) * ks // GROUP_K],
+                weight_format)
+            w_s = jax.lax.optimization_barrier(w_s)
+            parts.append(jnp.dot(x_p[:, s * ks:(s + 1) * ks], w_s,
+                                 preferred_element_type=jnp.float32))
+        acc = _kernel.splitk_combine(parts)
+    else:
+        w = _F.dequantize_padded(codes, scales, weight_format)
+        # keep the dequantized panels a materialized dot operand: letting
+        # XLA:CPU fuse the convert/scale INTO the dot knocks it off the
+        # fast library-dot path (measured 20-30% slower at wide N); the
+        # barrier costs nothing numerically (values are identical bitwise)
+        w = jax.lax.optimization_barrier(w)
+        acc = jnp.dot(x_p, w, preferred_element_type=jnp.float32)
     if epilogue is not None:
         acc = _kernel.apply_epilogue(acc, epilogue, bias=bias,
                                      residual=residual)
@@ -194,8 +236,15 @@ def _run_quant_xla(x_p, codes, scales, *, weight_format, block_m, block_n,
 
 def _run_quant_pallas(x_p, codes, scales, *, weight_format, block_m,
                       block_n, block_k, out_dtype, epilogue=None,
-                      bias=None, residual=None, interpret=False):
+                      bias=None, residual=None, split_k=1,
+                      interpret=False):
     from repro.quant import kernels as _qk
+    if split_k > 1:
+        return _qk.quant_panel_gemm_splitk(
+            x_p, codes, scales, bias, residual,
+            weight_format=weight_format, split_k=split_k,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            out_dtype=out_dtype, epilogue=epilogue, interpret=interpret)
     return _qk.quant_panel_gemm(x_p, codes, scales, bias, residual,
                                 weight_format=weight_format,
                                 block_m=block_m, block_n=block_n,

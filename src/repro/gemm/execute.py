@@ -142,6 +142,15 @@ def execute(p: GemmPlan, x: jax.Array, w, *, bias=None, residual=None,
 
     out_cols = n_pad // 2 if p.glu else n_pad
     epi_kw = {}
+    if p.split_k > 1:
+        # decode lane: the K slices must be whole (and, for kernel
+        # backends, whole-block) — the policy guarantees this for plans
+        # it resolved; explicit split_k overrides are checked here
+        _check(k_pad % p.split_k == 0
+               and (k_pad // p.split_k) % p.block_k == 0,
+               f"split_k={p.split_k} does not cut padded K={k_pad} into "
+               f"whole block_k={p.block_k} slices ({p.describe()})")
+        epi_kw["split_k"] = p.split_k
     if spec is not None:
         b2 = r2 = None
         if bias is not None:
@@ -172,7 +181,7 @@ def execute(p: GemmPlan, x: jax.Array, w, *, bias=None, residual=None,
             r2 = _pad_cols(r2.astype(jnp.float32), out_cols)
             if backend.needs_blocks:
                 r2 = _pad_rows(r2, p.block_m)
-        epi_kw = dict(epilogue=spec, bias=b2, residual=r2)
+        epi_kw.update(epilogue=spec, bias=b2, residual=r2)
 
     if quant:
         run_q = backend.run_quant
@@ -224,7 +233,9 @@ def validate_plan(p: GemmPlan) -> bool:
     """Run (memoized) the autotune bit-exactness gate on the plan's block
     triple — and its epilogue, if any: the fused interpret-mode kernel
     must be bit-identical to the unfused ``kernel -> jnp epilogue``
-    sequence (plain plans keep the ``kernels/ref.gemm_blocked`` oracle).
+    sequence (plain plans keep the ``kernels/ref.gemm_blocked`` oracle;
+    split-K plans gate against ``kernels/ref.gemm_splitk`` — per-slice
+    blocked partials combined by the shared fixed-order tree).
 
     A QUANTIZED plan swaps the bit-exact gate for the two-part quant
     contract (docs/quantization.md): (1) the error-ledger tolerance gate
@@ -232,8 +243,9 @@ def validate_plan(p: GemmPlan) -> bool:
     measured max-rel error vs the fp32 oracle exceeds the format's
     declared tolerance, the plan is REJECTED; (2) the structural gate —
     the dequant-fused interpret kernel must stay bit-identical to
-    ``gemm_blocked`` over the dequantized panels, so the tolerance spent
-    on the format is never silently spent twice by the kernel.
+    ``gemm_blocked`` (``gemm_splitk`` for split-K plans) over the
+    dequantized panels, so the tolerance spent on the format is never
+    silently spent twice by the kernel.
     """
     if p.quantized:
         from repro.quant import ledger as _ledger
@@ -242,6 +254,7 @@ def validate_plan(p: GemmPlan) -> bool:
         if ent is not None and not ent.within_tol:
             return False
         return quant_gate(p.block_m, p.block_n, p.block_k,
-                          p.weight_format, epilogue=p.epilogue)
+                          p.weight_format, epilogue=p.epilogue,
+                          split_k=p.split_k)
     return _bitexact_gate(p.block_m, p.block_n, p.block_k,
-                          epilogue=p.epilogue)
+                          epilogue=p.epilogue, split_k=p.split_k)

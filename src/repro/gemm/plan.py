@@ -63,6 +63,18 @@ class GemmPlan:
     dispatches the backend's dequant-fused run.  Plan-keyed: quantized
     and fp32 plans for one shape are distinct cache entries, and the
     VMEM fit uses the format's bytes-per-element.
+
+    Decode-lane fields: ``decode`` marks a plan resolved by the decode
+    policy arm (``gemm.decode_lane()`` scope — skinny block_m, forced
+    prepack, split-K considered; plan-keyed so decode and prefill plans
+    for one shape never alias).  ``split_k`` is the number of parallel
+    K slices the reduction is cut into (1 = the classic kernel); the
+    per-slice fp32 partials are combined by the deterministic
+    ``splitk_combine`` tree, and the plan's VMEM fit budgets the
+    partials slab.  ``split_k`` is resolved per (n, k, format) at the
+    canonical decode M — never per operand M — so every decode-bucket
+    plan for one weight shares one slice map and ``serve`` stays
+    bit-identical to per-request ``generate``.
     """
     m: int
     n: int
@@ -83,6 +95,8 @@ class GemmPlan:
     fused_n_splits: tuple = ()
     vmem_clamped: bool = False
     weight_format: str = "fp32"
+    split_k: int = 1
+    decode: bool = False
 
     # ----------------------------------------------------------- geometry
     @property
@@ -143,6 +157,10 @@ class GemmPlan:
             epi += f", fused={self.fused_n_splits}"
         if self.quantized:
             epi += f", weight_format={self.weight_format}"
+        if self.decode:
+            epi += f", lane=decode, split_k={self.split_k}"
+        elif self.split_k != 1:
+            epi += f", split_k={self.split_k}"
         if self.vmem_clamped:
             epi += ", vmem_clamped"
         return (f"GemmPlan[{self.m}x{self.n}x{self.k} {self.dtype} "

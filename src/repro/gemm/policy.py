@@ -25,9 +25,10 @@ separation of BNNS Graph, with the plan inspectable.
 from __future__ import annotations
 
 import collections
+import contextlib
 import threading
 import warnings
-from typing import Any
+from typing import Any, Iterator
 
 import jax.numpy as jnp
 import numpy as np
@@ -50,6 +51,14 @@ DEFAULT_NUM_CORES = 8
 # {64..512}); the prepack lever takes the sweep's deployed deep pair.
 FINE_BLOCK_N_CANDIDATES = (128, 256, 512)
 FINE_BLOCK_K = 512
+
+# Split-K slice counts the decode arm scores (1 = no split).  Resolved
+# per (n, k, format) at DECODE_SPLIT_M_REF — NEVER per operand M — so
+# every decode-bucket plan for one weight shares one slice map: serve
+# (decode at M = slots) and generate (decode at M = batch) must stay
+# bit-identical, and split-K changes the accumulation order.
+DECODE_SPLIT_K_CANDIDATES = (1, 2, 4, 8)
+DECODE_SPLIT_M_REF = 8
 
 _CACHE_MAXSIZE = 512
 
@@ -91,6 +100,35 @@ def _sharding_key(sharding: Any) -> str:
     return "" if sharding is None else str(sharding)
 
 
+# -------------------------------------------------------- decode fast lane
+_LANE = threading.local()        # per-thread decode-lane scope stack
+
+
+@contextlib.contextmanager
+def decode_lane() -> Iterator[None]:
+    """Scope marking every plan resolved inside as a DECODE dispatch.
+
+    The serving engine wraps its decode traces (dense ``decode``, paged
+    ``decode_step``, the megastep body) in this scope, exactly like
+    ``use_backend``: plans resolved while tracing take the decode policy
+    arm — skinny block_m, forced prepack, split-K scored against the
+    combine cost — and are plan-keyed separately from prefill plans of
+    the same shape.  Prefill paths (one-shot and chunked admission)
+    never enter the scope, so their plans and numerics are untouched.
+    """
+    depth = getattr(_LANE, "depth", 0)
+    _LANE.depth = depth + 1
+    try:
+        yield
+    finally:
+        _LANE.depth = depth
+
+
+def in_decode_lane() -> bool:
+    """True inside a :func:`decode_lane` scope (trace-time query)."""
+    return getattr(_LANE, "depth", 0) > 0
+
+
 # ------------------------------------------------------------ lever logic
 def _fine_block_n(m: int, n: int, k: int, *, block_m: int, block_k: int,
                   num_cores: int) -> int:
@@ -126,7 +164,7 @@ def _warn_vmem_clamp(key: tuple, requested: tuple, got: tuple):
 
 def _fit_vmem(bm: int, bn: int, bk: int, dtype: str,
               epilogue: EpilogueSpec | None,
-              weight_format: str = "fp32"):
+              weight_format: str = "fp32", split_k: int = 1):
     """Shrink the block triple until ``kernels.panel_gemm.vmem_bytes``
     fits the VMEM budget (satellite: an explicit or fused-wide triple —
     a glu epilogue doubles the weight + accumulator tiles — could
@@ -136,13 +174,16 @@ def _fit_vmem(bm: int, bn: int, bk: int, dtype: str,
 
     ``weight_format`` re-resolves the budget for quantized packs: int8
     tiles stream 4x and ternary 16x fewer weight bytes, so block
-    triples that clamp at fp32 can stand at reduced precision."""
+    triples that clamp at fp32 can stand at reduced precision.
+    ``split_k`` sizes the decode lane's fp32 partials slab into the
+    same budget (the combine epilogue holds every slice's partial for
+    one output tile)."""
     dt = jnp.dtype(dtype)
     clamped = False
     quant = weight_format != "fp32"
     while _kernel.vmem_bytes(bm, bn, bk, dt, epilogue=epilogue,
-                             weight_format=weight_format
-                             ) > _kernel.VMEM_BUDGET:
+                             weight_format=weight_format,
+                             split_k=split_k) > _kernel.VMEM_BUDGET:
         if bk >= bn and bk > 128:
             bk = max(128, bk // 2)
             if quant and bk % 128:
@@ -160,14 +201,61 @@ def _fit_vmem(bm: int, bn: int, bk: int, dtype: str,
     return bm, bn, bk, clamped
 
 
+def _decode_split_k(n: int, k: int, k_pad: int, *, block_m: int,
+                    block_n: int, block_k: int, dtype: str,
+                    num_cores: int, weight_format: str,
+                    epilogue: EpilogueSpec | None) -> int:
+    """Score the decode arm's split-K candidates and pick the winner.
+
+    Scored at the CANONICAL decode M (``DECODE_SPLIT_M_REF``), not the
+    operand M: split-K changes the accumulation order, so the slice map
+    must be a pure function of (n, k, blocks, format) — generate
+    (decode at M = batch) and serve (decode at M = slots) then resolve
+    the same split and stay token-for-token bit-identical.  (The block
+    triple this screens against is M-independent too: the decode arm
+    pins ``block_m = DECODE_BLOCK_M``.)  Candidates must cut the padded
+    K into whole ``block_k`` slices (which keeps quantized slices on
+    whole GROUP_K scale groups, since quantized block_k is a GROUP_K
+    multiple) and must fit the VMEM budget WITH their partials slab at
+    the final, post-clamp blocks — the chosen split never re-triggers
+    the clamp.  ``k_pad`` is the contraction depth the operand will
+    actually have at dispatch (the caller passes the raw ``k`` for an
+    unpadded PACK_NONE operand on a shape-agnostic backend)."""
+    best = (float("inf"), 1)
+    for s in DECODE_SPLIT_K_CANDIDATES:
+        if k_pad % s or (k_pad // s) % block_k:
+            continue
+        if s > 1 and _kernel.vmem_bytes(
+                block_m, block_n, block_k, jnp.dtype(dtype),
+                epilogue=epilogue, weight_format=weight_format,
+                split_k=s) > _kernel.VMEM_BUDGET:
+            continue
+        p = scheduler.plan(DECODE_SPLIT_M_REF, n, k, block_m=block_m,
+                           block_n=block_n, block_k=block_k,
+                           num_cores=num_cores, split_k=s)
+        # tie-break toward fewer slices (less combine traffic)
+        if (p.t_pred, s) < best:
+            best = (p.t_pred, s)
+    return best[1]
+
+
 def _resolve(m: int, n: int, k: int, *, dtype: str, backend: str,
              num_cores: int, block_m: int | None, block_n: int | None,
              block_k: int | None, pack: str | None, transposed: bool,
              sharding_key: str, validate: bool,
              epilogue: EpilogueSpec | None = None,
              fused_n_splits: tuple = (),
-             weight_format: str = "fp32") -> GemmPlan:
+             weight_format: str = "fp32", decode: bool = False,
+             split_k: int | None = None) -> GemmPlan:
     bm = block_m or min(_kernel.DEFAULT_BLOCK_M, _rnd_up(m, 8))
+    if decode and block_m is None:
+        # skinny-M specialization: decode row panels are ONE 8-row
+        # sublane tile for every decode M (m > 8 spans several row
+        # panels) — never the 128-row prefill panel.  Pinning block_m
+        # keeps the whole decode block triple, and therefore the
+        # split-K choice screened against it, independent of the
+        # operand M (the serve == generate parity requirement).
+        bm = _kernel.DECODE_BLOCK_M
     if k >= n:                              # lever 1: fine panels
         lever = LEVER_FINE_PANELS
         default_pack = PACK_PERCALL
@@ -179,6 +267,11 @@ def _resolve(m: int, n: int, k: int, *, dtype: str, backend: str,
         default_pack = PACK_PREPACKED
         bk = block_k or packing.fit_block(k, _kernel.DEFAULT_BLOCK_K)
         bn = block_n or packing.fit_block(n, _kernel.DEFAULT_BLOCK_N)
+    if decode:
+        # decode arm: the per-call pack the fine lever tolerates at
+        # M = 128 (amortized over the row panel) is ruinous at M <= 8 —
+        # decode is weight-bound, so the re-layout must be paid at load
+        default_pack = PACK_PREPACKED
     if weight_format != "fp32":
         from repro.quant.formats import _check_fmt
         _check_fmt(weight_format)
@@ -192,28 +285,66 @@ def _resolve(m: int, n: int, k: int, *, dtype: str, backend: str,
     pack = pack or default_pack
     if pack not in (PACK_PREPACKED, PACK_PERCALL, PACK_NONE):
         raise ValueError(f"unknown pack decision {pack!r}")
+    # Clamp the blocks FIRST (with an explicit split_k's partials slab
+    # in the footprint), then resolve the policy split against the
+    # final triple: _decode_split_k only admits candidates that fit the
+    # clamped blocks, so the choice never re-triggers the clamp, and an
+    # explicit split_k that the clamp made undivisible fails HERE, at
+    # plan time — not as a PlanMismatchError at dispatch.
     req = (bm, bn, bk)
     bm, bn, bk, clamped = _fit_vmem(bm, bn, bk, dtype, epilogue,
-                                    weight_format)
+                                    weight_format,
+                                    1 if split_k is None else int(split_k))
     if clamped:
         _warn_vmem_clamp((m, n, k, dtype, backend, weight_format), req,
                          (bm, bn, bk))
+    grid_backend = _backends.get_backend(backend).needs_blocks
+    # the contraction depth the operand will ACTUALLY have at dispatch:
+    # PACK_NONE on a shape-agnostic backend skips the re-layout, so its
+    # K is never block-padded — the slice validation must use raw k or
+    # a plan would pass here and reject at execute()
+    k_pad = _rnd_up(k, bk) if (pack != PACK_NONE or grid_backend) else k
+    if split_k is None:
+        # the split lever targets the PANEL-GRID backends: occupancy is
+        # a property of the kernel grid, and a shape-agnostic backend
+        # (xla) has no reduction-side grid to fill — measured on the
+        # CPU host the restructure there is a wash-to-loss
+        # (BENCH_decode's lane_splitk context column), so the policy
+        # keeps split_k=1 for it.  Explicit split_k= overrides remain
+        # available on every backend.
+        split_k = (_decode_split_k(n, k, k_pad, block_m=bm, block_n=bn,
+                                   block_k=bk, dtype=dtype,
+                                   num_cores=num_cores,
+                                   weight_format=weight_format,
+                                   epilogue=epilogue)
+                   if decode and grid_backend else 1)
+    split_k = int(split_k)
+    if split_k < 1 or k_pad % split_k or (split_k > 1
+                                          and (k_pad // split_k) % bk):
+        raise ValueError(
+            f"split_k={split_k} does not cut the dispatch-time "
+            f"K={k_pad} into whole block_k={bk} slices"
+            + (" (the VMEM fit clamped the requested blocks to "
+               f"{(bm, bn, bk)}; request budget-fitting blocks or a "
+               "compatible split)" if clamped else ""))
 
     sched = scheduler.plan(m, n, k, block_m=bm, block_n=bn, block_k=bk,
-                           num_cores=num_cores)
+                           num_cores=num_cores, split_k=split_k)
     validated = False
     if validate:
         if weight_format != "fp32":
             from repro.quant.kernels import quant_gate
-            ok = quant_gate(bm, bn, bk, weight_format, epilogue=epilogue)
+            ok = quant_gate(bm, bn, bk, weight_format, epilogue=epilogue,
+                            split_k=split_k)
         else:
-            ok = _bitexact_gate(bm, bn, bk, epilogue=epilogue)
+            ok = _bitexact_gate(bm, bn, bk, epilogue=epilogue,
+                                split_k=split_k)
         if not ok:
             raise RuntimeError(
                 f"blocks ({bm},{bn},{bk}) failed the bit-exactness gate "
-                f"(epilogue={epilogue}, weight_format={weight_format}) "
-                f"vs the unfused kernel -> op oracle (autotune reject "
-                f"protocol)")
+                f"(epilogue={epilogue}, weight_format={weight_format}, "
+                f"split_k={split_k}) vs the unfused kernel -> op oracle "
+                f"(autotune reject protocol)")
         validated = True
     return GemmPlan(m=m, n=n, k=k, dtype=dtype, backend=backend,
                     block_m=bm, block_n=bn, block_k=bk, pack=pack,
@@ -221,7 +352,8 @@ def _resolve(m: int, n: int, k: int, *, dtype: str, backend: str,
                     occupancy=sched.occupancy, transposed=transposed,
                     sharding_key=sharding_key, validated=validated,
                     epilogue=epilogue, fused_n_splits=fused_n_splits,
-                    vmem_clamped=clamped, weight_format=weight_format)
+                    vmem_clamped=clamped, weight_format=weight_format,
+                    split_k=split_k, decode=decode)
 
 
 def _rnd_up(x: int, mult: int) -> int:
@@ -237,12 +369,28 @@ def _rnd_up(x: int, mult: int) -> int:
 # the first admission cycle, ``plan_cache_info().misses`` stops moving.
 PREFILL_M_BUCKETS = (8, 16, 32, 64, 128)
 
+# Decode-phase buckets: [slots, 1] decode dispatches at M = slots.  The
+# prefill buckets round every M below 8 up to 8, so slot pools of width
+# 1, 2 and 4 would alias into ONE plan key and pay padded rows for the
+# difference; the decode buckets keep small pools exact (decode is the
+# latency-bound phase — padded rows are pure waste there).
+DECODE_M_BUCKETS = (1, 2, 4, 8)
 
-def bucket_m(m: int) -> int:
-    """Smallest static chunk bucket holding ``m`` rows (beyond the last
-    bucket: the next multiple of 128, the paper's prefill row panel)."""
+
+def bucket_m(m: int, *, decode: bool = False) -> int:
+    """Smallest static chunk bucket holding ``m`` rows.
+
+    ``decode=True`` buckets against ``DECODE_M_BUCKETS`` first, so slot
+    pools of width 1..8 each get their own plan key instead of all
+    rounding up to the smallest prefill bucket (8) with padded waste.
+    Beyond the last bucket: the next multiple of 128, the paper's
+    prefill row panel."""
     if m < 1:
         raise ValueError(f"m={m}: need at least one row")
+    if decode:
+        for b in DECODE_M_BUCKETS:
+            if m <= b:
+                return b
     for b in PREFILL_M_BUCKETS:
         if m <= b:
             return b
@@ -255,42 +403,61 @@ _gate_memo: dict[tuple, bool] = {}
 
 def _bitexact_gate(bm: int, bn: int, bk: int, *,
                    epilogue: EpilogueSpec | None = None,
-                   reduced_k_blocks: int = 2, seed: int = 0) -> bool:
+                   reduced_k_blocks: int = 2, seed: int = 0,
+                   split_k: int = 1) -> bool:
     """core/autotune's reject protocol for one block triple: interpret-mode
     kernel on a reduced shape with a real K-carry must be BIT-IDENTICAL to
     the blocked oracle.  With an epilogue the oracle is the UNFUSED
     sequence — plain kernel to an fp32 accumulator, then the same jnp
     epilogue ops (``apply_epilogue``) under jit — so the gate covers
-    every ``EpilogueSpec``, glu included.  Memoized per (triple, spec)."""
-    key = (bm, bn, bk, epilogue)
+    every ``EpilogueSpec``, glu included.  ``split_k > 1`` gates the
+    decode lane's split-K kernel against ``ref.gemm_splitk`` — per-slice
+    blocked partials combined by the shared fixed-order tree — with the
+    reduced K sized so every slice carries a real multi-block K-carry.
+    Memoized per (triple, spec, split_k)."""
+    key = (bm, bn, bk, epilogue, split_k)
     if key in _gate_memo:
         return _gate_memo[key]
     from repro.kernels import ref
     rng = np.random.default_rng(seed)
     glu = epilogue is not None and epilogue.glu is not None
-    m_r, k_r = bm, reduced_k_blocks * bk
+    m_r, k_r = bm, reduced_k_blocks * bk * split_k
     n_r = 2 * bn if glu else bn
     x = jnp.asarray(rng.standard_normal((m_r, k_r)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((k_r, n_r)), jnp.float32)
+    if split_k > 1:
+        def run(bias=None, res=None, spec=None, out_dtype=None):
+            return _kernel.panel_gemm_splitk(
+                x, w, bias, res, split_k=split_k, block_m=bm, block_n=bn,
+                block_k=bk, epilogue=spec, out_dtype=out_dtype,
+                interpret=True)
+
+        def oracle_acc():
+            return ref.gemm_splitk(x, w, bk, split_k,
+                                   out_dtype=jnp.float32)
+    else:
+        def run(bias=None, res=None, spec=None, out_dtype=None):
+            return _kernel.panel_gemm(
+                x, w, bias, res, block_m=bm, block_n=bn, block_k=bk,
+                epilogue=spec, out_dtype=out_dtype, interpret=True)
+
+        def oracle_acc():
+            return ref.gemm_blocked(x, w, bk, out_dtype=jnp.float32)
+
     if epilogue is None:
-        y = _kernel.panel_gemm(x, w, block_m=bm, block_n=bn, block_k=bk,
-                               interpret=True)
-        oracle = ref.gemm_blocked(x, w, bk)
+        y = run()
+        oracle = oracle_acc().astype(x.dtype)
     else:
         n_out = bn if glu else n_r
         bias = (jnp.asarray(rng.standard_normal((n_r,)), jnp.float32)
                 if epilogue.bias else None)
         res = (jnp.asarray(rng.standard_normal((m_r, n_out)), jnp.float32)
                if epilogue.residual else None)
-        y = _kernel.panel_gemm(x, w, bias, res, block_m=bm, block_n=bn,
-                               block_k=bk, epilogue=epilogue,
-                               interpret=True)
-        acc = _kernel.panel_gemm(x, w, block_m=bm, block_n=bn, block_k=bk,
-                                 out_dtype=jnp.float32, interpret=True)
+        y = run(bias, res, epilogue)
         oracle = jax.jit(
             lambda a, b, r: _kernel.apply_epilogue(
                 a, epilogue, bias=b, residual=r).astype(jnp.float32)
-        )(acc, bias, res)
+        )(oracle_acc(), bias, res)
     ok = bitexact.bit_identical(np.asarray(y), np.asarray(oracle))
     _gate_memo[key] = ok
     return ok
@@ -304,7 +471,8 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
          transposed: bool = False, sharding: Any = None,
          validate: bool = False, epilogue: EpilogueSpec | None = None,
          fused_n_splits: tuple = (),
-         weight_format: str = "fp32") -> GemmPlan:
+         weight_format: str = "fp32", decode: bool | None = None,
+         split_k: int | None = None) -> GemmPlan:
     """Resolve (and cache) the dispatch plan for a ``[m,k] @ [k,n]`` GEMM.
 
     ``backend=None`` takes the current default (``use_backend`` scope or
@@ -312,23 +480,32 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
     var).  Explicit ``block_*`` / ``pack`` override the policy
     (benchmark sweeps, baseline paths); ``validate=True`` runs the
     autotune bit-exactness gate on the resolved blocks (and
-    ``epilogue``, if any) before the plan is issued.  ``epilogue`` /
-    ``fused_n_splits`` / ``weight_format`` are plan-keyed: fused,
-    quantized and plain plans for one shape are distinct cache entries.
-    ``weight_format`` other than ``"fp32"`` marks a quantized pack-time
-    format (``repro.quant``): the VMEM fit uses its bytes-per-element
-    and execute() dispatches the backend's dequant-fused run.
+    ``epilogue`` / ``split_k``, if any) before the plan is issued.
+    ``epilogue`` / ``fused_n_splits`` / ``weight_format`` are
+    plan-keyed: fused, quantized and plain plans for one shape are
+    distinct cache entries.  ``weight_format`` other than ``"fp32"``
+    marks a quantized pack-time format (``repro.quant``): the VMEM fit
+    uses its bytes-per-element and execute() dispatches the backend's
+    dequant-fused run.
+
+    ``decode=None`` reads the ambient :func:`decode_lane` scope (the
+    serving engine's decode traces); ``True``/``False`` pin the arm
+    explicitly.  Decode plans are plan-keyed separately and take the
+    decode policy arm: skinny block_m, forced prepack, and ``split_k``
+    resolved by :func:`_decode_split_k` unless given explicitly.
     """
     global _hits, _misses
     backend = _backends.resolve_backend(backend)
     dtype = _dtype_name(dtype)
     skey = _sharding_key(sharding)
+    if decode is None:
+        decode = in_decode_lane()
     if epilogue is not None and epilogue.is_noop:
         epilogue = None
     fused_n_splits = tuple(int(s) for s in fused_n_splits)
     key = (int(m), int(n), int(k), dtype, backend, num_cores, block_m,
            block_n, block_k, pack, bool(transposed), skey, bool(validate),
-           epilogue, fused_n_splits, weight_format)
+           epilogue, fused_n_splits, weight_format, bool(decode), split_k)
     with _cache_lock:
         hit = _cache.get(key)
         if hit is not None:
@@ -341,7 +518,8 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
                  block_k=block_k, pack=pack, transposed=bool(transposed),
                  sharding_key=skey, validate=validate, epilogue=epilogue,
                  fused_n_splits=fused_n_splits,
-                 weight_format=weight_format)
+                 weight_format=weight_format, decode=bool(decode),
+                 split_k=split_k)
     with _cache_lock:
         _cache[key] = p
         while len(_cache) > _CACHE_MAXSIZE:
@@ -369,21 +547,24 @@ def plan_for_packed(m: int, pw: packing.PackedWeight, *,
                     backend: str | None = None,
                     num_cores: int = DEFAULT_NUM_CORES,
                     validate: bool = False,
-                    epilogue: EpilogueSpec | None = None) -> GemmPlan:
+                    epilogue: EpilogueSpec | None = None,
+                    decode: bool | None = None) -> GemmPlan:
     """Plan for a weight already packed at model load: the block decision
     was made when the pack happened; the plan adopts it (and still records
     which lever the policy assigns the shape).  A fused pack's static
     split map, a quantized pack's format (``QuantizedPackedWeight.fmt``
     -> ``weight_format``), and the requested ``epilogue`` ride onto the
     plan.  A quantized pack's ``dtype`` keys as the fp32 the dequant
-    produces (codes are not an operand dtype)."""
+    produces (codes are not an operand dtype).  ``decode=None`` reads
+    the ambient :func:`decode_lane` scope (as :func:`plan` does)."""
     fmt = getattr(pw, "fmt", "fp32")
     dtype = "float32" if fmt != "fp32" else pw.dtype
     return plan(m, pw.n, pw.k, dtype=dtype, backend=backend,
                 num_cores=num_cores, block_n=pw.block_n,
                 block_k=pw.block_k, pack=PACK_PREPACKED, validate=validate,
                 sharding=_packed_sharding(pw), epilogue=epilogue,
-                fused_n_splits=pw.n_splits, weight_format=fmt)
+                fused_n_splits=pw.n_splits, weight_format=fmt,
+                decode=decode)
 
 
 def pack_blocks(n: int, k: int, *, m_hint: int = 128,

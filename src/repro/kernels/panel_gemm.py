@@ -54,6 +54,11 @@ DEFAULT_BLOCK_M = 128     # the paper's M = S = 128 prefill row panel
 DEFAULT_BLOCK_N = 512     # column-panel width (lever-1 knob)
 DEFAULT_BLOCK_K = 2048    # K-blocking depth (lever-2-unlocked knob)
 
+# Skinny-M specialization for the decode fast lane: [slots, 1] decode
+# rows pad to one 8-row sublane tile instead of the 128-row prefill
+# panel (gemm.policy's decode arm plans against this).
+DECODE_BLOCK_M = 8
+
 # v5e VMEM budget the blocks must respect (bytes); checked by vmem_bytes().
 VMEM_BUDGET = 16 * 1024 * 1024
 
@@ -186,10 +191,33 @@ def apply_epilogue(acc: jax.Array, spec: EpilogueSpec, *, bias=None,
     return _finish(spec, acc, res)
 
 
+def splitk_combine(parts) -> jax.Array:
+    """Deterministic fixed-order pairwise tree sum of split-K partials.
+
+    ``parts``: a list of fp32 ``[M, N]`` partials (or a stacked
+    ``[split_k, M, N]`` array), one per K slice, in slice order.  The
+    combine order is a STATIC pairwise tree — (p0+p1)+(p2+p3)... — so
+    the result is a pure function of the partial values, independent of
+    which backend produced them: the Pallas kernel, the interpreter,
+    the xla slice-dot run and the ``ref.gemm_splitk`` oracle all route
+    through this one definition, which is what makes split-K results
+    bitwise-reproducible per backend and kernel == oracle bitwise.
+    """
+    if not isinstance(parts, (list, tuple)):
+        parts = [parts[i] for i in range(parts.shape[0])]
+    parts = list(parts)
+    assert parts, "splitk_combine needs at least one partial"
+    while len(parts) > 1:
+        parts = [parts[i] + parts[i + 1] if i + 1 < len(parts)
+                 else parts[i] for i in range(0, len(parts), 2)]
+    return parts[0]
+
+
 def vmem_bytes(block_m: int, block_n: int, block_k: int,
                in_dtype=jnp.float32, *,
                epilogue: EpilogueSpec | None = None,
-               weight_format: str = "fp32") -> int:
+               weight_format: str = "fp32",
+               split_k: int = 1) -> int:
     """Static VMEM footprint model for one grid step (double-buffered ins).
 
     A ``glu`` epilogue streams two weight tiles and carries two fp32
@@ -205,6 +233,11 @@ def vmem_bytes(block_m: int, block_n: int, block_k: int,
     streams int8 codes (1 B/elem) or 2-bit ternary bytes (0.25 B/elem)
     plus a per-column fp32 scale row, so quantized plans fit deeper /
     wider blocks in the same budget (repro.quant).
+
+    ``split_k > 1`` budgets the decode lane's per-slice fp32 partials
+    slab (``[split_k, block_m, block_n]``): the combine epilogue reads
+    every slice's partial for one output tile, so the whole slab must
+    be resident alongside the streaming tiles.
     """
     isz = jnp.dtype(in_dtype).itemsize
     x = block_m * block_k * isz
@@ -225,6 +258,8 @@ def vmem_bytes(block_m: int, block_n: int, block_k: int,
         acc *= 2
     # worst-case epilogue operand headroom (fp32 bias row + residual tile)
     extra = block_n * 4 * (2 if glu else 1) + block_m * block_n * 4
+    if split_k > 1:     # decode lane: per-slice fp32 partials slab
+        extra += split_k * block_m * block_n * 4
     return 2 * (x + w + scales) + acc + out + extra   # 2x: double buffering
 
 
@@ -397,3 +432,109 @@ def panel_gemm(
         ),
         interpret=interpret,
     )(*ops)
+
+
+# ----------------------------------------------------------- split-K lane
+def _splitk_kernel(x_ref, w_ref, o_ref, acc_ref, *, nks: int):
+    """One (s, i, j, kk) grid step of the split-K partials pass:
+    acc[s,i,j] += x[i, s*nks + kk] @ w[s*nks + kk, j].
+
+    The Z-discipline is per SLICE: the accumulator zeroes at the first
+    K block of the slice and the slice's fp32 partial is stored (never
+    cast) at its last — the combine tree runs outside, shared with
+    every backend.  ``s`` is a PARALLEL grid dimension: at decode
+    (M <= 8, one row panel) the (i, j) grid exposes almost no parallel
+    output panels, and ``s`` restores occupancy on the reduction side —
+    the paper's fine-panel lever, generalized to K.
+    """
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kk == nks - 1)
+    def _store():
+        o_ref[...] = acc_ref[...][None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("split_k", "block_m", "block_n", "block_k",
+                     "interpret", "out_dtype", "epilogue"),
+)
+def panel_gemm_splitk(
+    x: jax.Array,               # [M_pad, K_pad]  activations (pre-padded)
+    w: jax.Array,               # [K_pad, N_pad]  packed weight panels
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    *,
+    split_k: int,
+    block_m: int = DECODE_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    out_dtype=None,
+    epilogue: EpilogueSpec | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = epilogue(splitk_combine(per-slice x @ w)) — the decode lane.
+
+    Grid ``(s, i, j, kk)``: ``split_k`` K slices accumulate independent
+    fp32 partials (all three leading dims parallel), combined by the
+    deterministic :func:`splitk_combine` tree; the epilogue then runs
+    on the combined fp32 accumulator via the shared
+    :func:`apply_epilogue` (so fused == unfused stays bit-identical,
+    glu included).  Bit-identical to ``ref.gemm_splitk`` at the same
+    ``(block_k, split_k)`` — gated by ``gemm.validate_plan``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert split_k >= 1 and k % split_k == 0, (
+        f"K={k} not divisible by split_k={split_k}")
+    ks = k // split_k
+    assert m % block_m == 0 and n % block_n == 0 and ks % block_k == 0, (
+        f"shapes ({m},{n},{k}) / slice depth {ks} not aligned to blocks "
+        f"({block_m},{block_n},{block_k}); pack first")
+    nks = ks // block_k
+    out_dtype = out_dtype or x.dtype
+    spec = epilogue
+    if spec is not None and spec.is_noop:
+        spec = None
+    glu = spec is not None and spec.glu is not None
+    n_out = n // 2 if glu else n
+    if glu:
+        assert n % 2 == 0 and n_out % block_n == 0, (
+            f"glu epilogue needs block-aligned column halves; got N={n} "
+            f"with block_n={block_n} — pack with pack_fused")
+    assert (bias is not None) == bool(spec is not None and spec.bias)
+    assert (residual is not None) == bool(spec is not None
+                                          and spec.residual)
+
+    partials = pl.pallas_call(
+        functools.partial(_splitk_kernel, nks=nks),
+        grid=(split_k, m // block_m, n // block_n, nks),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k),
+                         lambda s, i, j, kk: (i, s * nks + kk)),
+            pl.BlockSpec((block_k, block_n),
+                         lambda s, i, j, kk: (s * nks + kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda s, i, j, kk: (s, i, j)),
+        out_shape=jax.ShapeDtypeStruct((split_k, m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w)
+    acc = splitk_combine(partials)
+    if spec is not None:
+        acc = apply_epilogue(acc, spec, bias=bias, residual=residual)
+    return acc.astype(out_dtype)

@@ -38,6 +38,33 @@ def gemm_blocked(x: jax.Array, w: jax.Array, block_k: int,
     return acc.astype(out_dtype)
 
 
+def gemm_splitk(x: jax.Array, w: jax.Array, block_k: int, split_k: int,
+                out_dtype=None) -> jax.Array:
+    """Split-K oracle: the decode fast lane's exact accumulation order.
+
+    K is cut into ``split_k`` contiguous slices; each slice accumulates
+    its own fp32 partial in ``gemm_blocked`` order (the per-slice kernel
+    discipline), and the partials are combined by the SAME deterministic
+    fixed-order pairwise tree the kernel epilogue and the xla backend
+    use (``panel_gemm.splitk_combine``).  ``panel_gemm_splitk`` must be
+    BIT-IDENTICAL to this — the paper's max-abs-diff = 0e+00 discipline,
+    extended to the reduction dimension.  ``split_k == 1`` degenerates
+    to ``gemm_blocked`` exactly.
+    """
+    from repro.kernels.panel_gemm import splitk_combine
+    m, k = x.shape
+    assert k % split_k == 0, f"K={k} not divisible by split_k={split_k}"
+    ks = k // split_k
+    assert ks % block_k == 0, (
+        f"slice depth {ks} not divisible by block_k={block_k}")
+    out_dtype = out_dtype or x.dtype
+    parts = [gemm_blocked(x[:, s * ks:(s + 1) * ks],
+                          w[s * ks:(s + 1) * ks, :], block_k,
+                          out_dtype=jnp.float32)
+             for s in range(split_k)]
+    return splitk_combine(parts).astype(out_dtype)
+
+
 def attention(q, k, v, *, causal=True, window=None, softcap=None,
               scale=None):
     """Reference multi-head attention.  q,k,v: [B, S, H, D] / [B, T, Hkv, D].

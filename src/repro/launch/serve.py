@@ -63,6 +63,13 @@ def main():
                          "to a gemm.bucket_m bucket")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV page size (tokens); must divide --max-len")
+    ap.add_argument("--megastep-depth", type=int, default=1,
+                    help="decode ticks fused per host dispatch (the "
+                         "decode megastep; 1 = per-tick dispatch)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-populate the plan cache and compile the "
+                         "serving steps (prefill + decode buckets) "
+                         "before the first request")
     args = ap.parse_args()
 
     cfg = model_zoo.reduced_config(model_zoo.get_config(args.arch))
@@ -95,6 +102,19 @@ def main():
         logits, _ = eng.prefill(prompts)
         print(f"stub-frontend arch: prefill ok, logits {logits.shape}")
         return
+    if args.warmup:
+        t0 = time.perf_counter()
+        wt = eng.warmup_plans(batch_slots=args.batch_slots,
+                              prefill_chunk=args.prefill_chunk,
+                              page_size=args.page_size,
+                              megastep_depth=args.megastep_depth)
+        pc = wt.pop("plan_cache")
+        n_bucket = wt.pop("decode_bucket_plans")
+        steps = ", ".join(f"{k} {v * 1e3:.0f}ms" for k, v in wt.items())
+        print(f"warmup ({time.perf_counter() - t0:.2f}s): {steps}; "
+              f"{n_bucket} decode-bucket plans pre-resolved, "
+              f"{pc.currsize} plans cached — first serving tick pays "
+              f"no jit/plan latency")
     gen, stats = eng.generate(prompts, args.max_new)
     print(f"packed engine (fused={stats.fused}, quant={stats.quant}): "
           f"prefill {stats.prefill_tps:,.0f} tok/s, "
@@ -121,11 +141,13 @@ def main():
         outs, sstats = eng.serve(
             reqs, batch_slots=args.batch_slots, max_new_tokens=mns,
             prefill_chunk=args.prefill_chunk, page_size=args.page_size,
+            megastep_depth=args.megastep_depth,
             sync_per_step=True)     # exact TTFT / queue-wait percentiles
         qw = _pct(sstats, "queue_wait_s")
         tf = _pct(sstats, "ttft_s")
         print(f"continuous batching ({args.requests} requests, "
-              f"{args.batch_slots} slots, chunk {args.prefill_chunk}):")
+              f"{args.batch_slots} slots, chunk {args.prefill_chunk}, "
+              f"megastep D={args.megastep_depth}):")
         print(f"  aggregate: {sstats.total_tps:,.0f} generated tok/s "
               f"({sstats.decode_tokens} tokens in {sstats.wall_s:.2f}s)")
         print(f"  queue wait  p50 {qw[0]:8.1f} ms   p95 {qw[1]:8.1f} ms")
@@ -133,6 +155,14 @@ def main():
         print(f"  per-request decode tok/s: "
               f"p50 {sstats.percentile('decode_tps', 50):,.0f}   "
               f"p5 {sstats.percentile('decode_tps', 5):,.0f}")
+        print(f"  per-phase ticks: prefill "
+              f"p50 {sstats.phase_percentile('prefill', 50):6.1f} ms / "
+              f"p99 {sstats.phase_percentile('prefill', 99):6.1f} ms   "
+              f"decode p50 {sstats.phase_percentile('decode', 50):6.1f} "
+              f"ms / p99 {sstats.phase_percentile('decode', 99):6.1f} ms")
+        print(f"  decode dispatch collapse: {sstats.decode_ticks} ticks "
+              f"in {sstats.decode_dispatches} dispatches "
+              f"({sstats.host_syncs} host syncs)")
 
 
 if __name__ == "__main__":

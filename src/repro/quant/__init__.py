@@ -17,7 +17,8 @@ from repro.quant.formats import (FORMATS, GROUP_K, QuantFormatError,
                                  quantize_int8, quantize_pack,
                                  quantize_pack_fused, quantize_ternary,
                                  unpack_ternary_codes, weight_itemsize)
-from repro.quant.kernels import quant_gate, quant_panel_gemm
+from repro.quant.kernels import (quant_gate, quant_panel_gemm,
+                                 quant_panel_gemm_splitk)
 from repro.quant.ledger import (PROBE_M, TOLERANCES, LedgerEntry,
                                 QuantToleranceError)
 from repro.quant import ledger
@@ -26,7 +27,8 @@ __all__ = [
     "FORMATS", "GROUP_K", "LedgerEntry", "PROBE_M", "QuantFormatError",
     "QuantToleranceError", "QuantizedPackedWeight", "TOLERANCES",
     "dequantize", "dequantize_padded", "expand_scales", "ledger",
-    "pack_ternary_codes", "quant_gate", "quant_panel_gemm", "quantize",
+    "pack_ternary_codes", "quant_gate", "quant_panel_gemm",
+    "quant_panel_gemm_splitk", "quantize",
     "quantize_int8", "quantize_pack", "quantize_pack_fused",
     "quantize_ternary", "unpack_ternary_codes", "weight_itemsize",
 ]

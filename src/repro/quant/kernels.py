@@ -32,10 +32,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
-from repro.kernels.panel_gemm import (DEFAULT_BLOCK_K, DEFAULT_BLOCK_M,
-                                      DEFAULT_BLOCK_N, EpilogueSpec,
-                                      _act_fn, _finish, apply_epilogue,
-                                      apply_epilogue_glu)
+from repro.kernels.panel_gemm import (DECODE_BLOCK_M, DEFAULT_BLOCK_K,
+                                      DEFAULT_BLOCK_M, DEFAULT_BLOCK_N,
+                                      EpilogueSpec, _act_fn, _finish,
+                                      apply_epilogue, apply_epilogue_glu,
+                                      splitk_combine)
 from repro.quant import formats as F
 
 
@@ -233,31 +234,149 @@ def quant_panel_gemm(
     )(*ops)
 
 
+# ----------------------------------------------------------- split-K lane
+def _quant_splitk_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *,
+                         nks: int, fmt: str):
+    """One (s, i, j, kk) grid step of the quantized split-K partials
+    pass: the K-slice's codes+scales tile dequantizes into registers and
+    accumulates the slice's fp32 partial — the decode lane's
+    reduction-side occupancy with the 4x/16x tile-byte reduction decode
+    most needs (weight bytes dominate at M <= 8)."""
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _dequant_tile(w_ref[...], s_ref[...], fmt)
+    acc_ref[...] += jnp.dot(x_ref[...], w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nks - 1)
+    def _store():
+        o_ref[...] = acc_ref[...][None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("weight_format", "split_k", "block_m", "block_n",
+                     "block_k", "interpret", "out_dtype", "epilogue"),
+)
+def quant_panel_gemm_splitk(
+    x: jax.Array,
+    data: jax.Array,
+    scales: jax.Array,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    *,
+    weight_format: str,
+    split_k: int,
+    block_m: int = DECODE_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    out_dtype=None,
+    epilogue: EpilogueSpec | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = epilogue(splitk_combine(per-slice x @ dequant(codes, scales))).
+
+    The dequant-fused analogue of ``panel_gemm_splitk``: grid
+    ``(s, i, j, kk)`` with per-slice fp32 partials, combined by the
+    shared deterministic tree and finished by the shared jnp epilogue.
+    Bit-identical to ``ref.gemm_splitk`` over the dequantized panels at
+    the same ``(block_k, split_k)`` — the structural gate below."""
+    fmt = weight_format
+    if fmt not in F.FORMATS:
+        raise ValueError(f"unknown weight_format {fmt!r}")
+    kdiv = 4 if fmt == "ternary" else 1
+    m, k = x.shape
+    krows, n = data.shape
+    assert k == krows * kdiv, (
+        f"contraction mismatch: x K={k} vs codes K={krows * kdiv}")
+    assert split_k >= 1 and k % split_k == 0, (
+        f"K={k} not divisible by split_k={split_k}")
+    ks = k // split_k
+    assert m % block_m == 0 and n % block_n == 0 and ks % block_k == 0, (
+        f"shapes ({m},{n},{k}) / slice depth {ks} not aligned to blocks "
+        f"({block_m},{block_n},{block_k}); pack first")
+    assert block_k % kdiv == 0
+    assert block_k % F.GROUP_K == 0, (
+        f"block_k={block_k} must span whole GROUP_K={F.GROUP_K} scale "
+        f"groups (tiles never straddle a group)")
+    nks = ks // block_k
+    wbk = block_k // kdiv
+    sbk = block_k // F.GROUP_K
+    out_dtype = out_dtype or x.dtype
+    spec = epilogue
+    if spec is not None and spec.is_noop:
+        spec = None
+    glu = spec is not None and spec.glu is not None
+    n_out = n // 2 if glu else n
+    if glu:
+        assert n % 2 == 0 and n_out % block_n == 0, (
+            f"glu epilogue needs block-aligned column halves; got N={n} "
+            f"with block_n={block_n} — pack with quantize_pack_fused")
+    assert (bias is not None) == bool(spec is not None and spec.bias)
+    assert (residual is not None) == bool(spec is not None
+                                          and spec.residual)
+    assert scales.shape[-2:] == (k // F.GROUP_K, n), (
+        f"scales {scales.shape} vs expected ({k // F.GROUP_K},{n})")
+    s2 = scales.reshape(k // F.GROUP_K, n).astype(jnp.float32)
+
+    partials = pl.pallas_call(
+        functools.partial(_quant_splitk_kernel, nks=nks, fmt=fmt),
+        grid=(split_k, m // block_m, n // block_n, nks),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k),
+                         lambda s, i, j, kk: (i, s * nks + kk)),
+            pl.BlockSpec((wbk, block_n),
+                         lambda s, i, j, kk: (s * nks + kk, j)),
+            pl.BlockSpec((sbk, block_n),
+                         lambda s, i, j, kk: (s * nks + kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda s, i, j, kk: (s, i, j)),
+        out_shape=jax.ShapeDtypeStruct((split_k, m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, data, s2)
+    acc = splitk_combine(partials)
+    if spec is not None:
+        acc = apply_epilogue(acc, spec, bias=bias, residual=residual)
+    return acc.astype(out_dtype)
+
+
 # --------------------------------------------------- structural gate
 _gate_memo: dict[tuple, bool] = {}
 
 
 def quant_gate(bm: int, bn: int, bk: int, fmt: str, *,
                epilogue: EpilogueSpec | None = None,
-               reduced_k_blocks: int = 2, seed: int = 0) -> bool:
+               reduced_k_blocks: int = 2, seed: int = 0,
+               split_k: int = 1) -> bool:
     """The autotune reject protocol for a quantized block triple: the
     interpret-mode dequant-fused kernel on a reduced shape with a real
     K-carry must be BIT-IDENTICAL to ``ref.gemm_blocked`` over the
-    dequantized panels (+ the jnp epilogue under jit).  This attests the
-    KERNEL (tiling, dequant placement, accumulation order); the
-    format's numeric error vs fp32 is the error ledger's separate,
-    tolerance-gated concern."""
+    dequantized panels (+ the jnp epilogue under jit).  ``split_k > 1``
+    gates the decode lane's split-K variant against ``ref.gemm_splitk``
+    over the same dequantized panels.  This attests the KERNEL (tiling,
+    dequant placement, accumulation order); the format's numeric error
+    vs fp32 is the error ledger's separate, tolerance-gated concern."""
     import numpy as np
 
     from repro.core import bitexact
     from repro.kernels import ref
 
-    key = (bm, bn, bk, fmt, epilogue)
+    key = (bm, bn, bk, fmt, epilogue, split_k)
     if key in _gate_memo:
         return _gate_memo[key]
     rng = np.random.default_rng(seed)
     glu = epilogue is not None and epilogue.glu is not None
-    m_r, k_r = bm, reduced_k_blocks * bk
+    m_r, k_r = bm, reduced_k_blocks * bk * split_k
     n_r = 2 * bn if glu else bn
     x = jnp.asarray(rng.standard_normal((m_r, k_r)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((k_r, n_r)), jnp.float32)
@@ -269,10 +388,17 @@ def quant_gate(bm: int, bn: int, bk: int, fmt: str, *,
     n_out = bn if glu else n_r
     res = (jnp.asarray(rng.standard_normal((m_r, n_out)), jnp.float32)
            if epilogue is not None and epilogue.residual else None)
-    y = quant_panel_gemm(x, data, s, bias, res, weight_format=fmt,
-                         block_m=bm, block_n=bn, block_k=bk,
-                         epilogue=epilogue, interpret=True)
-    acc = ref.gemm_blocked(x, deq, bk, out_dtype=jnp.float32)
+    if split_k > 1:
+        y = quant_panel_gemm_splitk(x, data, s, bias, res,
+                                    weight_format=fmt, split_k=split_k,
+                                    block_m=bm, block_n=bn, block_k=bk,
+                                    epilogue=epilogue, interpret=True)
+        acc = ref.gemm_splitk(x, deq, bk, split_k, out_dtype=jnp.float32)
+    else:
+        y = quant_panel_gemm(x, data, s, bias, res, weight_format=fmt,
+                             block_m=bm, block_n=bn, block_k=bk,
+                             epilogue=epilogue, interpret=True)
+        acc = ref.gemm_blocked(x, deq, bk, out_dtype=jnp.float32)
     if epilogue is None:
         oracle = acc
     else:

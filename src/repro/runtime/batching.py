@@ -70,6 +70,18 @@ class ServeStats:
     counts cached plans whose blocks the policy shrank to fit the
     kernel VMEM budget; ``quant`` is the engine's quantized weight
     format (None: fp32).
+
+    Per-phase latency breakdown (the decode fast lane's observability):
+    ``prefill_tick_ms`` / ``decode_tick_ms`` record every tick's
+    dispatch duration (a megastep drain of D ticks contributes D
+    entries of drain/D — under ``sync_per_step`` these are exact
+    device times, under async they are dispatch times); query p50/p99
+    via :meth:`phase_percentile`.  ``decode_dispatches`` counts device
+    decode calls (``decode_ticks / decode_dispatches`` ~= the realized
+    megastep depth), ``host_syncs`` counts the host-blocking
+    synchronization points the run actually paid (every
+    ``sync_per_step`` block + the final materialize) and
+    ``megastep_depth`` echoes the configured D.
     """
     prefill_tokens: int = 0
     decode_tokens: int = 0
@@ -81,6 +93,11 @@ class ServeStats:
     plan_cache: tuple | None = None
     vmem_clamped_plans: int = 0
     requests: list[RequestStats] = dataclasses.field(default_factory=list)
+    prefill_tick_ms: list = dataclasses.field(default_factory=list)
+    decode_tick_ms: list = dataclasses.field(default_factory=list)
+    decode_dispatches: int = 0
+    host_syncs: int = 0
+    megastep_depth: int = 1
 
     @property
     def prefill_tps(self):
@@ -95,8 +112,19 @@ class ServeStats:
         """Emitted tokens over wall time — the cross-engine comparable."""
         return self.decode_tokens / max(self.wall_s, 1e-9)
 
+    @property
+    def decode_ticks(self) -> int:
+        return len(self.decode_tick_ms)
+
     def percentile(self, field: str, q: float) -> float:
         vals = [getattr(r, field) for r in self.requests]
+        return float(np.percentile(vals, q)) if vals else 0.0
+
+    def phase_percentile(self, phase: str, q: float) -> float:
+        """Percentile (ms) over per-tick durations of ``phase``
+        ("prefill" | "decode")."""
+        vals = {"prefill": self.prefill_tick_ms,
+                "decode": self.decode_tick_ms}[phase]
         return float(np.percentile(vals, q)) if vals else 0.0
 
 
@@ -151,6 +179,20 @@ class ContinuousBatchingScheduler:
     the per-phase timings and TTFT exact (the launcher's percentile
     report uses it); under async they are dispatch-time measurements.
 
+    ``megastep_depth`` (D > 1) drains decode through the engine's fused
+    megastep: up to D decode ticks run device-side per host dispatch
+    (``Engine.decode_megastep`` — one jitted ``lax.fori_loop`` carrying
+    greedy argmax, paged KV writes and the next-token embed), and the
+    scheduler drains the emitted tokens every D ticks.  The realized
+    depth of each drain is ``min(D, smallest remaining token budget
+    among decoding slots)``, so no slot ever over-generates: the event
+    trace, exactly-once completion and ``serve == generate`` bitwise
+    parity hold at every depth (each megastep tick is the same jitted
+    computation as a per-tick dispatch).  The trade: admission and
+    chunked prefill interleave only at drain boundaries, so deep
+    megasteps buy dispatch amortization at some TTFT cost
+    (docs/serving.md).
+
     ``trace`` records ``(event, ...)`` tuples — the scheduler's own audit
     log, asserted over by the serving invariant tests.
     """
@@ -158,7 +200,7 @@ class ContinuousBatchingScheduler:
     def __init__(self, engine, *, batch_slots: int, prefill_chunk: int = 32,
                  page_size: int = 16, num_pages: int | None = None,
                  check_invariants: bool = False,
-                 sync_per_step: bool = False):
+                 sync_per_step: bool = False, megastep_depth: int = 1):
         cfg = engine.cfg
         if cfg.modality != "text":
             raise NotImplementedError("continuous batching serves token "
@@ -173,6 +215,13 @@ class ContinuousBatchingScheduler:
         self.chunk = gemm_api.bucket_m(prefill_chunk)
         self.check_invariants = check_invariants
         self.sync_per_step = sync_per_step
+        if megastep_depth < 1:
+            raise ValueError(f"megastep_depth={megastep_depth}: need >= 1")
+        if megastep_depth > 1 and not hasattr(engine, "decode_megastep"):
+            raise ValueError("megastep_depth > 1 needs an engine with "
+                             "decode_megastep (Engine, or a stub "
+                             "providing it)")
+        self.megastep_depth = megastep_depth
         self.kv = KV.PagedKVCache(
             num_layers=cfg.num_layers, num_slots=batch_slots,
             max_len=engine.max_len, page_size=page_size,
@@ -180,7 +229,7 @@ class ContinuousBatchingScheduler:
         self.slots = [_Slot() for _ in range(batch_slots)]
         self.queue: collections.deque[_Request] = collections.deque()
         self.trace: list[tuple] = []
-        self.stats = ServeStats()
+        self.stats = ServeStats(megastep_depth=megastep_depth)
         self._results: dict[int, np.ndarray] = {}
         self._next_rid = 0
         self._admit_seq = 0
@@ -269,7 +318,10 @@ class ContinuousBatchingScheduler:
         self.kv.pages = pages
         if self.sync_per_step:
             jax.block_until_ready(tok)
-        self.stats.prefill_s += time.perf_counter() - t0
+            self.stats.host_syncs += 1
+        dt = time.perf_counter() - t0
+        self.stats.prefill_s += dt
+        self.stats.prefill_tick_ms.append(dt * 1e3)
         self.stats.prefill_tokens += end - start
         self.kv.lens[i] = end
         sl.n_prefilled = end
@@ -289,26 +341,50 @@ class ContinuousBatchingScheduler:
         dec = [i for i, sl in enumerate(self.slots) if sl.prefill_done]
         if not dec:
             return False
+        # realized megastep depth: never let a slot over-generate — the
+        # shallowest remaining budget among decoding slots caps the
+        # drain, so a request finishes exactly at its max_new and the
+        # trace/exactly-once invariants hold at every depth
+        d = 1
+        if self.megastep_depth > 1:
+            d = min(self.megastep_depth,
+                    min(self.slots[i].request.max_new
+                        - self.slots[i].n_emitted for i in dec))
         mask = np.zeros((self.batch_slots,), bool)
         for i in dec:
-            self.kv.alloc(i, int(self.kv.lens[i]) + 1)
+            self.kv.alloc(i, int(self.kv.lens[i]) + d)
             mask[i] = True
         t0 = time.perf_counter()
-        self._last, pages = self.engine.decode_step(
-            self.kv.pages, self.kv.table_device(), self.kv.lens_device(),
-            jnp.asarray(mask), self._last, page_size=self.page_size)
+        if d > 1:
+            self._last, hist, pages = self.engine.decode_megastep(
+                self.kv.pages, self.kv.table_device(),
+                self.kv.lens_device(), jnp.asarray(mask), self._last,
+                d, page_size=self.page_size,
+                max_depth=self.megastep_depth)
+            ticks = [hist[t] for t in range(d)]
+        else:
+            self._last, pages = self.engine.decode_step(
+                self.kv.pages, self.kv.table_device(),
+                self.kv.lens_device(), jnp.asarray(mask), self._last,
+                page_size=self.page_size)
+            ticks = [self._last]
         self.kv.pages = pages
+        self.stats.decode_dispatches += 1
         if self.sync_per_step:
             jax.block_until_ready(self._last)
-        self.stats.decode_s += time.perf_counter() - t0
-        step_idx = len(self._history)
-        self._history.append(self._last)
-        self.trace.append(
-            ("decode", tuple(self.slots[i].request.rid for i in dec)))
-        for i in dec:
-            self.kv.lens[i] += 1
-            self.slots[i].steps.append(step_idx)
-            self._emit(i)
+            self.stats.host_syncs += 1
+        dt = time.perf_counter() - t0
+        self.stats.decode_s += dt
+        self.stats.decode_tick_ms.extend([dt * 1e3 / d] * d)
+        rids = tuple(self.slots[i].request.rid for i in dec)
+        for tok_row in ticks:
+            step_idx = len(self._history)
+            self._history.append(tok_row)
+            self.trace.append(("decode", rids))
+            for i in dec:
+                self.kv.lens[i] += 1
+                self.slots[i].steps.append(step_idx)
+                self._emit(i)
         if self.check_invariants:
             self.kv.check_no_aliasing()
         return True
@@ -380,5 +456,6 @@ class ContinuousBatchingScheduler:
         else:
             raise RuntimeError("scheduler made no progress")
         self._materialize()
+        self.stats.host_syncs += 1     # the one end-of-run materialize
         self.stats.wall_s += time.perf_counter() - t0
         return [self._results[r] for r in rids], self.stats

@@ -131,7 +131,12 @@ class Engine:
                     params, Sh.param_shardings(params, mesh))
 
         # use_backend wraps the BODY, so it is active while jit traces the
-        # step and every gemm plan inside resolves to this engine's backend
+        # step and every gemm plan inside resolves to this engine's backend.
+        # Decode bodies additionally trace inside gemm.decode_lane(): every
+        # plan they resolve takes the decode policy arm (skinny block_m,
+        # forced prepack, split-K scored) and is plan-keyed apart from the
+        # prefill plans of the same shapes.  Prefill traces never enter the
+        # lane, so their plans and numerics are untouched.
         def _prefill(params, inputs):
             with gemm_api.use_backend(backend):
                 return transformer.prefill(cfg, params, inputs,
@@ -139,7 +144,7 @@ class Engine:
                                            shard_fn=shard_fn)
 
         def _decode(params, cache, tokens):
-            with gemm_api.use_backend(backend):
+            with gemm_api.use_backend(backend), gemm_api.decode_lane():
                 return transformer.decode_step(cfg, params, cache, tokens,
                                                shard_fn=shard_fn)
 
@@ -167,23 +172,68 @@ class Engine:
                 tok = jnp.argmax(logits[0]).astype(jnp.int32)
                 return tok, cache["layers"]
 
+        def _decode_tick(params, pages, page_table, lens, write_mask,
+                         last_tokens, *, page_size):
+            """One pool decode tick: the SINGLE definition both the
+            per-tick step and the megastep body trace, so a megastep of
+            depth D is bit-identical to D per-tick dispatches."""
+            cache = {"layers": pages, "page_table": page_table,
+                     "lens": lens, "write_mask": write_mask}
+            logits, cache = transformer.paged_decode_step(
+                cfg, params, cache, last_tokens[:, None],
+                page_size=page_size, shard_fn=shard_fn)
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # masked rows (idle / still prefilling) keep their token
+            new_last = jnp.where(write_mask, toks, last_tokens)
+            return new_last, cache["layers"]
+
         def _paged_decode(params, pages, page_table, lens, write_mask,
                           last_tokens, *, page_size):
-            with gemm_api.use_backend(backend):
-                cache = {"layers": pages, "page_table": page_table,
-                         "lens": lens, "write_mask": write_mask}
-                logits, cache = transformer.paged_decode_step(
-                    cfg, params, cache, last_tokens[:, None],
-                    page_size=page_size, shard_fn=shard_fn)
-                toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                # masked rows (idle / still prefilling) keep their token
-                new_last = jnp.where(write_mask, toks, last_tokens)
-                return new_last, cache["layers"]
+            with gemm_api.use_backend(backend), gemm_api.decode_lane():
+                return _decode_tick(params, pages, page_table, lens,
+                                    write_mask, last_tokens,
+                                    page_size=page_size)
+
+        def _paged_megastep(params, pages, page_table, lens, write_mask,
+                            last_tokens, n_ticks, *, page_size,
+                            max_depth):
+            """The fused decode megastep: up to ``max_depth`` decode
+            ticks — greedy argmax, paged KV write and next-token embed
+            each tick — inside ONE jitted ``lax.fori_loop``, so the
+            host dispatches (and syncs) once per ``n_ticks`` tokens per
+            slot instead of once per token.  ``n_ticks`` is a TRACED
+            operand (the while-loop trip count), so one compilation
+            serves every drain depth 1..max_depth.  Per-slot lengths
+            advance device-side (``lens + t * write_mask``); the
+            scheduler pre-allocates the pages the D ticks will write.
+            Returns (last tokens, [max_depth, slots] token history —
+            rows past ``n_ticks`` are zeros the host never reads, pages).
+            """
+            with gemm_api.use_backend(backend), gemm_api.decode_lane():
+                hist0 = jnp.zeros((max_depth, last_tokens.shape[0]),
+                                  jnp.int32)
+                step = write_mask.astype(jnp.int32)
+
+                def body(t, carry):
+                    last, pages, hist = carry
+                    last, pages = _decode_tick(
+                        params, pages, page_table, lens + t * step,
+                        write_mask, last, page_size=page_size)
+                    hist = jax.lax.dynamic_update_index_in_dim(
+                        hist, last, t, 0)
+                    return last, pages, hist
+
+                last, pages, hist = jax.lax.fori_loop(
+                    0, n_ticks, body, (last_tokens, pages, hist0))
+                return last, hist, pages
 
         self._paged_prefill = jax.jit(_paged_prefill, donate_argnums=donate,
                                       static_argnames=("page_size",))
         self._paged_decode = jax.jit(_paged_decode, donate_argnums=donate,
                                      static_argnames=("page_size",))
+        self._paged_megastep = jax.jit(
+            _paged_megastep, donate_argnums=donate,
+            static_argnames=("page_size", "max_depth"))
 
     # ------------------------------------------------------------- prefill
     def prefill(self, inputs):
@@ -214,6 +264,114 @@ class Engine:
         return self._paged_decode(self.params, pages, page_table, lens,
                                   write_mask, last_tokens,
                                   page_size=page_size)
+
+    def decode_megastep(self, pages, page_table, lens, write_mask,
+                        last_tokens, n_ticks: int, *, page_size: int,
+                        max_depth: int):
+        """``n_ticks`` decode ticks for the whole pool in ONE device
+        dispatch (jitted ``lax.fori_loop`` — greedy argmax + paged KV
+        write + next-token embed per tick).  The caller must have
+        pre-allocated each live slot's pages for ``n_ticks`` more
+        tokens; ``n_ticks`` is traced (one compile per ``max_depth``),
+        and every tick is bit-identical to a ``decode_step`` dispatch.
+        Returns (last tokens [slots], token history [max_depth, slots]
+        — rows past ``n_ticks`` are zeros, pages)."""
+        return self._paged_megastep(self.params, pages, page_table, lens,
+                                    write_mask, last_tokens,
+                                    jnp.asarray(n_ticks, jnp.int32),
+                                    page_size=page_size,
+                                    max_depth=max_depth)
+
+    # ------------------------------------------------------- plan warmup
+    def warmup_plans(self, *, batch_slots: int, prefill_chunk: int = 32,
+                     page_size: int = 16, num_pages: int | None = None,
+                     megastep_depth: int = 1) -> dict:
+        """Pre-populate the plan cache AND the jit executable cache for
+        a serving configuration, so the first tick of the first request
+        pays no trace/plan/gate/compile latency.
+
+        Two layers of warmup: (1) the paged serving steps — the
+        chunked-prefill step at the ``bucket_m(prefill_chunk)``
+        admission width, the ``[slots, 1]`` decode step, and the
+        megastep when ``megastep_depth > 1`` — each driven once, which
+        resolves EVERY GEMM plan the configured serving geometry
+        dispatches (epilogue-carrying plans included, since the real
+        layers trace) and compiles the step executables: the first
+        serving tick then pays no trace/plan/compile latency, and
+        ``plan_cache_info().misses`` stays flat from the first request
+        (asserted in tests/test_decode_lane.py).  (2) A best-effort
+        decode-lane plan sweep over every packed weight at each
+        ``gemm.DECODE_M_BUCKETS`` width, pre-resolving the PLAIN
+        (epilogue-free) decode plans — fused-QKV and attention/output
+        projections — for pools and ``generate`` batches of other
+        bucketed widths <= 8.  Epilogue-carrying plans at those other
+        widths (glu gate-up, fused-residual down-projection, softcap
+        head) still resolve on their first dispatch there, as does each
+        new shape's jit compile.  The pool geometry must match the
+        later ``serve`` call (``num_pages=None`` = the dense-equivalent
+        default).  Returns ``{step name: compile seconds}`` plus
+        ``decode_bucket_plans`` (count pre-resolved) and a
+        ``plan_cache`` snapshot.
+        """
+        if self.cfg.modality != "text":
+            raise NotImplementedError("warmup covers the token-serving "
+                                      "paged steps")
+        from repro.runtime import kv_cache as KV
+        chunk = gemm_api.bucket_m(prefill_chunk)
+        n_pages = (num_pages if num_pages is not None
+                   else batch_slots * (self.max_len // page_size))
+        # dummy pool, driven through the REAL call path: AOT
+        # lower().compile() does not seed the executables the call path
+        # uses, so warmup dispatches each step once on zeros (page
+        # tables all -1: every KV write drops, outputs are discarded;
+        # the dummy pages are donated away step to step)
+        pages = {
+            name: jnp.zeros(
+                (self.cfg.num_layers, n_pages, page_size, *feat), dtype)
+            for name, (feat, dtype) in KV.leaf_specs_for(self.cfg).items()}
+        pps = self.max_len // page_size
+        i32 = jnp.int32
+        timings = {}
+        t0 = time.perf_counter()
+        tok, pages = self.prefill_chunk(
+            pages, jnp.full((1, pps), -1, i32), jnp.zeros((1,), i32),
+            jnp.zeros((1, chunk), i32), jnp.asarray(0, i32),
+            page_size=page_size)
+        jax.block_until_ready(tok)
+        timings["prefill_chunk"] = time.perf_counter() - t0
+        table = jnp.full((batch_slots, pps), -1, i32)
+        lens = jnp.zeros((batch_slots,), i32)
+        mask = jnp.zeros((batch_slots,), bool)
+        last = jnp.zeros((batch_slots,), i32)
+        t0 = time.perf_counter()
+        last, pages = self.decode_step(pages, table, lens, mask, last,
+                                       page_size=page_size)
+        jax.block_until_ready(last)
+        timings["decode_step"] = time.perf_counter() - t0
+        if megastep_depth > 1:
+            t0 = time.perf_counter()
+            last, _, pages = self.decode_megastep(
+                pages, table, lens, mask, last, 1, page_size=page_size,
+                max_depth=megastep_depth)
+            jax.block_until_ready(last)
+            timings["decode_megastep"] = time.perf_counter() - t0
+        del pages
+        # decode-bucket plan ladder: pre-resolve the decode-lane plan of
+        # every packed weight at each bucket width
+        from repro.core.packing import PackedWeight
+        packs = [leaf for leaf in jax.tree.leaves(
+            self.params,
+            is_leaf=lambda x: isinstance(x, PackedWeight))
+            if isinstance(leaf, PackedWeight)]
+        n_plans = 0
+        with gemm_api.use_backend(self.backend):
+            for bucket in gemm_api.DECODE_M_BUCKETS:
+                for pw in packs:
+                    gemm_api.plan_for_packed(bucket, pw, decode=True)
+                    n_plans += 1
+        timings["decode_bucket_plans"] = n_plans
+        timings["plan_cache"] = gemm_api.plan_cache_info()
+        return timings
 
     # ------------------------------------------------------------ generate
     def generate(self, prompts, max_new_tokens: int, *,
@@ -259,22 +417,24 @@ class Engine:
               max_new_tokens, prefill_chunk: int = 32,
               page_size: int = 16, num_pages: int | None = None,
               check_invariants: bool = False,
-              sync_per_step: bool = False):
+              sync_per_step: bool = False, megastep_depth: int = 1):
         """Real continuous batching (greedy): slot refill mid-generation,
         paged KV cache, chunked prefill admission — runtime/batching.
 
         requests: list of int32 prompt arrays, served at their true
         lengths (no padding to a global prompt_len).  max_new_tokens:
-        int or per-request sequence.  Returns (list of generated-token
-        arrays in request order, batching.ServeStats).  Outputs are
-        bit-identical to per-request greedy ``generate``.
+        int or per-request sequence.  ``megastep_depth`` > 1 drains
+        decode through the fused megastep (up to D device-side ticks
+        per host dispatch).  Returns (list of generated-token arrays in
+        request order, batching.ServeStats).  Outputs are bit-identical
+        to per-request greedy ``generate`` at every megastep depth.
         """
         from repro.runtime.batching import ContinuousBatchingScheduler
         sched = ContinuousBatchingScheduler(
             self, batch_slots=batch_slots, prefill_chunk=prefill_chunk,
             page_size=page_size, num_pages=num_pages,
             check_invariants=check_invariants,
-            sync_per_step=sync_per_step)
+            sync_per_step=sync_per_step, megastep_depth=megastep_depth)
         outs, stats = sched.run(requests, max_new_tokens)
         stats.fused = self.fused if self.packed else None
         stats.quant = self.quant if self.packed else None

@@ -56,29 +56,43 @@ def stablelm_packed():
 
 
 # ----------------------------------------------------------- parity gate
+@pytest.mark.parametrize("megastep", [1, 4])
 @pytest.mark.parametrize("batch_slots", [1, 2, 4])
-def test_parity_vs_per_request_generate(stablelm, batch_slots):
+def test_parity_vs_per_request_generate(stablelm, batch_slots, megastep):
+    """Bit-identical to per-request generate at every megastep depth:
+    a D-deep megastep drain runs the SAME jitted tick D times device-
+    side, so fusing the loop must not move a single bit."""
     cfg, eng = stablelm
     reqs = _requests(cfg, LENS)
     refs = _refs(eng, reqs, MNS)
     outs, stats = eng.serve(reqs, batch_slots=batch_slots,
                             max_new_tokens=MNS, prefill_chunk=CHUNK,
-                            page_size=PAGE, check_invariants=True)
+                            page_size=PAGE, check_invariants=True,
+                            megastep_depth=megastep)
     for i, (o, r) in enumerate(zip(outs, refs)):
         np.testing.assert_array_equal(
             o, r, err_msg=f"request {i} diverged at batch_slots="
-                          f"{batch_slots}")
+                          f"{batch_slots}, megastep={megastep}")
     assert stats.prefill_tokens == sum(LENS)
     assert stats.decode_tokens == sum(MNS)
+    assert stats.decode_ticks == len(stats.decode_tick_ms)
+    if megastep > 1:
+        # the dispatch collapse actually happened
+        assert stats.decode_dispatches < stats.decode_ticks
+    else:
+        assert stats.decode_dispatches == stats.decode_ticks
 
 
-def test_parity_packed_engine(stablelm_packed):
-    """The packed (plan/execute) path must satisfy the same gate."""
+@pytest.mark.parametrize("megastep", [1, 4])
+def test_parity_packed_engine(stablelm_packed, megastep):
+    """The packed (plan/execute) path — decode plans through the decode
+    lane — must satisfy the same gate at every megastep depth."""
     cfg, eng = stablelm_packed
     reqs = _requests(cfg, LENS[:4])
     refs = _refs(eng, reqs, MNS[:4])
     outs, _ = eng.serve(reqs, batch_slots=2, max_new_tokens=MNS[:4],
-                        prefill_chunk=CHUNK, page_size=PAGE)
+                        prefill_chunk=CHUNK, page_size=PAGE,
+                        megastep_depth=megastep)
     for o, r in zip(outs, refs):
         np.testing.assert_array_equal(o, r)
 
@@ -288,3 +302,90 @@ def test_serve_stats_latency_fields(stablelm):
         assert r.decode_tps > 0
     assert stats.percentile("ttft_s", 95) >= stats.percentile("ttft_s", 5)
     assert stats.wall_s > 0 and stats.total_tps > 0
+
+
+def test_serve_stats_phase_breakdown(stablelm):
+    """Per-phase tick latency + host-sync accounting (decode lane
+    observability satellite)."""
+    cfg, eng = stablelm
+    reqs = _requests(cfg, LENS[:3], seed=8)
+    _, stats = eng.serve(reqs, batch_slots=2, max_new_tokens=5,
+                         prefill_chunk=CHUNK, page_size=PAGE,
+                         sync_per_step=True, megastep_depth=2)
+    assert stats.megastep_depth == 2
+    assert len(stats.prefill_tick_ms) > 0
+    assert stats.decode_ticks > 0
+    assert stats.phase_percentile("decode", 99) >= \
+        stats.phase_percentile("decode", 50) > 0
+    assert stats.phase_percentile("prefill", 50) > 0
+    # sync_per_step: one blocking sync per device dispatch + the final
+    # materialize
+    assert stats.host_syncs == (len(stats.prefill_tick_ms)
+                                + stats.decode_dispatches + 1)
+    # async run: only the end-of-run materialize blocks
+    _, astats = eng.serve(_requests(cfg, LENS[:2], seed=9),
+                          batch_slots=2, max_new_tokens=3,
+                          prefill_chunk=CHUNK, page_size=PAGE)
+    assert astats.host_syncs == 1
+
+
+def test_megastep_under_page_pressure(stablelm):
+    """Deep megasteps pre-allocate D tokens of pages per drain; the
+    reservation-based admission must stay deadlock-free and parity must
+    hold when the pool is tight."""
+    cfg, eng = stablelm
+    lens, mns = [20, 20, 20, 20], [8, 8, 8, 8]
+    reqs = _requests(cfg, lens, seed=2)
+    refs = _refs(eng, reqs, mns)
+    outs, stats = eng.serve(reqs, batch_slots=4, max_new_tokens=mns,
+                            prefill_chunk=CHUNK, page_size=PAGE,
+                            num_pages=9, check_invariants=True,
+                            megastep_depth=4)
+    for o, r in zip(outs, refs):
+        np.testing.assert_array_equal(o, r)
+
+
+def test_megastep_never_overshoots_max_new(stablelm):
+    """The realized drain depth caps at the smallest remaining budget:
+    no slot generates past its max_new, so the trace finish events and
+    emitted counts are exact at any depth."""
+    cfg, eng = stablelm
+    reqs = _requests(cfg, [5, 7], seed=10)
+    sched = ContinuousBatchingScheduler(
+        eng, batch_slots=2, prefill_chunk=CHUNK, page_size=PAGE,
+        check_invariants=True, megastep_depth=8)
+    outs, stats = sched.run(reqs, [3, 9])   # one budget far below D
+    _audit_trace(sched.trace, 2)
+    assert [len(o) for o in outs] == [3, 9]
+    assert stats.decode_tokens == 12
+
+
+def test_megastep_requires_capable_engine():
+    cfg = _fake_cfg()
+    with pytest.raises(ValueError, match="decode_megastep"):
+        ContinuousBatchingScheduler(
+            FakeEngine(cfg, MAX_LEN), batch_slots=2,
+            prefill_chunk=CHUNK, page_size=PAGE, megastep_depth=4)
+    with pytest.raises(ValueError):
+        ContinuousBatchingScheduler(
+            FakeEngine(cfg, MAX_LEN), batch_slots=2,
+            prefill_chunk=CHUNK, page_size=PAGE, megastep_depth=0)
+
+
+@pytest.mark.slow
+def test_parity_quantized_megastep():
+    """Quantized decode through the lane (split-K plans on quant packs)
+    stays bit-identical to per-request generate across megastep depth."""
+    cfg = model_zoo.reduced_config(model_zoo.get_config("stablelm-3b"))
+    eng = Engine(cfg, model_zoo.build(cfg), max_len=MAX_LEN, packed=True,
+                 quant="int8")
+    reqs = _requests(cfg, [5, 17, 8], seed=11)
+    mns = [4, 6, 3]
+    refs = _refs(eng, reqs, mns)
+    for depth in (1, 4):
+        outs, stats = eng.serve(reqs, batch_slots=2, max_new_tokens=mns,
+                                prefill_chunk=CHUNK, page_size=PAGE,
+                                megastep_depth=depth)
+        for o, r in zip(outs, refs):
+            np.testing.assert_array_equal(o, r)
+        assert stats.quant == "int8"
