@@ -36,6 +36,51 @@ def gflops(m: int, n: int, k: int, seconds: float) -> float:
     return 2.0 * m * n * k / seconds / 1e9
 
 
+def shared_prefix_trace(rng, *, requests: int, prompt_len: int, vocab: int,
+                        share_ratio: float = 0.8, n_prefixes: int = 2,
+                        prefix_frac=(0.5, 0.9)):
+    """Seeded shared-prefix request trace — the prefix-cache workload.
+
+    Production prompts open with shared preambles (system prompt,
+    few-shot header); ``share_ratio`` of the requests here start with
+    one of ``n_prefixes`` shared preambles whose lengths are drawn
+    uniformly from ``prefix_frac`` of ``prompt_len``, then append a
+    unique suffix (>= 1 token, so the final prompt position always
+    differs and the last-token-recomputed cap is exercised) up to
+    ``prompt_len`` tokens total.  The rest are fully unique prompts of
+    random length.  Deterministic given ``rng``'s seed.
+
+    Returns ``(reqs, info)``: the int32 prompt arrays (arrival order,
+    shared/unique interleaved by the rng) and an info dict with the
+    realized share — ``shared_requests``, ``shared_tokens`` (prompt
+    positions covered by a preamble, the work an ideal cache deletes),
+    ``total_tokens``, and ``prefix_lens``.
+    """
+    lo = max(1, int(prefix_frac[0] * prompt_len))
+    hi = max(lo, int(prefix_frac[1] * prompt_len))
+    prefixes = [rng.integers(1, vocab, int(rng.integers(lo, hi + 1)))
+                .astype(np.int32) for _ in range(n_prefixes)]
+    reqs, shared_reqs, shared_toks = [], 0, 0
+    for _ in range(requests):
+        if rng.random() < share_ratio:
+            p = prefixes[int(rng.integers(n_prefixes))]
+            sfx = rng.integers(1, vocab, int(rng.integers(
+                1, prompt_len - len(p) + 1))).astype(np.int32)
+            reqs.append(np.concatenate([p, sfx]))
+            shared_reqs += 1
+            shared_toks += len(p)
+        else:
+            reqs.append(rng.integers(1, vocab, int(rng.integers(
+                4, prompt_len + 1))).astype(np.int32))
+    return reqs, {
+        "share_ratio": shared_reqs / max(requests, 1),
+        "shared_requests": shared_reqs,
+        "shared_tokens": int(shared_toks),
+        "total_tokens": int(sum(len(r) for r in reqs)),
+        "prefix_lens": [len(p) for p in prefixes],
+    }
+
+
 def write_table(name: str, rows: list[dict], *, meta: dict | None = None):
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:

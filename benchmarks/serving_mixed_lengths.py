@@ -38,11 +38,21 @@ from repro.runtime.serve_loop import Engine
 
 
 def make_workload(rng, *, requests: int, prompt_len: int, max_new: int,
-                  vocab: int, tail_frac: float = 0.3):
-    """Mixed prompt lengths + heavy-tailed generation budgets."""
-    reqs = [rng.integers(1, vocab,
-                         rng.integers(4, prompt_len + 1)).astype(np.int32)
-            for _ in range(requests)]
+                  vocab: int, tail_frac: float = 0.3,
+                  share_ratio: float = 0.0):
+    """Mixed prompt lengths + heavy-tailed generation budgets.
+
+    ``share_ratio > 0`` draws the prompts from the shared-prefix trace
+    generator (``common.shared_prefix_trace``, the table10 workload) so
+    this sweep can be run against prefix-cache-friendly traffic too."""
+    if share_ratio > 0:
+        reqs, _ = common.shared_prefix_trace(
+            rng, requests=requests, prompt_len=prompt_len, vocab=vocab,
+            share_ratio=share_ratio)
+    else:
+        reqs = [rng.integers(1, vocab,
+                             rng.integers(4, prompt_len + 1))
+                .astype(np.int32) for _ in range(requests)]
     short_hi = max(3, min(6, max_new))
     mns = [int(rng.integers(max(1, (3 * max_new) // 4), max_new + 1))
            if rng.random() < tail_frac
@@ -53,7 +63,8 @@ def make_workload(rng, *, requests: int, prompt_len: int, max_new: int,
 
 def run(*, arch: str, requests: int, prompt_len: int, max_new: int,
         batch_slots_sweep, prefill_chunk: int, page_size: int,
-        seed: int = 0, reps: int = 5) -> list[dict]:
+        seed: int = 0, reps: int = 5,
+        share_ratio: float = 0.0) -> list[dict]:
     cfg = model_zoo.reduced_config(model_zoo.get_config(arch))
     params = model_zoo.build(cfg)
     max_len = prompt_len + max_new
@@ -63,7 +74,8 @@ def run(*, arch: str, requests: int, prompt_len: int, max_new: int,
     rng = np.random.default_rng(seed)
     reqs, mns = make_workload(rng, requests=requests,
                               prompt_len=prompt_len, max_new=max_new,
-                              vocab=cfg.vocab_size)
+                              vocab=cfg.vocab_size,
+                              share_ratio=share_ratio)
     useful = sum(mns)
 
     # parity spot check: shortest and longest prompt vs per-request greedy
@@ -127,6 +139,10 @@ def main(dry_run: bool = False):
     ap.add_argument("--batch-slots", default="1,2,4")
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--share-ratio", type=float, default=0.0,
+                    help="fraction of requests opening with a shared "
+                         "preamble (common.shared_prefix_trace; 0 = the "
+                         "classic fully-unique mixed-length trace)")
     ap.add_argument("--dry-run", action="store_true",
                     help="smallest structurally-complete run (CI smoke)")
     args = ap.parse_args()
@@ -137,7 +153,8 @@ def main(dry_run: bool = False):
               prompt_len=args.prompt_len, max_new=args.max_new,
               batch_slots_sweep=[int(s) for s in
                                  args.batch_slots.split(",")],
-              prefill_chunk=args.prefill_chunk, page_size=args.page_size)
+              prefill_chunk=args.prefill_chunk, page_size=args.page_size,
+              share_ratio=args.share_ratio)
     if args.dry_run:
         kw.update(requests=4, prompt_len=16, max_new=4,
                   batch_slots_sweep=[2], prefill_chunk=8, page_size=8)

@@ -66,6 +66,11 @@ def main():
     ap.add_argument("--megastep-depth", type=int, default=1,
                     help="decode ticks fused per host dispatch (the "
                          "decode megastep; 1 = per-tick dispatch)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request prefix cache: requests sharing "
+                         "a cached prompt prefix reuse its KV pages "
+                         "(refcounted, COW-forked at the divergence "
+                         "page) and prefill only the divergent tail")
     ap.add_argument("--warmup", action="store_true",
                     help="pre-populate the plan cache and compile the "
                          "serving steps (prefill + decode buckets) "
@@ -133,21 +138,41 @@ def main():
         print("outputs identical:", bool(jnp.array_equal(gen, gen2)))
 
     if args.requests > 0:
-        reqs = [rng.integers(0, cfg.vocab_size,
-                             rng.integers(4, args.prompt_len + 1))
-                .astype(np.int32) for _ in range(args.requests)]
+        if args.prefix_cache:
+            # shared-preamble traffic (the workload the cache exists
+            # for): 80% of requests open with one fixed preamble of
+            # half the prompt budget, then a unique tail
+            pre = rng.integers(0, cfg.vocab_size,
+                               max(args.prompt_len // 2, 1)) \
+                .astype(np.int32)
+            tail_hi = max(args.prompt_len - pre.size, 4)
+            reqs = [np.concatenate(
+                        [pre, rng.integers(0, cfg.vocab_size,
+                                           rng.integers(1, tail_hi + 1))
+                         .astype(np.int32)])
+                    if rng.random() < 0.8 else
+                    rng.integers(0, cfg.vocab_size,
+                                 rng.integers(4, args.prompt_len + 1))
+                    .astype(np.int32)
+                    for _ in range(args.requests)]
+        else:
+            reqs = [rng.integers(0, cfg.vocab_size,
+                                 rng.integers(4, args.prompt_len + 1))
+                    .astype(np.int32) for _ in range(args.requests)]
         mns = [int(m) for m in
                rng.integers(2, args.max_new + 1, args.requests)]
         outs, sstats = eng.serve(
             reqs, batch_slots=args.batch_slots, max_new_tokens=mns,
             prefill_chunk=args.prefill_chunk, page_size=args.page_size,
             megastep_depth=args.megastep_depth,
+            prefix_cache=args.prefix_cache,
             sync_per_step=True)     # exact TTFT / queue-wait percentiles
         qw = _pct(sstats, "queue_wait_s")
         tf = _pct(sstats, "ttft_s")
         print(f"continuous batching ({args.requests} requests, "
               f"{args.batch_slots} slots, chunk {args.prefill_chunk}, "
-              f"megastep D={args.megastep_depth}):")
+              f"megastep D={args.megastep_depth}, prefix cache "
+              f"{'on' if args.prefix_cache else 'off'}):")
         print(f"  aggregate: {sstats.total_tps:,.0f} generated tok/s "
               f"({sstats.decode_tokens} tokens in {sstats.wall_s:.2f}s)")
         print(f"  queue wait  p50 {qw[0]:8.1f} ms   p95 {qw[1]:8.1f} ms")
@@ -163,6 +188,13 @@ def main():
         print(f"  decode dispatch collapse: {sstats.decode_ticks} ticks "
               f"in {sstats.decode_dispatches} dispatches "
               f"({sstats.host_syncs} host syncs)")
+        if sstats.prefix is not None:
+            px = sstats.prefix
+            print(f"  prefix cache: {px.hits}/{px.lookups} hits "
+                  f"({px.hit_rate:.0%}), {px.hit_tokens} prompt tokens "
+                  f"reused, {px.cow_forks} COW forks, "
+                  f"{px.evicted_pages} pages evicted, "
+                  f"{px.cached_pages} pages cached at end")
 
 
 if __name__ == "__main__":

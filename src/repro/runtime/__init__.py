@@ -1,13 +1,14 @@
 """Runtime: training loop, serving engine + continuous batching, fault
 tolerance."""
-from repro.runtime import (batching, fault_tolerance, kv_cache, serve_loop,
-                           train_loop)
+from repro.runtime import (batching, fault_tolerance, kv_cache, prefix_cache,
+                           serve_loop, train_loop)
 from repro.runtime.batching import ContinuousBatchingScheduler, ServeStats
 from repro.runtime.kv_cache import PagedKVCache
+from repro.runtime.prefix_cache import PrefixCache, PrefixCacheStats
 from repro.runtime.train_loop import TrainState, make_train_step, train
 from repro.runtime.serve_loop import Engine
 
-__all__ = ["batching", "fault_tolerance", "kv_cache", "serve_loop",
-           "train_loop", "TrainState", "make_train_step", "train",
-           "Engine", "ContinuousBatchingScheduler", "ServeStats",
-           "PagedKVCache"]
+__all__ = ["batching", "fault_tolerance", "kv_cache", "prefix_cache",
+           "serve_loop", "train_loop", "TrainState", "make_train_step",
+           "train", "Engine", "ContinuousBatchingScheduler", "ServeStats",
+           "PagedKVCache", "PrefixCache", "PrefixCacheStats"]

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro import gemm as gemm_api
 from repro.runtime import kv_cache as KV
+from repro.runtime.prefix_cache import PrefixCache, PrefixCacheStats
 
 
 # ------------------------------------------------------------------ stats
@@ -60,9 +61,15 @@ class ServeStats:
     """Aggregate + per-request serving stats.
 
     Token counts follow the live-slot, non-pad discipline:
-    ``prefill_tokens`` counts true prompt tokens (never chunk padding or
-    dead slots); ``decode_tokens`` counts tokens actually emitted to a
-    request (the first, prefill-sampled token included).
+    ``prefill_tokens`` counts true prompt tokens actually COMPUTED
+    (never chunk padding or dead slots — and never positions the
+    prefix cache served from shared pages; those are in
+    ``prefix.hit_tokens``); ``decode_tokens`` counts tokens actually
+    emitted to a request (the first, prefill-sampled token included).
+
+    ``prefix`` (``prefix_cache=True`` runs only) carries the
+    cross-request prefix cache's hit/evict/COW counters
+    (:class:`repro.runtime.prefix_cache.PrefixCacheStats`).
 
     GEMM-dispatch observability: ``plan_cache`` snapshots
     ``gemm.plan_cache_info()`` at run end (plan churn — misses moving in
@@ -98,6 +105,7 @@ class ServeStats:
     decode_dispatches: int = 0
     host_syncs: int = 0
     megastep_depth: int = 1
+    prefix: PrefixCacheStats | None = None
 
     @property
     def prefill_tps(self):
@@ -193,14 +201,30 @@ class ContinuousBatchingScheduler:
     megasteps buy dispatch amortization at some TTFT cost
     (docs/serving.md).
 
+    ``prefix_cache=True`` turns on the cross-request prefix cache
+    (runtime/prefix_cache): admission looks the prompt up in a radix
+    index over the page pool, installs the matched pages into the
+    slot's table by reference (COW-forking the divergence page), and
+    starts chunked prefill at the first uncovered token; a prompt's
+    full pages are indexed once its prefill completes, and the index's
+    LRU sweep is the pool's pressure evictor.  The cache lives as long
+    as this scheduler — ``run`` may be called repeatedly and later
+    requests hit earlier runs' prefixes.  Outputs stay bit-identical
+    to per-request ``generate`` (the cached KV is bitwise what this
+    request's own prefill would have written).
+
     ``trace`` records ``(event, ...)`` tuples — the scheduler's own audit
-    log, asserted over by the serving invariant tests.
+    log, asserted over by the serving invariant tests.  ``run`` ends
+    with the pool's ``assert_all_free`` leak audit: with every request
+    freed, a page refcount that never returned to zero (possible only
+    through a sharing bug) raises instead of leaking silently.
     """
 
     def __init__(self, engine, *, batch_slots: int, prefill_chunk: int = 32,
                  page_size: int = 16, num_pages: int | None = None,
                  check_invariants: bool = False,
-                 sync_per_step: bool = False, megastep_depth: int = 1):
+                 sync_per_step: bool = False, megastep_depth: int = 1,
+                 prefix_cache: bool = False):
         cfg = engine.cfg
         if cfg.modality != "text":
             raise NotImplementedError("continuous batching serves token "
@@ -226,6 +250,7 @@ class ContinuousBatchingScheduler:
             num_layers=cfg.num_layers, num_slots=batch_slots,
             max_len=engine.max_len, page_size=page_size,
             leaf_specs=KV.leaf_specs_for(cfg), num_pages=num_pages)
+        self.prefix = PrefixCache(self.kv) if prefix_cache else None
         self.slots = [_Slot() for _ in range(batch_slots)]
         self.queue: collections.deque[_Request] = collections.deque()
         self.trace: list[tuple] = []
@@ -283,9 +308,22 @@ class ContinuousBatchingScheduler:
                 continue
             req = self.queue[0]
             # deadlock-free reservation: admit only if the request's full
-            # footprint fits beside every live slot's remaining growth
-            if (self._footprint(req) + self._outstanding_growth()
-                    > self.kv.free_count):
+            # footprint fits beside every live slot's remaining growth.
+            # A prefix hit covers part of the footprint with shared
+            # pages; reclaimable cached-idle pages extend the budget
+            # (the allocator evicts them under pressure) except the
+            # hit's own pages, which this admission is about to pin.
+            need = self._footprint(req)
+            hit = None
+            avail = self.kv.free_count
+            if self.prefix is not None:
+                hit = self.prefix.lookup(req.tokens)
+                need -= len(hit.nodes)
+                pinned = hit.pages + (
+                    [hit.fork_node.page] if hit.fork_node is not None
+                    else [])
+                avail += self.kv.reclaimable_count(exclude=pinned)
+            if need + self._outstanding_growth() > avail:
                 break                      # FIFO: never skip the head
             self.queue.popleft()
             req.t_admit = time.perf_counter()
@@ -293,7 +331,19 @@ class ContinuousBatchingScheduler:
             sl.n_prefilled, sl.n_emitted, sl.steps = 0, 0, []
             sl.order = self._admit_seq
             self._admit_seq += 1
+            hit_tokens = 0
+            if self.prefix is not None:
+                hit_tokens = self.prefix.admit(i, req.tokens, hit=hit)
+                if hit_tokens:
+                    # shared pages cover positions [0, hit_tokens);
+                    # chunked prefill resumes at the divergent token
+                    self.kv.lens[i] = hit_tokens
+                    sl.n_prefilled = hit_tokens
             self.trace.append(("admit", req.rid, i))
+            if hit_tokens:
+                self.trace.append(("prefix_hit", req.rid, i, hit_tokens))
+            if self.check_invariants:
+                self.kv.check_no_aliasing()
 
     def _prefill_step(self) -> bool:
         cands = [(sl.order, i) for i, sl in enumerate(self.slots)
@@ -304,10 +354,18 @@ class ContinuousBatchingScheduler:
         sl = self.slots[i]
         req = sl.request
         start = sl.n_prefilled
-        end = min(start + self.chunk, len(req.tokens))
+        # chunk-tail bucketing: the last chunk of a prompt — and the
+        # whole divergent remainder after a prefix hit — dispatches at
+        # the smallest gemm.bucket_m width that holds it instead of the
+        # full admission width, so a 3-token divergent tail does not
+        # pay a chunk-wide GEMM.  The width set is the bucket ladder
+        # <= chunk, which Engine.warmup_plans pre-resolves.
+        rem = len(req.tokens) - start
+        width = self.chunk if rem >= self.chunk else gemm_api.bucket_m(rem)
+        end = min(start + width, len(req.tokens))
         final = end == len(req.tokens)
         self.kv.alloc(i, end)
-        chunk = np.zeros((1, self.chunk), np.int32)
+        chunk = np.zeros((1, width), np.int32)
         chunk[0, :end - start] = req.tokens[start:end]
         t0 = time.perf_counter()
         tok, pages = self.engine.prefill_chunk(
@@ -327,6 +385,11 @@ class ContinuousBatchingScheduler:
         sl.n_prefilled = end
         self.trace.append(("prefill", req.rid, i, start, end))
         if final:
+            if self.prefix is not None:
+                # prompt fully prefilled: its full pages are immutable
+                # from here (decode writes land strictly past the
+                # prompt) — index them BEFORE _emit can free the slot
+                self.prefix.insert(i, req.tokens)
             # first token stays on device — it feeds the slot's decode
             # steps through the last-token row, no host sync needed
             self._last = self._last.at[i].set(tok)
@@ -458,4 +521,10 @@ class ContinuousBatchingScheduler:
         self._materialize()
         self.stats.host_syncs += 1     # the one end-of-run materialize
         self.stats.wall_s += time.perf_counter() - t0
+        if self.prefix is not None:
+            self.stats.prefix = self.prefix.snapshot_stats()
+        # teardown leak audit: every request freed — a page refcount
+        # still above zero (a free() that dropped a shared reference
+        # short) is a leak the free-list count alone cannot see
+        self.kv.assert_all_free()
         return [self._results[r] for r in rids], self.stats

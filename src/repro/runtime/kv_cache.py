@@ -25,6 +25,23 @@ Allocation is host-side (numpy + a free list): the scheduler calls
 ``alloc``/``free`` between device steps, and ships ``page_table``/
 ``lens`` as small int32 arrays into the jitted step — values change,
 shapes never do.
+
+Pages are REFCOUNTED so the cross-request prefix cache
+(runtime/prefix_cache.py) can back many slots' tables with one physical
+page: ``install`` maps already-written pages into a fresh slot
+(incrementing their refcounts), ``fork`` is the copy-on-write escape —
+a fresh page whose contents are copied from a shared one, so the new
+slot can overwrite its tail without touching the original — and
+``free`` only *decrements*; a page returns to the free list when its
+last reference drops AND it is not registered as cached.  Cached pages
+with refcount 0 are *reclaimable*: under pool pressure ``alloc``/
+``fork`` call the registered evictor (the prefix cache's LRU sweep)
+before declaring OutOfPages.  ``check_no_aliasing`` is refcount-aware
+(a page in two live tables is legal exactly when its refcount says so)
+and ``assert_all_free`` is the teardown leak audit: once every request
+has been freed, every page must be free or cached-idle — a refcount
+that never returned to zero is a leak the old free-list accounting
+could not see.
 """
 from __future__ import annotations
 
@@ -41,9 +58,15 @@ class OutOfPagesError(RuntimeError):
 
 
 class PageAliasError(RuntimeError):
-    """A physical page is referenced by two live slots (or a live slot
-    and the free list) — the invariant continuous batching must never
-    break."""
+    """A physical page's references disagree with its refcount (or a
+    page is both live and free) — the invariant continuous batching
+    must never break."""
+
+
+class PageLeakError(PageAliasError):
+    """A page kept a nonzero refcount (or a slot kept a mapping) after
+    every request was freed — the silent leak ``assert_all_free``
+    audits for at scheduler teardown."""
 
 
 def pages_for(tokens: int, page_size: int) -> int:
@@ -152,15 +175,66 @@ class PagedKVCache:
         self._n_pages = np.zeros((num_slots,), np.int32)
         self._free: collections.deque[int] = collections.deque(
             range(self.num_pages))
+        # prefix-cache support: per-page reference counts (slot-table
+        # references only — the cache index itself holds none, which is
+        # what makes refcount-0 cached pages the reclaimable set), the
+        # cached-page registry, and the pressure evictor hook
+        self.refcount = np.zeros((self.num_pages,), np.int32)
+        self._cached: set[int] = set()
+        self._evictor = None
 
     # ------------------------------------------------------- allocation
     @property
     def free_count(self) -> int:
         return len(self._free)
 
+    @property
+    def cached_count(self) -> int:
+        """Pages registered by a prefix cache (live or idle)."""
+        return len(self._cached)
+
+    def reclaimable_count(self, exclude=()) -> int:
+        """Cached pages with refcount 0 — what the evictor could return
+        to the free list under pressure.  ``exclude`` discounts pages a
+        caller is about to pin (an admission's own prefix hit must not
+        count toward the budget that admits it)."""
+        skip = set(int(p) for p in exclude)
+        return sum(1 for p in self._cached
+                   if self.refcount[p] == 0 and p not in skip)
+
+    def set_evictor(self, fn) -> None:
+        """Register ``fn(n_pages) -> freed`` called under pool pressure
+        before OutOfPagesError; the prefix cache's LRU sweep."""
+        self._evictor = fn
+
     def held(self, slot: int) -> int:
         """Pages currently mapped by ``slot``."""
         return int(self._n_pages[slot])
+
+    def _take_free(self, why: str) -> int:
+        """Pop a free page (evicting reclaimable cached pages first under
+        pressure); the caller owns its single reference."""
+        if not self._free and self._evictor is not None:
+            self._evictor(1)
+        if not self._free:
+            raise OutOfPagesError(
+                f"{why} but the free list is empty "
+                f"({self.num_pages} pages total, "
+                f"{self.cached_count} cached)")
+        p = self._free.popleft()
+        self.refcount[p] = 1
+        return p
+
+    def _release(self, p: int) -> bool:
+        """Drop one reference to ``p``; True if it returned to the free
+        list (last reference gone and not retained by the cache)."""
+        if self.refcount[p] <= 0:
+            raise PageAliasError(f"double free of page {p}")
+        self.refcount[p] -= 1
+        if self.refcount[p] == 0 and p not in self._cached:
+            self._free.append(p)
+            return True
+        return False
 
     def alloc(self, slot: int, token_len: int) -> None:
         """Grow ``slot``'s mapping to cover ``token_len`` logical tokens."""
@@ -169,29 +243,100 @@ class PagedKVCache:
             raise ValueError(f"slot {slot}: {token_len} tokens exceed "
                              f"max_len={self.max_len}")
         while self._n_pages[slot] < target:
-            if not self._free:
-                raise OutOfPagesError(
-                    f"slot {slot} needs page {int(self._n_pages[slot])} "
-                    f"but the free list is empty "
-                    f"({self.num_pages} pages total)")
-            self.page_table[slot, self._n_pages[slot]] = self._free.popleft()
+            p = self._take_free(
+                f"slot {slot} needs page {int(self._n_pages[slot])}")
+            self.page_table[slot, self._n_pages[slot]] = p
             self._n_pages[slot] += 1
 
+    def install(self, slot: int, pages) -> None:
+        """Map already-written ``pages`` (a cached prefix run, in logical
+        order) as the head of ``slot``'s table, taking one reference
+        each.  The slot must hold no mapping yet — prefix installation
+        happens at admission, before any alloc."""
+        if self._n_pages[slot]:
+            raise PageAliasError(
+                f"install into slot {slot} which already maps "
+                f"{self.held(slot)} pages")
+        if len(pages) > self.pages_per_slot:
+            raise ValueError(f"slot {slot}: {len(pages)} shared pages "
+                             f"exceed max_len={self.max_len}")
+        for j, p in enumerate(pages):
+            p = int(p)
+            if self.refcount[p] == 0 and p not in self._cached:
+                raise PageAliasError(
+                    f"install of page {p} which is neither live nor "
+                    f"cached (would alias the free list)")
+            self.refcount[p] += 1
+            self.page_table[slot, j] = p
+        self._n_pages[slot] = len(pages)
+
+    def fork(self, slot: int, src_page: int) -> int:
+        """Copy-on-write: map a FRESH page as ``slot``'s next table entry
+        with the contents of ``src_page`` copied in (device-side, every
+        leaf pool), so the slot can overwrite the copied tail without
+        touching the shared original.  Returns the new physical id."""
+        j = int(self._n_pages[slot])
+        if j >= self.pages_per_slot:
+            raise ValueError(f"slot {slot}: fork past max_len")
+        # pin the source across the take: under pressure the evictor
+        # could otherwise reclaim src itself and hand it back as dst
+        self.refcount[src_page] += 1
+        try:
+            dst = self._take_free(f"slot {slot} forking page {src_page}")
+        finally:
+            self._release(int(src_page))
+        for name, arr in self.pages.items():
+            self.pages[name] = arr.at[:, dst].set(arr[:, src_page])
+        self.page_table[slot, j] = dst
+        self._n_pages[slot] = j + 1
+        return dst
+
     def free(self, slot: int) -> list[int]:
-        """Release every page of ``slot``; returns the freed ids."""
+        """Release every reference of ``slot``; returns the ids that
+        actually came back to the free list (shared pages survive with
+        the remaining holders; cached pages are retained reclaimable)."""
         n = int(self._n_pages[slot])
-        freed = [int(p) for p in self.page_table[slot, :n]]
+        freed = [p for p in map(int, self.page_table[slot, :n])
+                 if self._release(p)]
         self.page_table[slot, :] = PAGE_FREE
         self._n_pages[slot] = 0
         self.lens[slot] = 0
-        self._free.extend(freed)
+        return freed
+
+    # ----------------------------------------- prefix-cache page registry
+    def mark_cached(self, pages) -> None:
+        """Register ``pages`` as retained by the prefix index: their last
+        ``free`` keeps them out of the free list (reclaimable by the
+        evictor instead of recycled)."""
+        for p in pages:
+            p = int(p)
+            if self.refcount[p] == 0 and p not in self._cached:
+                raise PageAliasError(
+                    f"mark_cached on free page {p}")
+            self._cached.add(p)
+
+    def uncache(self, pages) -> list[int]:
+        """Drop ``pages`` from the cached registry (eviction / index
+        clear); idle ones return to the free list immediately."""
+        freed = []
+        for p in pages:
+            p = int(p)
+            if p in self._cached:
+                self._cached.discard(p)
+                if self.refcount[p] == 0:
+                    self._free.append(p)
+                    freed.append(p)
         return freed
 
     def reset(self) -> None:
+        """Full pool reset: every slot freed AND the cached registry
+        dropped (a prefix index over this pool must be discarded with
+        it)."""
         for s in range(self.num_slots):
             if self._n_pages[s]:
                 self.free(s)
         self.lens[:] = 0
+        self.uncache(list(self._cached))
 
     # -------------------------------------------------- device shipping
     def table_device(self, slots=None) -> jnp.ndarray:
@@ -204,18 +349,58 @@ class PagedKVCache:
 
     # ---------------------------------------------------- invariants
     def check_no_aliasing(self) -> None:
-        """Raise PageAliasError unless live mappings and the free list
-        partition the physical pool (no page in two rows, none both live
-        and free, none leaked)."""
-        live = [int(p) for row in self.page_table for p in row if p >= 0]
-        if len(live) != len(set(live)):
-            dup = sorted(p for p in set(live) if live.count(p) > 1)
-            raise PageAliasError(f"pages {dup} mapped by two live slots")
-        overlap = set(live) & set(self._free)
+        """Raise PageAliasError unless table references, refcounts, the
+        cached registry and the free list are mutually consistent:
+        every page's refcount equals its table references (sharing is
+        legal exactly when the refcount says so), the free list holds
+        no duplicates and no referenced or cached page, and
+        free + live + cached-idle partitions the physical pool."""
+        refs = np.zeros((self.num_pages,), np.int64)
+        for row in self.page_table:
+            for p in row:
+                if p >= 0:
+                    refs[p] += 1
+        bad = np.flatnonzero(refs != self.refcount)
+        if bad.size:
+            detail = ", ".join(
+                f"page {p}: {refs[p]} table refs vs refcount "
+                f"{int(self.refcount[p])}" for p in bad[:4])
+            raise PageAliasError(f"refcount mismatch ({detail})")
+        free = list(self._free)
+        if len(free) != len(set(free)):
+            dup = sorted(p for p in set(free) if free.count(p) > 1)
+            raise PageAliasError(f"pages {dup} twice on the free list")
+        overlap = set(free) & set(np.flatnonzero(refs > 0).tolist())
         if overlap:
             raise PageAliasError(
                 f"pages {sorted(overlap)} both live and free")
-        if len(live) + len(self._free) != self.num_pages:
+        overlap = set(free) & self._cached
+        if overlap:
             raise PageAliasError(
-                f"page leak: {len(live)} live + {len(self._free)} free "
-                f"!= {self.num_pages} total")
+                f"pages {sorted(overlap)} both cached and free")
+        live = int(np.count_nonzero(refs > 0))
+        idle_cached = sum(1 for p in self._cached if refs[p] == 0)
+        if live + idle_cached + len(free) != self.num_pages:
+            raise PageAliasError(
+                f"page leak: {live} live + {idle_cached} cached-idle "
+                f"+ {len(free)} free != {self.num_pages} total")
+
+    def assert_all_free(self) -> None:
+        """Teardown leak audit: with no request live, every page must be
+        free or cached-idle.  A nonzero refcount here is the silent
+        leak the plain free-list accounting missed when a request was
+        freed while its pages were shared (raises PageLeakError)."""
+        self.check_no_aliasing()
+        held = np.flatnonzero(self._n_pages > 0)
+        if held.size:
+            raise PageLeakError(
+                f"slots {held.tolist()} still hold mappings at teardown")
+        live = np.flatnonzero(self.refcount > 0)
+        if live.size:
+            raise PageLeakError(
+                f"pages {live.tolist()} kept nonzero refcounts at "
+                f"teardown — a free() path dropped a reference short")
+        if len(self._free) + len(self._cached) != self.num_pages:
+            raise PageLeakError(
+                f"{len(self._free)} free + {len(self._cached)} cached "
+                f"!= {self.num_pages} pages at teardown")

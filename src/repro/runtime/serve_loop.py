@@ -292,8 +292,12 @@ class Engine:
 
         Two layers of warmup: (1) the paged serving steps — the
         chunked-prefill step at the ``bucket_m(prefill_chunk)``
-        admission width, the ``[slots, 1]`` decode step, and the
-        megastep when ``megastep_depth > 1`` — each driven once, which
+        admission width AND at every chunk-tail bucket below it (the
+        widths the scheduler's bucketed final/divergent chunks emit —
+        a prefix-cache hit starts prefill mid-prompt at arbitrary
+        offsets, so every tail bucket is reachable), the ``[slots, 1]``
+        decode step, and the megastep when ``megastep_depth > 1`` —
+        each driven once, which
         resolves EVERY GEMM plan the configured serving geometry
         dispatches (epilogue-carrying plans included, since the real
         layers trace) and compiles the step executables: the first
@@ -332,13 +336,24 @@ class Engine:
         pps = self.max_len // page_size
         i32 = jnp.int32
         timings = {}
-        t0 = time.perf_counter()
-        tok, pages = self.prefill_chunk(
-            pages, jnp.full((1, pps), -1, i32), jnp.zeros((1,), i32),
-            jnp.zeros((1, chunk), i32), jnp.asarray(0, i32),
-            page_size=page_size)
-        jax.block_until_ready(tok)
-        timings["prefill_chunk"] = time.perf_counter() - t0
+        # admission width PLUS every chunk-tail bucket below it: the
+        # scheduler dispatches a prompt's final chunk — and the whole
+        # divergent remainder after a prefix-cache hit, which starts
+        # mid-prompt at an arbitrary offset — at gemm.bucket_m(rem), so
+        # the tail widths the pool can emit are exactly the bucket
+        # ladder <= chunk.  Driving each once keeps chunk_plan_misses
+        # at 0 with the prefix cache on (benchmarks/table10_prefix.py).
+        widths = [b for b in gemm_api.PREFILL_M_BUCKETS if b < chunk]
+        for w in widths + [chunk]:
+            t0 = time.perf_counter()
+            tok, pages = self.prefill_chunk(
+                pages, jnp.full((1, pps), -1, i32), jnp.zeros((1,), i32),
+                jnp.zeros((1, w), i32), jnp.asarray(0, i32),
+                page_size=page_size)
+            jax.block_until_ready(tok)
+            key = ("prefill_chunk" if w == chunk
+                   else f"prefill_chunk_m{w}")
+            timings[key] = time.perf_counter() - t0
         table = jnp.full((batch_slots, pps), -1, i32)
         lens = jnp.zeros((batch_slots,), i32)
         mask = jnp.zeros((batch_slots,), bool)
@@ -417,7 +432,8 @@ class Engine:
               max_new_tokens, prefill_chunk: int = 32,
               page_size: int = 16, num_pages: int | None = None,
               check_invariants: bool = False,
-              sync_per_step: bool = False, megastep_depth: int = 1):
+              sync_per_step: bool = False, megastep_depth: int = 1,
+              prefix_cache: bool = False):
         """Real continuous batching (greedy): slot refill mid-generation,
         paged KV cache, chunked prefill admission — runtime/batching.
 
@@ -425,16 +441,23 @@ class Engine:
         lengths (no padding to a global prompt_len).  max_new_tokens:
         int or per-request sequence.  ``megastep_depth`` > 1 drains
         decode through the fused megastep (up to D device-side ticks
-        per host dispatch).  Returns (list of generated-token arrays in
-        request order, batching.ServeStats).  Outputs are bit-identical
-        to per-request greedy ``generate`` at every megastep depth.
+        per host dispatch).  ``prefix_cache=True`` turns on the
+        cross-request prefix cache (runtime/prefix_cache): requests
+        whose prompts share a cached prefix skip straight to the
+        divergent token, reusing refcounted KV pages (COW-forked at
+        the divergence page); ``ServeStats.prefix`` carries the
+        hit/evict/COW counters.  Returns (list of generated-token
+        arrays in request order, batching.ServeStats).  Outputs are
+        bit-identical to per-request greedy ``generate`` at every
+        megastep depth, with the cache on or off.
         """
         from repro.runtime.batching import ContinuousBatchingScheduler
         sched = ContinuousBatchingScheduler(
             self, batch_slots=batch_slots, prefill_chunk=prefill_chunk,
             page_size=page_size, num_pages=num_pages,
             check_invariants=check_invariants,
-            sync_per_step=sync_per_step, megastep_depth=megastep_depth)
+            sync_per_step=sync_per_step, megastep_depth=megastep_depth,
+            prefix_cache=prefix_cache)
         outs, stats = sched.run(requests, max_new_tokens)
         stats.fused = self.fused if self.packed else None
         stats.quant = self.quant if self.packed else None

@@ -192,6 +192,97 @@ def test_max_len_page_divisibility():
                         leaf_specs={"pages_k": (FEAT, jnp.float32)})
 
 
+# ------------------------------------------------- refcount / COW laws
+def test_install_shares_and_free_respects_holders():
+    pool = _pool()
+    pool.alloc(0, 8)
+    pages = [int(p) for p in pool.page_table[0, :2]]
+    pool.mark_cached(pages)
+    pool.install(1, pages)
+    assert all(pool.refcount[p] == 2 for p in pages)
+    pool.check_no_aliasing()
+    assert pool.free(0) == []            # slot 1 still holds them
+    assert pool.free(1) == []            # cached: retained reclaimable
+    assert pool.reclaimable_count() == 2
+    assert pool.free_count == pool.num_pages - 2
+    pool.assert_all_free()               # cached-idle is not a leak
+
+
+def test_install_guards():
+    pool = _pool()
+    pool.alloc(0, 4)
+    with pytest.raises(KV.PageAliasError):
+        pool.install(0, [int(pool.page_table[0, 0])])   # slot not empty
+    free_page = pool._free[0]
+    with pytest.raises(KV.PageAliasError):
+        pool.install(1, [free_page])     # neither live nor cached
+
+
+def test_fork_copies_and_isolates_writes():
+    rng = np.random.default_rng(5)
+    pool = _pool(num_slots=2)
+    dense = np.zeros((2, MAX_LEN, *FEAT), np.float32)
+    _write(pool, 0, 4, rng, dense)       # slot 0 fills page 0
+    src = int(pool.page_table[0, 0])
+    dst = pool.fork(1, src)
+    assert dst != src and pool.refcount[src] == 1 == pool.refcount[dst]
+    pool.lens[1] = 2                     # reuse the copied head...
+    dense[1, :2] = dense[0, :2]
+    _write(pool, 1, 2, rng, dense)       # ...overwrite the tail
+    _check_equal(pool, dense)            # slot 0's page untouched
+    pool.check_no_aliasing()
+
+
+def test_fork_under_pressure_evicts_other_cached_pages_not_src():
+    pool = _pool(num_slots=2, num_pages=2)
+    pool.alloc(0, 8)                     # pool exhausted
+    a, b = (int(p) for p in pool.page_table[0, :2])
+    pool.mark_cached([a, b])
+    pool.free(0)                         # both cached-idle
+    evicted = []
+
+    def evictor(n):                      # reclaim any refcount-0 page
+        for p in (a, b):
+            if len(evicted) < n and pool.refcount[p] == 0:
+                evicted.extend(pool.uncache([p]))
+        return len(evicted)
+
+    pool.set_evictor(evictor)
+    dst = pool.fork(1, b)                # src b pinned across the take
+    assert evicted == [a] and dst == a   # the OTHER page was reclaimed
+    assert pool.refcount[b] == 0 and b in pool._cached
+    pool.check_no_aliasing()
+
+
+def test_double_free_detected():
+    pool = _pool()
+    pool.alloc(0, 4)
+    p = int(pool.page_table[0, 0])
+    pool.free(0)
+    with pytest.raises(KV.PageAliasError, match="double free"):
+        pool._release(p)
+
+
+def test_uncache_returns_idle_pages_only():
+    pool = _pool()
+    pool.alloc(0, 4)
+    p = int(pool.page_table[0, 0])
+    pool.mark_cached([p])
+    assert pool.uncache([p]) == []       # still live: retained
+    assert pool.cached_count == 0
+    pool.free(0)
+    assert pool.free_count == pool.num_pages
+
+
+def test_assert_all_free_flags_leaks():
+    pool = _pool()
+    pool.alloc(0, 4)
+    with pytest.raises(KV.PageLeakError):
+        pool.assert_all_free()
+    pool.free(0)
+    pool.assert_all_free()
+
+
 # ------------------------------------------------------------- property
 @settings(max_examples=60, deadline=None)
 @given(ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 9)),

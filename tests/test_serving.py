@@ -372,6 +372,95 @@ def test_megastep_requires_capable_engine():
             prefill_chunk=CHUNK, page_size=PAGE, megastep_depth=0)
 
 
+# ---------------------------------------------------- prefix cache gates
+def _shared_prefix_reqs(cfg, groups, per_group, prefix_len, tail_lens,
+                        seed=12):
+    """``groups`` distinct shared preambles, ``per_group`` requests each
+    (tails unique), interleaved by group so warm hits happen mid-run."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(1, cfg.vocab_size, prefix_len)
+                .astype(np.int32) for _ in range(groups)]
+    reqs = []
+    for i in range(per_group):
+        for p in prefixes:
+            t = tail_lens[(i * groups) % len(tail_lens)] + len(reqs) % 3
+            reqs.append(np.concatenate(
+                [p, rng.integers(1, cfg.vocab_size, t).astype(np.int32)]))
+    return reqs
+
+
+def test_prefix_cache_parity_cold_warm_cow(stablelm):
+    """The tentpole gate: serve with the cache on stays token-identical
+    to per-request generate through cold admissions, warm full-page
+    hits, AND mid-page COW forks (prefix_len 18 = 2 full pages + 2
+    tokens into the divergence page at PAGE=8)."""
+    cfg, eng = stablelm
+    reqs = _shared_prefix_reqs(cfg, groups=1, per_group=4,
+                               prefix_len=18, tail_lens=[6, 3, 5, 4])
+    mns = [4, 3, 5, 2]
+    refs = _refs(eng, reqs, mns)
+    outs, stats = eng.serve(reqs, batch_slots=2, max_new_tokens=mns,
+                            prefill_chunk=CHUNK, page_size=PAGE,
+                            check_invariants=True, prefix_cache=True)
+    for i, (o, r) in enumerate(zip(outs, refs)):
+        np.testing.assert_array_equal(
+            o, r, err_msg=f"request {i} diverged with prefix cache on")
+    px = stats.prefix
+    assert px.hits >= 1 and px.cow_forks >= 1
+    # computed prefill shrank by exactly the reused positions
+    assert stats.prefill_tokens == sum(len(r) for r in reqs) \
+        - px.hit_tokens
+    # cache off: same tokens, no counters
+    outs_off, stats_off = eng.serve(reqs, batch_slots=2,
+                                    max_new_tokens=mns,
+                                    prefill_chunk=CHUNK, page_size=PAGE)
+    assert stats_off.prefix is None
+    for o, r in zip(outs_off, refs):
+        np.testing.assert_array_equal(o, r)
+
+
+def test_prefix_cache_parity_under_eviction_pressure(stablelm):
+    """A tight pool forces the LRU evictor to reclaim cached pages
+    mid-run; parity and the teardown leak audit must survive the
+    churn."""
+    cfg, eng = stablelm
+    reqs = _shared_prefix_reqs(cfg, groups=4, per_group=2,
+                               prefix_len=16, tail_lens=[4, 6, 5],
+                               seed=13)
+    mns = [4] * len(reqs)
+    refs = _refs(eng, reqs, mns)
+    outs, stats = eng.serve(reqs, batch_slots=2, max_new_tokens=mns,
+                            prefill_chunk=CHUNK, page_size=PAGE,
+                            num_pages=9, check_invariants=True,
+                            prefix_cache=True)
+    for i, (o, r) in enumerate(zip(outs, refs)):
+        np.testing.assert_array_equal(
+            o, r, err_msg=f"request {i} diverged under eviction")
+    assert stats.prefix.evicted_pages > 0, \
+        "tight pool never pressured the cache — gate unexercised"
+
+
+@pytest.mark.slow
+def test_prefix_cache_parity_quantized():
+    """Cached KV written by a quantized (int8 packs) prefill is reused
+    bit-identically — the cache composes with the quantized serving
+    contract."""
+    cfg = model_zoo.reduced_config(model_zoo.get_config("stablelm-3b"))
+    eng = Engine(cfg, model_zoo.build(cfg), max_len=MAX_LEN, packed=True,
+                 quant="int8")
+    reqs = _shared_prefix_reqs(cfg, groups=1, per_group=3,
+                               prefix_len=18, tail_lens=[5, 3, 6],
+                               seed=14)
+    mns = [4, 3, 5]
+    refs = _refs(eng, reqs, mns)
+    outs, stats = eng.serve(reqs, batch_slots=2, max_new_tokens=mns,
+                            prefill_chunk=CHUNK, page_size=PAGE,
+                            prefix_cache=True)
+    for o, r in zip(outs, refs):
+        np.testing.assert_array_equal(o, r)
+    assert stats.prefix.hits >= 1 and stats.quant == "int8"
+
+
 @pytest.mark.slow
 def test_parity_quantized_megastep():
     """Quantized decode through the lane (split-K plans on quant packs)
