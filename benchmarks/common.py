@@ -36,6 +36,26 @@ def gflops(m: int, n: int, k: int, seconds: float) -> float:
     return 2.0 * m * n * k / seconds / 1e9
 
 
+def retry_on_noise(measure, accept, *, max_retries: int = 4):
+    """The suite's retry-on-noise discipline (table8/table9, and the
+    plan store's measured autotune), hoisted: when a row that should
+    win by construction (the accepted mode does strictly less work)
+    measures below threshold, that is timer noise — RE-MEASURE with
+    more reps, never fudge the number.
+
+    ``measure(extra_reps)`` produces a row (called first with 0);
+    ``accept(row)`` says whether it cleared the threshold.  Each retry
+    adds ``2 * tries`` reps.  Returns ``(row, tries)`` — the last row
+    stands even if it never cleared, so a real regression still shows.
+    """
+    row = measure(0)
+    tries = 0
+    while not accept(row) and tries < max_retries:
+        tries += 1
+        row = measure(2 * tries)
+    return row, tries
+
+
 def shared_prefix_trace(rng, *, requests: int, prompt_len: int, vocab: int,
                         share_ratio: float = 0.8, n_prefixes: int = 2,
                         prefix_frac=(0.5, 0.9)):

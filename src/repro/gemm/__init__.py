@@ -20,25 +20,34 @@ from repro.gemm.execute import (PlanMismatchError, execute, lead_m,
 from repro.gemm.plan import (EpilogueSpec, GemmPlan, LEVER_FINE_PANELS,
                              LEVER_PREPACK, PACK_NONE, PACK_PERCALL,
                              PACK_PREPACKED)
+from repro.gemm.plan_store import (PlanStore, StoreInfo, SCHEMA_VERSION,
+                                   active_plan_store, as_plan_store,
+                                   host_fingerprint, no_plan_store,
+                                   plan_store_info, set_plan_store,
+                                   use_plan_store)
 from repro.gemm.policy import (DECODE_M_BUCKETS, DECODE_SPLIT_K_CANDIDATES,
                                DEFAULT_NUM_CORES, PREFILL_M_BUCKETS,
                                bucket_m, decode_lane, in_decode_lane,
                                pack_blocks, plan, plan_cache_clear,
                                plan_cache_info, plan_for_packed,
-                               policy_table, vmem_clamped_count)
+                               policy_table, store_key,
+                               vmem_clamped_count)
 from repro.kernels.panel_gemm import apply_epilogue, splitk_combine
 
 __all__ = [
     "Backend", "EpilogueSpec", "GemmPlan", "PlanMismatchError",
+    "PlanStore", "StoreInfo", "SCHEMA_VERSION",
     "UnknownBackendError",
     "LEVER_FINE_PANELS", "LEVER_PREPACK", "DEFAULT_NUM_CORES",
     "PACK_NONE", "PACK_PERCALL", "PACK_PREPACKED", "PREFILL_M_BUCKETS",
     "DECODE_M_BUCKETS", "DECODE_SPLIT_K_CANDIDATES",
-    "apply_epilogue", "bucket_m", "decode_lane", "default_backend",
-    "execute", "get_backend", "in_decode_lane", "lead_m",
-    "list_backends", "pack_blocks", "pack_for_plan", "plan",
+    "active_plan_store", "apply_epilogue", "as_plan_store", "bucket_m",
+    "decode_lane", "default_backend", "execute", "get_backend",
+    "host_fingerprint", "in_decode_lane", "lead_m", "list_backends",
+    "no_plan_store", "pack_blocks", "pack_for_plan", "plan",
     "plan_cache_clear", "plan_cache_info", "plan_for_packed",
-    "policy_table", "register_backend", "split_fused", "splitk_combine",
-    "unregister_backend", "use_backend", "validate_plan",
-    "vmem_clamped_count",
+    "plan_store_info", "policy_table", "register_backend",
+    "set_plan_store", "split_fused", "splitk_combine", "store_key",
+    "unregister_backend", "use_backend", "use_plan_store",
+    "validate_plan", "vmem_clamped_count",
 ]

@@ -1,0 +1,309 @@
+"""Persistent plan/autotune store — the plan cache that survives the process.
+
+The in-process LRU in ``gemm/policy`` dies with the process, so a fleet
+of serving processes pays the full cold-start tax (policy resolution,
+bit-exactness gates, measured autotune sweeps) on every boot.  The
+paper's sharpest deployment finding — a mis-tuned column-panel width
+costs ~2x — argues those decisions are worth *measuring* once and
+keeping: this module is the on-disk side of that discipline.
+
+A :class:`PlanStore` maps a **store key** — the policy request tuple
+``(m, n, k, dtype, weight_format, backend, num_cores, blocks, pack,
+transposed, sharding, epilogue, fused_n_splits, decode, split_k)``,
+i.e. the in-memory cache key minus ``validate`` — to a serialized
+:class:`~repro.gemm.plan.GemmPlan` plus its autotune provenance
+(``t_meas``, ``autotuned``).  ``policy.plan`` consults the *active*
+store before running ``_resolve``: a hit skips the analytic policy, the
+VMEM fit AND (for validated entries) the bit-exactness gate, so a
+second process with a populated store starts hot.
+
+Durability contract:
+
+  * **atomic writes** — ``save()`` writes a temp file in the target
+    directory and ``os.replace``s it over the store path; concurrent
+    writers race to a *complete* file, never a torn one.
+  * **corruption-tolerant loads** — a truncated/garbled/absent store
+    file yields an EMPTY store (``invalidated`` records why) and the
+    policy falls back to analytic resolution; a load never raises.
+  * **invalidation** — the file header carries ``schema``
+    (:data:`SCHEMA_VERSION`) and a ``host`` fingerprint (backend
+    platform, device kind, jax version, kernel VMEM budget); either
+    mismatching discards the stored plans, because measured winners and
+    VMEM-clamped block triples do not transfer across hosts or plan
+    semantics changes.
+
+Scope plumbing (mirrors ``gemm.use_backend``): the active store is the
+innermost :func:`use_plan_store` scope, else the process default set by
+:func:`set_plan_store`.  ``Engine`` wraps its pack + trace bodies in
+the scope so every plan its serving steps resolve goes through (and
+lands in) its store.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import json
+import os
+import platform
+import tempfile
+import threading
+from typing import Any, Iterator
+
+import jax
+
+from repro.gemm.plan import EpilogueSpec, GemmPlan
+
+# Bump when the GemmPlan schema / policy semantics change in a way that
+# makes stored plans untrustworthy (e.g. new plan-keyed fields, kernel
+# VMEM accounting changes).  A stored file with any other version is
+# discarded wholesale at load.
+SCHEMA_VERSION = 1
+
+StoreInfo = collections.namedtuple(
+    "StoreInfo", ["hits", "misses", "autotuned", "entries", "path"])
+
+
+def host_fingerprint() -> str:
+    """The invalidation fingerprint: measured winners and VMEM-fit
+    block triples are host properties, so plans never transfer across
+    (platform, device kind, jax version, VMEM budget) changes."""
+    from repro.kernels import panel_gemm as _kernel
+    try:
+        dev = jax.devices()[0]
+        dev_part = f"{dev.platform}:{getattr(dev, 'device_kind', '?')}"
+    except Exception:                      # no runtime yet: still usable
+        dev_part = "none"
+    return "|".join((platform.machine(), platform.system(), dev_part,
+                     f"jax-{jax.__version__}",
+                     f"vmem-{_kernel.VMEM_BUDGET}"))
+
+
+# ------------------------------------------------------- (de)serialization
+def _plan_to_doc(p: GemmPlan) -> dict:
+    d = dataclasses.asdict(p)
+    # EpilogueSpec nests as a dict via asdict already; normalize tuples
+    d["fused_n_splits"] = list(p.fused_n_splits)
+    return d
+
+
+def _plan_from_doc(d: dict) -> GemmPlan:
+    d = dict(d)
+    epi = d.get("epilogue")
+    d["epilogue"] = EpilogueSpec(**epi) if epi is not None else None
+    d["fused_n_splits"] = tuple(int(s) for s in d.get("fused_n_splits", ()))
+    p = GemmPlan(**d)
+    # cheap structural sanity so one garbled entry cannot poison dispatch
+    if not (p.m > 0 and p.n > 0 and p.k > 0 and p.block_m > 0
+            and p.block_n > 0 and p.block_k > 0 and p.split_k >= 1):
+        raise ValueError(f"implausible stored plan geometry: {d}")
+    return p
+
+
+class PlanStore:
+    """In-memory dict of resolved plans with an on-disk JSON home.
+
+    Thread-safe; ``lookup``/``put`` are what the policy calls on its
+    store-consulting path, ``save``/``load`` are the process-boundary
+    crossings.  Counters (``hits``/``misses``) are per-instance and
+    per-process — they are the warm-start observability ``ServeStats``
+    surfaces, independent of the in-memory plan cache's counters.
+    """
+
+    def __init__(self, path: str | os.PathLike | None = None, *,
+                 host: str | None = None):
+        self.path = os.fspath(path) if path is not None else None
+        self.host = host if host is not None else host_fingerprint()
+        self._plans: dict[str, dict] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.invalidated: str | None = None   # why a load discarded disk
+
+    # ------------------------------------------------------------ loading
+    @classmethod
+    def load(cls, path: str | os.PathLike, *,
+             host: str | None = None) -> "PlanStore":
+        """Load a store file; NEVER raises.  A missing, truncated,
+        garbled, schema-mismatched or host-mismatched file returns an
+        empty store (``invalidated`` says why) — the policy then falls
+        back to analytic resolution and the next ``save`` rewrites the
+        file whole."""
+        st = cls(path, host=host)
+        try:
+            with open(st.path, "r", encoding="utf-8") as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            return st                       # fresh store: not an error
+        except Exception as e:              # truncated / garbled / perms
+            st.invalidated = f"corrupt store file ({type(e).__name__})"
+            return st
+        if not isinstance(doc, dict):
+            st.invalidated = "corrupt store file (not an object)"
+            return st
+        if doc.get("schema") != SCHEMA_VERSION:
+            st.invalidated = (f"schema {doc.get('schema')!r} != "
+                              f"{SCHEMA_VERSION}")
+            return st
+        if doc.get("host") != st.host:
+            st.invalidated = "host fingerprint mismatch"
+            return st
+        plans = doc.get("plans")
+        if not isinstance(plans, dict):
+            st.invalidated = "corrupt store file (no plans table)"
+            return st
+        for key, ent in plans.items():
+            try:
+                p = _plan_from_doc(ent["plan"])
+                st._plans[key] = {
+                    "plan": p,
+                    "t_meas": ent.get("t_meas"),
+                    "autotuned": bool(ent.get("autotuned", False)),
+                }
+            except Exception:
+                continue                    # skip the one bad entry
+        return st
+
+    # ----------------------------------------------------------- querying
+    def lookup(self, key: str) -> GemmPlan | None:
+        with self._lock:
+            ent = self._plans.get(key)
+            if ent is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            return ent["plan"]
+
+    def entry(self, key: str) -> dict | None:
+        """The full record (plan + provenance) without counting."""
+        with self._lock:
+            ent = self._plans.get(key)
+            return dict(ent) if ent is not None else None
+
+    def put(self, key: str, plan: GemmPlan, *, t_meas: float | None = None,
+            autotuned: bool = False) -> None:
+        with self._lock:
+            self._plans[key] = {"plan": plan, "t_meas": t_meas,
+                                "autotuned": autotuned}
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._plans)
+
+    def keys(self) -> list[str]:
+        with self._lock:
+            return list(self._plans)
+
+    def info(self) -> StoreInfo:
+        with self._lock:
+            auto = sum(1 for e in self._plans.values() if e["autotuned"])
+            return StoreInfo(self.hits, self.misses, auto,
+                             len(self._plans), self.path)
+
+    # ------------------------------------------------------------- saving
+    def save(self, path: str | os.PathLike | None = None) -> str:
+        """Atomically write the store: temp file in the destination
+        directory, then ``os.replace`` — a reader (or a racing writer)
+        sees either the old complete file or the new complete file."""
+        path = os.fspath(path) if path is not None else self.path
+        if path is None:
+            raise ValueError("PlanStore has no path; pass save(path=...)")
+        with self._lock:
+            doc = {
+                "schema": SCHEMA_VERSION,
+                "host": self.host,
+                "plans": {k: {"plan": _plan_to_doc(e["plan"]),
+                              "t_meas": e["t_meas"],
+                              "autotuned": e["autotuned"]}
+                          for k, e in self._plans.items()},
+            }
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(prefix=".planstore.", suffix=".tmp",
+                                   dir=d)
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                json.dump(doc, f, indent=1)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return path
+
+
+# --------------------------------------------------------- active store
+# The store ``policy.plan`` consults: innermost use_plan_store scope,
+# else the process default.  _OFF is the explicit "no store" scope the
+# measured autotuner uses so its candidate resolutions never read (or
+# pollute) the store it is about to populate.
+_OFF = object()
+_default_store: PlanStore | None = None
+_SCOPE = threading.local()
+
+
+def set_plan_store(store: PlanStore | None) -> PlanStore | None:
+    """Set the process-default plan store; returns the previous one."""
+    global _default_store
+    prev, _default_store = _default_store, store
+    return prev
+
+
+def active_plan_store() -> PlanStore | None:
+    stack = getattr(_SCOPE, "stack", None)
+    if stack:
+        top = stack[-1]
+        return None if top is _OFF else top
+    return _default_store
+
+
+@contextlib.contextmanager
+def use_plan_store(store: PlanStore | None) -> Iterator[None]:
+    """Scope ``store`` as the active plan store (``use_backend``
+    analogue).  ``None`` is a no-op — the ambient store (outer scope or
+    process default) stays active, so wrappers can thread an optional
+    store unconditionally."""
+    if store is None:
+        yield
+        return
+    stack = getattr(_SCOPE, "stack", None)
+    if stack is None:
+        stack = _SCOPE.stack = []
+    stack.append(store)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+@contextlib.contextmanager
+def no_plan_store() -> Iterator[None]:
+    """Scope with NO active store — candidate resolutions inside a
+    measured autotune sweep must come from the analytic policy, not the
+    store being populated."""
+    stack = getattr(_SCOPE, "stack", None)
+    if stack is None:
+        stack = _SCOPE.stack = []
+    stack.append(_OFF)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def plan_store_info() -> StoreInfo | None:
+    """Counters of the active store (None when no store is active) —
+    what ``ServeStats.plan_store`` snapshots."""
+    st = active_plan_store()
+    return st.info() if st is not None else None
+
+
+def as_plan_store(store: "PlanStore | str | os.PathLike | None",
+                  ) -> PlanStore | None:
+    """Coerce an Engine-style ``plan_store=`` argument: a path loads
+    (corruption-tolerantly), a PlanStore passes through, None is None."""
+    if store is None or isinstance(store, PlanStore):
+        return store
+    return PlanStore.load(store)

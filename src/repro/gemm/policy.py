@@ -37,6 +37,7 @@ import jax
 
 from repro.core import bitexact, packing, scheduler
 from repro.gemm import backends as _backends
+from repro.gemm import plan_store as _plan_store
 from repro.gemm.plan import (EpilogueSpec, GemmPlan, LEVER_FINE_PANELS,
                              LEVER_PREPACK, PACK_NONE, PACK_PERCALL,
                              PACK_PREPACKED)
@@ -69,6 +70,11 @@ _cache: "collections.OrderedDict[tuple, GemmPlan]" = collections.OrderedDict()
 _cache_lock = threading.Lock()
 _hits = 0
 _misses = 0
+# per-key in-flight resolutions (bugfix: two threads missing on one key
+# used to both run _resolve — and its bit-exactness/autotune gate —
+# outside the lock, double-counting the miss; now the first thread owns
+# the resolution and everyone else waits on its Event and counts a hit)
+_inflight: dict[tuple, threading.Event] = {}
 
 
 def plan_cache_info() -> CacheInfo:
@@ -85,11 +91,37 @@ def vmem_clamped_count() -> int:
 
 
 def plan_cache_clear() -> None:
+    """Reset the plan cache to a fresh-process state: entries, the
+    hit/miss counters ``plan_cache_info`` reports (stale counters make
+    warm-start store metrics unreadable), and the clamp warn-state —
+    all under the cache lock, atomically with respect to ``plan()``."""
     global _hits, _misses
     with _cache_lock:
         _cache.clear()
         _hits = _misses = 0
-    _vmem_warned.clear()
+        _vmem_warned.clear()
+
+
+def _warn_key(p: GemmPlan) -> tuple:
+    return (p.m, p.n, p.k, p.dtype, p.backend, p.weight_format)
+
+
+def _cache_insert(key: tuple, p: GemmPlan) -> None:
+    """Insert under the LRU bound.  Bugfix: when a clamped plan is
+    evicted, its ``_vmem_warned`` entry is dropped too (unless another
+    cached plan still maps to the same warn key) — previously the set
+    grew without bound in long-lived serving with many clamped shapes,
+    and a re-resolved evicted plan never re-warned."""
+    with _cache_lock:
+        _cache[key] = p
+        _cache.move_to_end(key)
+        while len(_cache) > _CACHE_MAXSIZE:
+            _, old = _cache.popitem(last=False)
+            if old.vmem_clamped:
+                wk = _warn_key(old)
+                if not any(q.vmem_clamped and _warn_key(q) == wk
+                           for q in _cache.values()):
+                    _vmem_warned.discard(wk)
 
 
 def _dtype_name(dtype: Any) -> str:
@@ -464,6 +496,50 @@ def _bitexact_gate(bm: int, bn: int, bk: int, *,
 
 
 # ------------------------------------------------------------- public API
+def _plan_key(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
+              backend: str | None = None,
+              num_cores: int = DEFAULT_NUM_CORES,
+              block_m: int | None = None, block_n: int | None = None,
+              block_k: int | None = None, pack: str | None = None,
+              transposed: bool = False, sharding: Any = None,
+              validate: bool = False,
+              epilogue: EpilogueSpec | None = None,
+              fused_n_splits: tuple = (), weight_format: str = "fp32",
+              decode: bool = False,
+              split_k: int | None = None) -> tuple:
+    """The normalized in-memory cache key for a ``plan()`` request
+    (``validate`` at index ``_KEY_VALIDATE_IDX``; the persistent store
+    key is this tuple minus that element — see :func:`store_key`)."""
+    backend = _backends.resolve_backend(backend)
+    dtype = _dtype_name(dtype)
+    skey = _sharding_key(sharding)
+    if epilogue is not None and epilogue.is_noop:
+        epilogue = None
+    fused_n_splits = tuple(int(s) for s in fused_n_splits)
+    return (int(m), int(n), int(k), dtype, backend, num_cores, block_m,
+            block_n, block_k, pack, bool(transposed), skey, bool(validate),
+            epilogue, fused_n_splits, weight_format, bool(decode), split_k)
+
+
+_KEY_VALIDATE_IDX = 12
+
+
+def store_key(m: int, n: int, k: int, **kw) -> str:
+    """The persistent-store key for a policy request: the normalized
+    cache key minus ``validate`` (a validated entry serves both), as a
+    deterministic string.  Same keyword surface as :func:`plan` (minus
+    ``validate``); the measured autotuner commits winners under the key
+    the later policy-position request (no block overrides) will ask."""
+    kw.pop("validate", None)
+    key = _plan_key(m, n, k, **kw)
+    return repr(key[:_KEY_VALIDATE_IDX] + key[_KEY_VALIDATE_IDX + 1:])
+
+
+def _store_key_of(cache_key: tuple) -> str:
+    return repr(cache_key[:_KEY_VALIDATE_IDX]
+                + cache_key[_KEY_VALIDATE_IDX + 1:])
+
+
 def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
          backend: str | None = None, num_cores: int = DEFAULT_NUM_CORES,
          block_m: int | None = None, block_n: int | None = None,
@@ -493,38 +569,69 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
     explicitly.  Decode plans are plan-keyed separately and take the
     decode policy arm: skinny block_m, forced prepack, and ``split_k``
     resolved by :func:`_decode_split_k` unless given explicitly.
+
+    When a plan store is active (``gemm.use_plan_store`` scope or the
+    process default), an in-memory miss consults the store before
+    ``_resolve``: a hit adopts the stored plan — skipping the analytic
+    policy and, for entries committed through the bit-exactness gate,
+    the gate itself — and every freshly resolved plan is recorded back
+    into the store (persist with ``store.save()``).  Concurrent callers
+    missing on one key share a single resolution (per-key in-flight
+    dedup): the gate and the miss are paid exactly once.
     """
     global _hits, _misses
-    backend = _backends.resolve_backend(backend)
-    dtype = _dtype_name(dtype)
-    skey = _sharding_key(sharding)
     if decode is None:
         decode = in_decode_lane()
-    if epilogue is not None and epilogue.is_noop:
-        epilogue = None
-    fused_n_splits = tuple(int(s) for s in fused_n_splits)
-    key = (int(m), int(n), int(k), dtype, backend, num_cores, block_m,
-           block_n, block_k, pack, bool(transposed), skey, bool(validate),
-           epilogue, fused_n_splits, weight_format, bool(decode), split_k)
-    with _cache_lock:
-        hit = _cache.get(key)
-        if hit is not None:
-            _hits += 1
-            _cache.move_to_end(key)
-            return hit
-        _misses += 1
-    p = _resolve(int(m), int(n), int(k), dtype=dtype, backend=backend,
-                 num_cores=num_cores, block_m=block_m, block_n=block_n,
-                 block_k=block_k, pack=pack, transposed=bool(transposed),
-                 sharding_key=skey, validate=validate, epilogue=epilogue,
-                 fused_n_splits=fused_n_splits,
-                 weight_format=weight_format, decode=bool(decode),
-                 split_k=split_k)
-    with _cache_lock:
-        _cache[key] = p
-        while len(_cache) > _CACHE_MAXSIZE:
-            _cache.popitem(last=False)
-    return p
+    key = _plan_key(m, n, k, dtype=dtype, backend=backend,
+                    num_cores=num_cores, block_m=block_m, block_n=block_n,
+                    block_k=block_k, pack=pack, transposed=transposed,
+                    sharding=sharding, validate=validate, epilogue=epilogue,
+                    fused_n_splits=fused_n_splits,
+                    weight_format=weight_format, decode=decode,
+                    split_k=split_k)
+    (m, n, k, dtype, backend, num_cores, block_m, block_n, block_k, pack,
+     transposed, skey, validate, epilogue, fused_n_splits, weight_format,
+     decode, split_k) = key
+    while True:
+        with _cache_lock:
+            hit = _cache.get(key)
+            if hit is not None:
+                _hits += 1
+                _cache.move_to_end(key)
+                return hit
+            ev = _inflight.get(key)
+            if ev is None:
+                ev = _inflight[key] = threading.Event()
+                _misses += 1
+                break                       # we own this resolution
+        ev.wait()                           # another thread resolves it;
+        # loop: adopt its cached plan (a hit), or — if it failed —
+        # become the owner ourselves
+    try:
+        store = _plan_store.active_plan_store()
+        p = None
+        if store is not None:
+            sp = store.lookup(_store_key_of(key))
+            if (sp is not None and sp.shape == (m, n, k)
+                    and (not validate or sp.validated)):
+                p = sp
+        if p is None:
+            p = _resolve(m, n, k, dtype=dtype, backend=backend,
+                         num_cores=num_cores, block_m=block_m,
+                         block_n=block_n, block_k=block_k, pack=pack,
+                         transposed=transposed, sharding_key=skey,
+                         validate=validate, epilogue=epilogue,
+                         fused_n_splits=fused_n_splits,
+                         weight_format=weight_format, decode=decode,
+                         split_k=split_k)
+            if store is not None:
+                store.put(_store_key_of(key), p)
+        _cache_insert(key, p)
+        return p
+    finally:
+        with _cache_lock:
+            _inflight.pop(key, None)
+        ev.set()
 
 
 def _packed_sharding(pw: packing.PackedWeight):

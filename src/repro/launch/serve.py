@@ -71,6 +71,14 @@ def main():
                          "a cached prompt prefix reuse its KV pages "
                          "(refcounted, COW-forked at the divergence "
                          "page) and prefill only the divergent tail")
+    ap.add_argument("--plan-store", default=None, metavar="PATH",
+                    help="persistent plan/autotune store (JSON): loaded "
+                         "corruption-tolerantly at startup (a populated "
+                         "store makes the engine start hot — zero "
+                         "analytic re-resolution and zero bit-exactness "
+                         "gate runs; measured-autotuned winners adopted), "
+                         "updated with this run's plans, saved at exit. "
+                         "Pre-populate with repro.launch.autotune")
     ap.add_argument("--warmup", action="store_true",
                     help="pre-populate the plan cache and compile the "
                          "serving steps (prefill + decode buckets) "
@@ -87,10 +95,18 @@ def main():
         prompts = jnp.asarray(rng.standard_normal(
             (args.batch, args.prompt_len, cfg.d_model)), cfg.cdtype)
 
+    store = (gemm_api.PlanStore.load(args.plan_store)
+             if args.plan_store else None)
+    if store is not None:
+        info = store.info()
+        print(f"plan store {args.plan_store}: {info.entries} entries "
+              f"loaded ({info.autotuned} measured-autotuned)"
+              + (f"  [invalidated: {store.invalidated}]"
+                 if store.invalidated else ""))
     t0 = time.perf_counter()
     eng = Engine(cfg, params, mesh=mesh, max_len=args.max_len, packed=True,
                  backend=args.backend, fuse=not args.no_fusion,
-                 quant=args.quant)
+                 quant=args.quant, plan_store=store)
     print(f"model load + pack (untimed in per-call metrics): "
           f"{time.perf_counter() - t0:.2f}s  "
           f"[fusion {'off' if args.no_fusion else 'on'}, "
@@ -114,12 +130,16 @@ def main():
                               page_size=args.page_size,
                               megastep_depth=args.megastep_depth)
         pc = wt.pop("plan_cache")
+        ps = wt.pop("plan_store", None)
         n_bucket = wt.pop("decode_bucket_plans")
         steps = ", ".join(f"{k} {v * 1e3:.0f}ms" for k, v in wt.items())
         print(f"warmup ({time.perf_counter() - t0:.2f}s): {steps}; "
               f"{n_bucket} decode-bucket plans pre-resolved, "
               f"{pc.currsize} plans cached — first serving tick pays "
               f"no jit/plan latency")
+        if ps is not None:
+            print(f"  plan store: {ps.hits} hits / {ps.misses} misses "
+                  f"({ps.autotuned} autotuned entries adopted)")
     gen, stats = eng.generate(prompts, args.max_new)
     print(f"packed engine (fused={stats.fused}, quant={stats.quant}): "
           f"prefill {stats.prefill_tps:,.0f} tok/s, "
@@ -129,6 +149,10 @@ def main():
           f"({stats.plan_cache.currsize} cached, "
           f"{stats.vmem_clamped_plans} vmem-clamped)"
           if stats.plan_cache else "")
+    if stats.plan_store is not None:
+        sp = stats.plan_store
+        print(f"  plan store: {sp.hits} hits / {sp.misses} misses "
+              f"({sp.autotuned} autotuned, {sp.entries} entries)")
     if args.compare_percall:
         eng2 = Engine(cfg, params, mesh=mesh, max_len=args.max_len,
                       packed=False, backend=args.backend)
@@ -195,6 +219,11 @@ def main():
                   f"reused, {px.cow_forks} COW forks, "
                   f"{px.evicted_pages} pages evicted, "
                   f"{px.cached_pages} pages cached at end")
+
+    if store is not None:
+        store.save()
+        print(f"plan store saved -> {store.path} "
+              f"({store.info().entries} entries)")
 
 
 if __name__ == "__main__":

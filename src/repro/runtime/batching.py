@@ -75,7 +75,9 @@ class ServeStats:
     ``gemm.plan_cache_info()`` at run end (plan churn — misses moving in
     steady state means chunk bucketing broke) and ``vmem_clamped_plans``
     counts cached plans whose blocks the policy shrank to fit the
-    kernel VMEM budget; ``quant`` is the engine's quantized weight
+    kernel VMEM budget; ``plan_store`` snapshots the engine's persistent
+    plan-store counters (``gemm.StoreInfo``; None when the engine runs
+    without a store); ``quant`` is the engine's quantized weight
     format (None: fp32).
 
     Per-phase latency breakdown (the decode fast lane's observability):
@@ -99,6 +101,7 @@ class ServeStats:
     quant: str | None = None        # engine's quantized weight format
     plan_cache: tuple | None = None
     vmem_clamped_plans: int = 0
+    plan_store: tuple | None = None
     requests: list[RequestStats] = dataclasses.field(default_factory=list)
     prefill_tick_ms: list = dataclasses.field(default_factory=list)
     decode_tick_ms: list = dataclasses.field(default_factory=list)

@@ -50,7 +50,12 @@ class GenStats:
     ``plan_cache`` snapshots ``gemm.plan_cache_info()`` after the run —
     (hits, misses, maxsize, currsize) — and ``vmem_clamped_plans``
     counts cached plans whose blocks the policy shrank to fit the
-    kernel VMEM budget.
+    kernel VMEM budget.  ``plan_store`` snapshots the engine's
+    persistent plan store counters (``gemm.StoreInfo``: store hits /
+    misses / autotuned entries / total entries; None when the engine
+    runs without a store) — warm-start observability: a second process
+    booting from a populated store shows ``hits == plans needed`` and
+    zero autotune/gate work.
     """
     prefill_tokens: int = 0
     decode_tokens: int = 0
@@ -60,6 +65,7 @@ class GenStats:
     quant: str | None = None
     plan_cache: tuple | None = None
     vmem_clamped_plans: int = 0
+    plan_store: tuple | None = None
 
     @property
     def prefill_tps(self):
@@ -76,12 +82,23 @@ class Engine:
                  block_k: int | None = None, donate_cache: bool = True,
                  backend: str | None = None, fuse: bool = True,
                  quant: str | None = None,
-                 keep_fp32=("head", "embed")):
+                 keep_fp32=("head", "embed"),
+                 plan_store=None):
         """``backend`` pins this engine's GEMM backend (a registry name
         from ``repro.gemm.list_backends()``); None keeps the process
         default.  The choice is scoped to this engine's traces — two
         engines with different backends coexist in one process, which the
         old ``REPRO_GEMM_IMPL`` process global could not express.
+
+        ``plan_store`` (a ``gemm.PlanStore`` or a path, loaded
+        corruption-tolerantly) scopes a PERSISTENT plan store over this
+        engine's pack, trace and warmup paths: every plan they resolve
+        is looked up in the store first (a populated store makes a
+        fresh process start hot — no analytic re-resolution, no
+        bit-exactness gate re-runs, measured-autotuned winners adopted)
+        and recorded back on a miss.  The caller persists with
+        ``engine.plan_store.save()`` (``launch/serve --plan-store``
+        does this at exit); ``launch/autotune`` pre-populates one.
 
         ``fuse`` (default on) packs same-input projection groups
         horizontally at load — Q/K/V and gate+up each become one fused
@@ -103,6 +120,8 @@ class Engine:
         self.backend = backend
         self.fused = bool(packed and fuse)
         self.quant = quant
+        self.plan_store = gemm_api.as_plan_store(plan_store)
+        store = self.plan_store            # closed over by the step defs
         if backend is not None:
             gemm_api.get_backend(backend)       # fail fast on a typo
         if quant is not None and not packed:
@@ -112,18 +131,22 @@ class Engine:
         shard_fn = Sh.activation_sharder(mesh) if mesh is not None else None
         if packed:
             # ---- model load: pack once (lever 2). Untimed by protocol.
+            # The pack-time plan resolutions (pack_blocks per weight)
+            # run under the engine's plan store, so a populated store
+            # hands back its (possibly measured-autotuned) blocks.
             shardings = None
-            if mesh is not None:
-                packed_abs = jax.eval_shape(
-                    lambda p: model_zoo.pack_for_inference(
-                        cfg, p, block_n=block_n, block_k=block_k,
-                        fuse=fuse, quant=quant, keep_fp32=keep_fp32),
-                    params)
-                shardings = Sh.param_shardings(packed_abs, mesh)
-            self.params = model_zoo.pack_for_inference(
-                cfg, params, block_n=block_n, block_k=block_k,
-                shardings=shardings, fuse=fuse, quant=quant,
-                keep_fp32=keep_fp32)
+            with gemm_api.use_plan_store(store):
+                if mesh is not None:
+                    packed_abs = jax.eval_shape(
+                        lambda p: model_zoo.pack_for_inference(
+                            cfg, p, block_n=block_n, block_k=block_k,
+                            fuse=fuse, quant=quant, keep_fp32=keep_fp32),
+                        params)
+                    shardings = Sh.param_shardings(packed_abs, mesh)
+                self.params = model_zoo.pack_for_inference(
+                    cfg, params, block_n=block_n, block_k=block_k,
+                    shardings=shardings, fuse=fuse, quant=quant,
+                    keep_fp32=keep_fp32)
         else:
             self.params = params
             if mesh is not None:
@@ -138,13 +161,15 @@ class Engine:
         # prefill plans of the same shapes.  Prefill traces never enter the
         # lane, so their plans and numerics are untouched.
         def _prefill(params, inputs):
-            with gemm_api.use_backend(backend):
+            with gemm_api.use_backend(backend), \
+                    gemm_api.use_plan_store(store):
                 return transformer.prefill(cfg, params, inputs,
                                            max_len=max_len,
                                            shard_fn=shard_fn)
 
         def _decode(params, cache, tokens):
-            with gemm_api.use_backend(backend), gemm_api.decode_lane():
+            with gemm_api.use_backend(backend), gemm_api.decode_lane(), \
+                    gemm_api.use_plan_store(store):
                 return transformer.decode_step(cfg, params, cache, tokens,
                                                shard_fn=shard_fn)
 
@@ -163,7 +188,8 @@ class Engine:
         # pool's decode pipeline match generate's device-side loop.
         def _paged_prefill(params, pages, page_table, lens, tokens,
                            logit_index, *, page_size):
-            with gemm_api.use_backend(backend):
+            with gemm_api.use_backend(backend), \
+                    gemm_api.use_plan_store(store):
                 cache = {"layers": pages, "page_table": page_table,
                          "lens": lens}
                 logits, cache = transformer.prefill_chunk(
@@ -189,7 +215,8 @@ class Engine:
 
         def _paged_decode(params, pages, page_table, lens, write_mask,
                           last_tokens, *, page_size):
-            with gemm_api.use_backend(backend), gemm_api.decode_lane():
+            with gemm_api.use_backend(backend), gemm_api.decode_lane(), \
+                    gemm_api.use_plan_store(store):
                 return _decode_tick(params, pages, page_table, lens,
                                     write_mask, last_tokens,
                                     page_size=page_size)
@@ -209,7 +236,8 @@ class Engine:
             Returns (last tokens, [max_depth, slots] token history —
             rows past ``n_ticks`` are zeros the host never reads, pages).
             """
-            with gemm_api.use_backend(backend), gemm_api.decode_lane():
+            with gemm_api.use_backend(backend), gemm_api.decode_lane(), \
+                    gemm_api.use_plan_store(store):
                 hist0 = jnp.zeros((max_depth, last_tokens.shape[0]),
                                   jnp.int32)
                 step = write_mask.astype(jnp.int32)
@@ -379,13 +407,16 @@ class Engine:
             is_leaf=lambda x: isinstance(x, PackedWeight))
             if isinstance(leaf, PackedWeight)]
         n_plans = 0
-        with gemm_api.use_backend(self.backend):
+        with gemm_api.use_backend(self.backend), \
+                gemm_api.use_plan_store(self.plan_store):
             for bucket in gemm_api.DECODE_M_BUCKETS:
                 for pw in packs:
                     gemm_api.plan_for_packed(bucket, pw, decode=True)
                     n_plans += 1
         timings["decode_bucket_plans"] = n_plans
         timings["plan_cache"] = gemm_api.plan_cache_info()
+        if self.plan_store is not None:
+            timings["plan_store"] = self.plan_store.info()
         return timings
 
     # ------------------------------------------------------------ generate
@@ -419,6 +450,8 @@ class Engine:
         stats.decode_tokens += b * max_new_tokens      # emitted per row
         stats.plan_cache = gemm_api.plan_cache_info()
         stats.vmem_clamped_plans = gemm_api.vmem_clamped_count()
+        if self.plan_store is not None:
+            stats.plan_store = self.plan_store.info()
         return jnp.stack(out, axis=1), stats
 
     @staticmethod
@@ -463,6 +496,8 @@ class Engine:
         stats.quant = self.quant if self.packed else None
         stats.plan_cache = gemm_api.plan_cache_info()
         stats.vmem_clamped_plans = gemm_api.vmem_clamped_count()
+        if self.plan_store is not None:
+            stats.plan_store = self.plan_store.info()
         return outs, stats
 
     # -------------------------------------- legacy phase-locked baseline
@@ -509,4 +544,6 @@ class Engine:
                 results[i] = gen[r, :mn[i]]
         stats.plan_cache = gemm_api.plan_cache_info()
         stats.vmem_clamped_plans = gemm_api.vmem_clamped_count()
+        if self.plan_store is not None:
+            stats.plan_store = self.plan_store.info()
         return [results[i] for i in range(len(requests))], stats

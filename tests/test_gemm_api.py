@@ -4,6 +4,7 @@ plan-cache hit/miss/eviction behavior, bit-exactness of execute vs
 kernels/ref in interpret mode, the retired-shim contract, and the
 backend registry hook.  Deliberately hypothesis-free — this module must
 run on a bare container."""
+import time
 import warnings
 
 import numpy as np
@@ -418,3 +419,150 @@ def test_linear_packed_routes_through_plan_cache():
     assert G.plan_cache_info().misses >= 1
     linear(x, pw)
     assert G.plan_cache_info().hits >= 1
+
+
+# ----------------------------------------- plan-cache bugfix regressions
+def test_vmem_warn_state_evicted_with_plan():
+    """Bugfix: ``_vmem_warned`` entries die with their cached plan.
+
+    Before the fix the warn-once set only ever grew: a clamped plan's
+    LRU eviction left its warn key behind, so (a) the set leaked
+    unboundedly under plan churn and (b) a re-resolved clamp of the
+    same shape was silently un-warned forever."""
+    from repro.gemm import policy as pol
+    p = G.plan(128, 4096, 8192, block_n=2048, block_k=4096)
+    assert p.vmem_clamped
+    wk = pol._warn_key(p)
+    assert wk in pol._vmem_warned
+    # churn the cache until the clamped plan is LRU-evicted
+    for i in range(pol._CACHE_MAXSIZE + 1):
+        G.plan(8, 128, 128 * (i + 1), block_n=128, block_k=128)
+    from repro.gemm.policy import _plan_key
+    assert _plan_key(128, 4096, 8192, block_n=2048,
+                     block_k=4096) not in pol._cache
+    assert wk not in pol._vmem_warned     # warn state evicted alongside
+    # ...so the NEXT resolution of that shape warns again
+    with warnings.catch_warnings(record=True) as wlog:
+        warnings.simplefilter("always")
+        G.plan(128, 4096, 8192, block_n=2048, block_k=4096)
+    assert any("VMEM" in str(w.message) for w in wlog)
+
+
+def test_vmem_warn_state_kept_while_sibling_cached():
+    """A warn key shared by two cached clamped plans (same logical
+    shape, different explicit blocks) survives one sibling's eviction —
+    warn-once stays once while any holder is live."""
+    from repro.gemm import policy as pol
+    a = G.plan(128, 4096, 8192, block_n=2048, block_k=4096)
+    b = G.plan(128, 4096, 8192, block_n=4096, block_k=2048)
+    assert a.vmem_clamped and b.vmem_clamped
+    wk = pol._warn_key(a)
+    assert pol._warn_key(b) == wk and wk in pol._vmem_warned
+    with pol._cache_lock:                 # evict exactly plan ``a``
+        ka = next(k for k, v in pol._cache.items() if v is a)
+        del pol._cache[ka]
+        # simulate the eviction path's warn-state scan
+        if not any(q.vmem_clamped and pol._warn_key(q) == wk
+                   for q in pol._cache.values()):
+            pol._vmem_warned.discard(wk)
+    assert wk in pol._vmem_warned         # sibling ``b`` still cached
+
+
+def test_plan_cache_clear_resets_counters():
+    """Bugfix contract: ``plan_cache_clear`` resets entries AND both
+    hit/miss counters AND the vmem warn/clamp observability — a cleared
+    cache reads (0, 0, maxsize, 0) exactly, so tests and benchmarks
+    can treat counter deltas as absolute."""
+    from repro.gemm import policy as pol
+    G.plan(128, 2048, 2048)
+    G.plan(128, 2048, 2048)
+    G.plan(128, 4096, 8192, block_n=2048, block_k=4096)  # clamped
+    info = G.plan_cache_info()
+    assert info.hits == 1 and info.misses == 2 and info.currsize == 2
+    assert G.vmem_clamped_count() == 1 and pol._vmem_warned
+    G.plan_cache_clear()
+    info = G.plan_cache_info()
+    assert (info.hits, info.misses, info.currsize) == (0, 0, 0)
+    assert info.maxsize == pol._CACHE_MAXSIZE
+    assert G.vmem_clamped_count() == 0
+    assert not pol._vmem_warned
+
+
+def test_concurrent_plan_single_resolve(monkeypatch):
+    """Bugfix: N threads racing one cold key share ONE resolution.
+
+    Before the per-key in-flight dedup, every racer that read the miss
+    before the first writer published ran its own ``_resolve`` — N
+    analytic resolutions (and, with validate=True, N bit-exactness gate
+    runs) for one plan, and the miss counter over-counted."""
+    import threading
+    from repro.gemm import policy as pol
+    calls = []
+    real = pol._resolve
+
+    def counting(*a, **kw):
+        calls.append(threading.get_ident())
+        time.sleep(0.05)              # widen the race window
+        return real(*a, **kw)
+
+    monkeypatch.setattr(pol, "_resolve", counting)
+    n_threads = 8
+    barrier = threading.Barrier(n_threads)
+    plans, errs = [], []
+
+    def racer():
+        try:
+            barrier.wait()
+            plans.append(G.plan(96, 1536, 1536, validate=True))
+        except Exception as e:        # pragma: no cover
+            errs.append(e)
+
+    ts = [threading.Thread(target=racer) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs
+    assert len(calls) == 1, f"{len(calls)} resolves for one key"
+    assert len({id(p) for p in plans}) == 1    # all adopted one object
+    info = G.plan_cache_info()
+    assert info.misses == 1 and info.hits == n_threads - 1
+
+
+def test_inflight_owner_failure_hands_off(monkeypatch):
+    """A failed owner releases its waiters, and one of them becomes the
+    new owner instead of caching the failure or deadlocking."""
+    import threading
+    from repro.gemm import policy as pol
+    real = pol._resolve
+    fail_first = [True]
+    calls = []
+
+    def flaky(*a, **kw):
+        calls.append(1)
+        time.sleep(0.05)
+        if fail_first[0]:
+            fail_first[0] = False
+            raise RuntimeError("injected resolve failure")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(pol, "_resolve", flaky)
+    results, errs = [], []
+    barrier = threading.Barrier(2)
+
+    def racer():
+        try:
+            barrier.wait()
+            results.append(G.plan(80, 1280, 1280))
+        except RuntimeError as e:
+            errs.append(e)
+
+    ts = [threading.Thread(target=racer) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(errs) == 1 and "injected" in str(errs[0])
+    assert len(results) == 1               # the survivor got a real plan
+    assert len(calls) == 2                 # failed owner + take-over
+    assert not pol._inflight               # no leaked in-flight events

@@ -1,0 +1,336 @@
+"""Persistent plan/autotune store tests (the plan-store acceptance
+grid): disk round-trip fidelity, corruption tolerance (a broken store
+file NEVER crashes a server — it degrades to the analytic policy),
+schema/host invalidation, atomic concurrent writes, the warm-start
+contract (a second process booting from a populated store resolves its
+whole plan surface with ZERO analytic resolutions and ZERO
+bit-exactness gate runs — store hits == plans needed), and the
+measured-autotune commit path (gate-checked winners only)."""
+import json
+import os
+import threading
+
+import pytest
+
+from repro import gemm as G
+from repro.core import autotune
+from repro.gemm import plan_store as PS
+from repro.gemm import policy as pol
+from repro.models.model_zoo import PAPER_GEMM_SHAPES, PAPER_M
+
+
+@pytest.fixture(autouse=True)
+def _fresh(monkeypatch):
+    G.plan_cache_clear()
+    monkeypatch.setattr(PS, "_default_store", None, raising=False)
+    yield
+    G.plan_cache_clear()
+
+
+def _resolve_surface(shapes=PAPER_GEMM_SHAPES):
+    """One process's plan surface: the paper's twelve prefill GEMMs at
+    M = PAPER_M plus the decode ladder (every DECODE_M_BUCKETS width,
+    decode policy arm) per shape."""
+    plans = []
+    for _, _, n, k in shapes:
+        plans.append(G.plan(PAPER_M, n, k))
+        for bucket in G.DECODE_M_BUCKETS:
+            plans.append(G.plan(bucket, n, k, decode=True))
+    return plans
+
+
+# -------------------------------------------------------------- round-trip
+def test_store_roundtrip(tmp_path):
+    path = tmp_path / "plans.json"
+    store = PS.PlanStore(path)
+    with G.use_plan_store(store):
+        plans = _resolve_surface(PAPER_GEMM_SHAPES[:3])
+    info = store.info()
+    assert info.misses == len(plans) and info.hits == 0
+    assert info.entries == len(plans)
+    saved = store.save()
+    assert saved == os.fspath(path) and os.path.exists(path)
+
+    fresh = PS.PlanStore.load(path)
+    assert fresh.invalidated is None
+    assert len(fresh) == len(plans)
+    for key in store.keys():
+        assert fresh.lookup(key) == store.entry(key)["plan"]
+
+
+def test_store_roundtrip_preserves_plan_detail(tmp_path):
+    """Every plan facet the executor dispatches on survives the disk
+    round-trip: blocks, lever, pack mode, epilogue, quant format,
+    decode/split-K, validated."""
+    path = tmp_path / "plans.json"
+    store = PS.PlanStore(path)
+    epi = G.EpilogueSpec(glu="silu", residual=True)
+    with G.use_plan_store(store):
+        a = G.plan(128, 1024, 2048, epilogue=epi,
+                   fused_n_splits=(512, 512))
+        b = G.plan(8, 2048, 2048, decode=True)
+        c = G.plan(128, 2048, 1024, weight_format="int8")
+        d = G.plan(64, 512, 512, validate=True)
+    store.save()
+    fresh = PS.PlanStore.load(path)
+    keyed = [
+        (a, G.store_key(128, 1024, 2048, epilogue=epi,
+                        fused_n_splits=(512, 512))),
+        (b, G.store_key(8, 2048, 2048, decode=True)),
+        (c, G.store_key(128, 2048, 1024, weight_format="int8")),
+        (d, G.store_key(64, 512, 512, validate=True)),
+    ]
+    for p, skey in keyed:
+        q = fresh.lookup(skey)
+        assert q == p, (p, q)
+        assert q.validated == p.validated
+    assert fresh.lookup("no-such-key") is None
+    assert fresh.info().misses == 1
+
+
+# ----------------------------------------------------- corruption tolerance
+@pytest.mark.parametrize("blob", [
+    b"this is not json {",                       # garbage
+    b'{"schema": 1, "plans"',                    # truncated mid-write
+    b"",                                         # empty file
+    b'{"schema": 1}',                            # missing sections
+    b'[1, 2, 3]',                                # wrong top-level type
+])
+def test_store_load_tolerates_corruption(tmp_path, blob):
+    """A corrupt store file NEVER raises: load returns an empty store
+    with the reason recorded, and the process runs on the analytic
+    policy."""
+    path = tmp_path / "plans.json"
+    path.write_bytes(blob)
+    store = PS.PlanStore.load(path)
+    assert store.invalidated is not None
+    assert len(store) == 0
+    # ...and a server still plans fine on top of it
+    with G.use_plan_store(store):
+        p = G.plan(128, 256, 512)
+    assert p.shape == (128, 256, 512)
+    store.save()                       # and can re-persist over the wreck
+    assert PS.PlanStore.load(path).invalidated is None
+
+
+def test_store_skips_bad_entries_keeps_good(tmp_path):
+    """Per-entry tolerance: one undecodable entry is dropped, the rest
+    of the store survives."""
+    path = tmp_path / "plans.json"
+    store = PS.PlanStore(path)
+    with G.use_plan_store(store):
+        G.plan(128, 256, 512)
+        G.plan(128, 512, 256)
+    store.save()
+    doc = json.loads(path.read_text())
+    keys = list(doc["plans"])
+    doc["plans"][keys[0]]["plan"]["block_n"] = -7   # implausible geometry
+    path.write_text(json.dumps(doc))
+    fresh = PS.PlanStore.load(path)
+    assert fresh.invalidated is None
+    assert len(fresh) == 1
+    assert fresh.lookup(keys[1]) is not None
+
+
+def test_store_invalidated_on_schema_bump(tmp_path):
+    path = tmp_path / "plans.json"
+    store = PS.PlanStore(path)
+    with G.use_plan_store(store):
+        G.plan(128, 256, 512)
+    store.save()
+    doc = json.loads(path.read_text())
+    doc["schema"] = PS.SCHEMA_VERSION + 1
+    path.write_text(json.dumps(doc))
+    fresh = PS.PlanStore.load(path)
+    assert fresh.invalidated and "schema" in fresh.invalidated
+    assert len(fresh) == 0
+
+
+def test_store_invalidated_on_host_mismatch(tmp_path):
+    """Plans tuned on one host (kernel VMEM budget, core count, jax
+    version) must not deploy on another: the fingerprint gates the
+    whole file."""
+    path = tmp_path / "plans.json"
+    store = PS.PlanStore(path)
+    with G.use_plan_store(store):
+        G.plan(128, 256, 512)
+    store.save()
+    doc = json.loads(path.read_text())
+    doc["host"] = "arm64|Darwin|cpu:m1|jax 0.0.1|VMEM 1"
+    path.write_text(json.dumps(doc))
+    fresh = PS.PlanStore.load(path)
+    assert fresh.invalidated and "host" in fresh.invalidated
+    assert len(fresh) == 0
+    assert PS.host_fingerprint() != doc["host"]
+
+
+# --------------------------------------------------------- atomic writes
+def test_concurrent_writers_atomic(tmp_path):
+    """N threads saving interleaved with N readers: every observed file
+    state is complete, valid JSON (tempfile + os.replace — a reader
+    never sees a half-written store)."""
+    path = tmp_path / "plans.json"
+    stores = []
+    for i in range(4):
+        st = PS.PlanStore(path)
+        with G.use_plan_store(st):
+            G.plan(128, 256 * (i + 1), 512)
+        stores.append(st)
+    errs = []
+    stop = threading.Event()
+
+    def writer(st):
+        for _ in range(20):
+            try:
+                st.save()
+            except Exception as e:           # pragma: no cover
+                errs.append(e)
+
+    def reader():
+        while not stop.is_set():
+            try:
+                if path.exists():
+                    loaded = PS.PlanStore.load(path)
+                    assert loaded.invalidated is None, loaded.invalidated
+            except Exception as e:           # pragma: no cover
+                errs.append(e)
+
+    rs = [threading.Thread(target=reader) for _ in range(2)]
+    ws = [threading.Thread(target=writer, args=(st,)) for st in stores]
+    for t in rs + ws:
+        t.start()
+    for t in ws:
+        t.join()
+    stop.set()
+    for t in rs:
+        t.join()
+    assert not errs
+    final = PS.PlanStore.load(path)
+    assert final.invalidated is None and len(final) == 1
+    assert not [f for f in os.listdir(tmp_path)
+                if f != "plans.json"], "leaked temp files"
+
+
+# ------------------------------------------------------ warm-start contract
+def test_two_process_warm_start_zero_resolves(tmp_path, monkeypatch):
+    """THE acceptance contract: process 1 resolves the full serving
+    plan surface (twelve paper shapes at M=128 + the decode-bucket
+    ladder) into a store; process 2 boots from that file and plans the
+    same surface with ZERO analytic resolutions, ZERO gate runs, and
+    store hits == plans needed."""
+    path = tmp_path / "plans.json"
+    store = PS.PlanStore(path)
+    with G.use_plan_store(store):
+        plans1 = _resolve_surface()
+    store.save()
+    # plans NEEDED = the unique plan keys of the surface (duplicate
+    # (n, k) pairs across models dedupe in the in-memory cache and
+    # never reach the store)
+    n_needed = len({id(p) for p in plans1})
+    info1 = store.info()
+    assert info1.entries == n_needed and info1.misses == n_needed
+
+    # "process 2": fresh in-memory cache, fresh store handle, and an
+    # analytic policy that EXPLODES if consulted
+    G.plan_cache_clear()
+    warm = PS.PlanStore.load(path)
+    assert warm.invalidated is None
+
+    def boom(*a, **kw):                      # pragma: no cover
+        raise AssertionError("warm start ran an analytic _resolve")
+
+    monkeypatch.setattr(pol, "_resolve", boom)
+    with G.use_plan_store(warm):
+        plans2 = _resolve_surface()
+    info = warm.info()
+    assert info.hits == n_needed and info.misses == 0
+    assert [p.shape for p in plans2] == [p.shape for p in plans1]
+    assert plans2 == plans1
+
+
+def test_store_validate_gate_not_skipped_for_ungated_entries(tmp_path):
+    """A validate=True request only adopts a stored plan that actually
+    passed the gate (validated=True) — an analytic (ungated) entry for
+    the same shape is NOT good enough, the gate runs."""
+    path = tmp_path / "plans.json"
+    store = PS.PlanStore(path)
+    with G.use_plan_store(store):
+        G.plan(64, 256, 256)                      # ungated entry
+        G.plan_cache_clear()
+        p = G.plan(64, 256, 256, validate=True)   # must run the gate
+    assert p.validated
+
+
+def test_use_plan_store_scoping():
+    """Scope semantics mirror use_backend: use_plan_store(None)
+    inherits, no_plan_store() blanks even over a process default."""
+    store = PS.PlanStore()
+    assert PS.active_plan_store() is None
+    with G.use_plan_store(store):
+        assert PS.active_plan_store() is store
+        with G.use_plan_store(None):              # inherit, not clear
+            assert PS.active_plan_store() is store
+        with G.no_plan_store():
+            assert PS.active_plan_store() is None
+        assert PS.active_plan_store() is store
+    assert PS.active_plan_store() is None
+    old = G.set_plan_store(store)
+    try:
+        assert old is None and PS.active_plan_store() is store
+        with G.no_plan_store():
+            assert PS.active_plan_store() is None
+    finally:
+        G.set_plan_store(old)
+
+
+# -------------------------------------------------------- measured autotune
+def test_measured_autotune_commits_gated_winner(tmp_path):
+    """The sweep commits ONLY a plan that passed the bit-exactness
+    gate, records provenance (t_meas, autotuned), and a warm process
+    adopts the winner pre-validated."""
+    path = tmp_path / "plans.json"
+    store = PS.PlanStore(path)
+    with G.use_plan_store(store):
+        mp = autotune.measured_autotune(32, 128, 128, trials=2,
+                                        warmup=1, max_retries=0)
+    assert mp.committed and mp.plan.validated
+    assert mp.candidates >= 1
+    skey = pol.store_key(32, 128, 128)
+    ent = store.entry(skey)
+    assert ent is not None and ent["autotuned"]
+    assert ent["t_meas"] == pytest.approx(mp.t_measured)
+    # same-process adoption: the in-memory cache serves the winner
+    assert G.plan(32, 128, 128) == mp.plan
+    # cross-process adoption: reload and plan, no re-sweep, no gate
+    store.save()
+    G.plan_cache_clear()
+    warm = PS.PlanStore.load(path)
+    with G.use_plan_store(warm):
+        p = G.plan(32, 128, 128)
+    assert p == mp.plan and p.validated
+    assert warm.info().hits == 1
+
+
+def test_measured_autotune_never_commits_gate_failure(monkeypatch):
+    """If every candidate fails the gate the sweep raises instead of
+    deploying an unverified plan; the store stays clean."""
+    store = PS.PlanStore()
+    monkeypatch.setattr(G, "validate_plan", lambda p: False)
+    with G.use_plan_store(store):
+        with pytest.raises(RuntimeError, match="bit-exactness gate"):
+            autotune.measured_autotune(32, 64, 64, trials=1, warmup=0,
+                                       max_retries=0)
+    assert len(store) == 0
+
+
+def test_measured_autotune_ignores_store_while_sweeping(tmp_path):
+    """Self-isolation: the sweep's candidate resolutions run under
+    no_plan_store() — a stale store entry neither short-circuits the
+    sweep nor gets overwritten by reads."""
+    store = PS.PlanStore()
+    with G.use_plan_store(store):
+        mp = autotune.measured_autotune(32, 96, 96, trials=1, warmup=0,
+                                        max_retries=0)
+    info = store.info()
+    assert info.hits == 0 and info.misses == 0   # sweep never read it
+    assert info.entries == 1 and mp.committed
