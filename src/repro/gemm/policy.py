@@ -523,6 +523,15 @@ def _plan_key(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
 
 _KEY_VALIDATE_IDX = 12
 
+# Plan-resolution fault hook (chaos testing): ``repro.runtime.faults``
+# installs its ``maybe_fire`` here at the first ``use_faults`` entry —
+# a hook global rather than an import because the gemm layer must not
+# import ``repro.runtime`` at module level.  Called on the plan-cache
+# miss path, before the store lookup / analytic resolve; when it
+# raises, the in-flight dedup below releases the key so a retrying
+# caller resolves cleanly.
+_FAULT_HOOK = None
+
 
 def store_key(m: int, n: int, k: int, **kw) -> str:
     """The persistent-store key for a policy request: the normalized
@@ -608,6 +617,8 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
         # loop: adopt its cached plan (a hit), or — if it failed —
         # become the owner ourselves
     try:
+        if _FAULT_HOOK is not None:
+            _FAULT_HOOK("plan_resolve", m=m, n=n, k=k)
         store = _plan_store.active_plan_store()
         p = None
         if store is not None:

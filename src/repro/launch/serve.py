@@ -83,6 +83,17 @@ def main():
                     help="pre-populate the plan cache and compile the "
                          "serving steps (prefill + decode buckets) "
                          "before the first request")
+    ap.add_argument("--watchdog-factor", type=float, default=0.0,
+                    help="arm the straggler watchdog over scheduler "
+                         "ticks: a tick slower than FACTOR x the EMA is "
+                         "flagged and reported (0 = off)")
+    ap.add_argument("--ttft-budget-s", type=float, default=None,
+                    help="per-request time-to-first-token deadline "
+                         "(seconds); requests that miss it end "
+                         "TIMED_OUT instead of occupying a slot")
+    ap.add_argument("--total-budget-s", type=float, default=None,
+                    help="per-request total wall-clock deadline "
+                         "(seconds, enqueue-relative)")
     args = ap.parse_args()
 
     cfg = model_zoo.reduced_config(model_zoo.get_config(args.arch))
@@ -185,12 +196,24 @@ def main():
                     .astype(np.int32) for _ in range(args.requests)]
         mns = [int(m) for m in
                rng.integers(2, args.max_new + 1, args.requests)]
-        outs, sstats = eng.serve(
-            reqs, batch_slots=args.batch_slots, max_new_tokens=mns,
-            prefill_chunk=args.prefill_chunk, page_size=args.page_size,
-            megastep_depth=args.megastep_depth,
-            prefix_cache=args.prefix_cache,
-            sync_per_step=True)     # exact TTFT / queue-wait percentiles
+        # graceful drain: SIGTERM finishes in-flight requests, cancels
+        # the queue with structured outcomes, and still saves the plan
+        # store below — the grace-window exit docs/serving.md describes
+        from repro.runtime.fault_tolerance import GracefulShutdown
+        gs = GracefulShutdown().install()
+        try:
+            outs, sstats = eng.serve(
+                reqs, batch_slots=args.batch_slots, max_new_tokens=mns,
+                prefill_chunk=args.prefill_chunk,
+                page_size=args.page_size,
+                megastep_depth=args.megastep_depth,
+                prefix_cache=args.prefix_cache,
+                watchdog_factor=args.watchdog_factor or None,
+                shutdown=gs, ttft_budget_s=args.ttft_budget_s,
+                total_budget_s=args.total_budget_s,
+                sync_per_step=True)  # exact TTFT / queue-wait pctiles
+        finally:
+            gs.uninstall()
         qw = _pct(sstats, "queue_wait_s")
         tf = _pct(sstats, "ttft_s")
         print(f"continuous batching ({args.requests} requests, "
@@ -212,6 +235,25 @@ def main():
         print(f"  decode dispatch collapse: {sstats.decode_ticks} ticks "
               f"in {sstats.decode_dispatches} dispatches "
               f"({sstats.host_syncs} host syncs)")
+        import collections as _coll
+        by_state = _coll.Counter(o.state.value
+                                 for o in sstats.outcomes.values())
+        extras = ", ".join(f"{k} {v}" for k, v in sorted(by_state.items())
+                           if k != "DONE")
+        print(f"  outcomes: {by_state.get('DONE', 0)}/{args.requests} "
+              f"DONE" + (f" ({extras})" if extras else ""))
+        if gs.requested:
+            print("  graceful shutdown: drained in-flight requests, "
+                  "cancelled the queue")
+        if sstats.degraded:
+            print("  degraded: " + ", ".join(
+                f"{k} x{v}" for k, v in sorted(sstats.degraded.items())))
+        if args.watchdog_factor:
+            print(f"  watchdog (factor {args.watchdog_factor:g}): "
+                  f"{len(sstats.stragglers)} straggler ticks"
+                  + ("".join(f"\n    tick {ev.step}: {ev.dt * 1e3:.1f} ms "
+                             f"(EMA {ev.ema * 1e3:.1f} ms)"
+                             for ev in sstats.stragglers[:5])))
         if sstats.prefix is not None:
             px = sstats.prefix
             print(f"  prefix cache: {px.hits}/{px.lookups} hits "

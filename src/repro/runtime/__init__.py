@@ -1,14 +1,24 @@
 """Runtime: training loop, serving engine + continuous batching, fault
-tolerance."""
-from repro.runtime import (batching, fault_tolerance, kv_cache, prefix_cache,
-                           serve_loop, train_loop)
-from repro.runtime.batching import ContinuousBatchingScheduler, ServeStats
+tolerance and deterministic fault injection."""
+from repro.runtime import (batching, fault_tolerance, faults, kv_cache,
+                           prefix_cache, serve_loop, train_loop)
+from repro.runtime.batching import (ContinuousBatchingScheduler,
+                                    RejectedError, RequestOutcome,
+                                    RequestState, SchedulerStallError,
+                                    ServeStats)
+from repro.runtime.fault_tolerance import GracefulShutdown, StepWatchdog
+from repro.runtime.faults import (FaultInjected, FaultPlan, FaultSpec,
+                                  use_faults)
 from repro.runtime.kv_cache import PagedKVCache
 from repro.runtime.prefix_cache import PrefixCache, PrefixCacheStats
 from repro.runtime.train_loop import TrainState, make_train_step, train
 from repro.runtime.serve_loop import Engine
 
-__all__ = ["batching", "fault_tolerance", "kv_cache", "prefix_cache",
-           "serve_loop", "train_loop", "TrainState", "make_train_step",
-           "train", "Engine", "ContinuousBatchingScheduler", "ServeStats",
-           "PagedKVCache", "PrefixCache", "PrefixCacheStats"]
+__all__ = ["batching", "fault_tolerance", "faults", "kv_cache",
+           "prefix_cache", "serve_loop", "train_loop", "TrainState",
+           "make_train_step", "train", "Engine",
+           "ContinuousBatchingScheduler", "ServeStats", "RequestState",
+           "RequestOutcome", "RejectedError", "SchedulerStallError",
+           "GracefulShutdown", "StepWatchdog", "FaultInjected",
+           "FaultPlan", "FaultSpec", "use_faults", "PagedKVCache",
+           "PrefixCache", "PrefixCacheStats"]

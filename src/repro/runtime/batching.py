@@ -18,11 +18,28 @@ loop with a real scheduler over a *static-shape* slot pool:
     steps, so admission never stalls decode for a whole prompt and the
     K>=N fine-panel plans stay hot across both phases.
 
-Scheduling is host-side and deliberately simple: per tick, (1) admit
-from the queue into idle slots while the page budget holds, (2) run one
-prefill chunk for the earliest-admitted prefilling slot, (3) run one
-decode step for every decoding slot.  The device work is the Engine's
-jitted ``prefill_chunk`` / ``decode_step``; this module never traces.
+Scheduling is host-side and deliberately simple: per tick, (1) enforce
+deadlines/cancellations, (2) admit from the queue into idle slots while
+the page budget holds, (3) run one prefill chunk for the
+earliest-admitted prefilling slot, (4) run one decode step for every
+decoding slot.  The device work is the Engine's jitted
+``prefill_chunk`` / ``decode_step``; this module never traces.
+
+**Fault isolation** (the serving analogue of the paper's guarantee
+discipline): every request carries a lifecycle state
+(``RequestState``: QUEUED/RUNNING/DONE/FAILED/CANCELLED/TIMED_OUT) and
+a structured :class:`RequestOutcome`; a fault is confined to the
+requests it actually hits.  A dispatch exception walks a degradation
+ladder — retry once on the engine's backend, then one attempt on the
+``xla`` fallback backend (bit-exact, because every registered backend
+passes the same gate) — and only then quarantines the victim: the
+poisoned request's pages are freed (refcounts keep shared prefix pages
+safe), its slot is recycled, and the batch continues.  Because batched
+greedy decode is row-independent (each slot attends only to its own
+pages and masked rows write nothing), **survivors stay bit-identical
+to a fault-free run** — the gate ``tests/test_chaos.py`` and
+``benchmarks/chaos_serving.py`` enforce under injected faults
+(runtime/faults).
 
 Outputs are bit-identical to per-request greedy ``Engine.generate`` —
 the serving analogue of the paper's bit-exactness gate, enforced by
@@ -32,6 +49,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import enum
 import time
 
 import jax
@@ -39,8 +57,59 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import gemm as gemm_api
+from repro.runtime import fault_tolerance as FT
+from repro.runtime import faults
 from repro.runtime import kv_cache as KV
 from repro.runtime.prefix_cache import PrefixCache, PrefixCacheStats
+
+
+# --------------------------------------------------------------- lifecycle
+class RequestState(str, enum.Enum):
+    """Per-request lifecycle.  Terminal states other than DONE carry a
+    structured reason in the request's :class:`RequestOutcome`."""
+    QUEUED = "QUEUED"
+    RUNNING = "RUNNING"
+    DONE = "DONE"
+    FAILED = "FAILED"
+    CANCELLED = "CANCELLED"
+    TIMED_OUT = "TIMED_OUT"
+
+
+@dataclasses.dataclass
+class RequestOutcome:
+    """The structured per-request result record — every submitted
+    request ends in exactly one of these, fault or not.
+
+    ``tokens``: the full output for DONE requests; for evicted requests
+    the tokens emitted before the fault (None if none).  ``error`` /
+    ``error_type`` describe the terminal reason for non-DONE states."""
+    rid: int
+    state: RequestState
+    prompt_len: int
+    emitted: int = 0
+    tokens: np.ndarray | None = None
+    error: str | None = None
+    error_type: str | None = None
+
+
+class RejectedError(RuntimeError):
+    """Admission refused (bounded queue overflow, or shutdown drain).
+    ``snapshot`` carries the queue/slot/page-pool state at rejection —
+    the backpressure signal a front-end load-sheds on."""
+
+    def __init__(self, msg: str, *, snapshot: dict):
+        super().__init__(msg)
+        self.snapshot = snapshot
+
+
+class SchedulerStallError(RuntimeError):
+    """The tick loop exhausted its progress bound — a scheduler bug,
+    not load.  ``snapshot`` carries the queue/slot/page-pool state so
+    the stall is diagnosable instead of a bare "no progress"."""
+
+    def __init__(self, msg: str, *, snapshot: dict):
+        super().__init__(f"{msg}; state: {snapshot}")
+        self.snapshot = snapshot
 
 
 # ------------------------------------------------------------------ stats
@@ -91,6 +160,15 @@ class ServeStats:
     synchronization points the run actually paid (every
     ``sync_per_step`` block + the final materialize) and
     ``megastep_depth`` echoes the configured D.
+
+    Fault-isolation observability: ``outcomes`` maps rid to
+    :class:`RequestOutcome` (every submitted request, terminal states
+    included); ``dispatch_retries`` / ``backend_fallbacks`` count the
+    degradation ladder's rungs; ``degraded`` counts graceful
+    degradations by reason (e.g. ``prefix_lookup`` — a prefix-cache
+    error served cold); ``stragglers`` holds the serving watchdog's
+    :class:`~repro.runtime.fault_tolerance.StragglerEvent` records
+    (``watchdog_factor`` runs only).
     """
     prefill_tokens: int = 0
     decode_tokens: int = 0
@@ -109,6 +187,11 @@ class ServeStats:
     host_syncs: int = 0
     megastep_depth: int = 1
     prefix: PrefixCacheStats | None = None
+    outcomes: dict = dataclasses.field(default_factory=dict)
+    dispatch_retries: int = 0
+    backend_fallbacks: int = 0
+    degraded: dict = dataclasses.field(default_factory=dict)
+    stragglers: list = dataclasses.field(default_factory=list)
 
     @property
     def prefill_tps(self):
@@ -126,6 +209,19 @@ class ServeStats:
     @property
     def decode_ticks(self) -> int:
         return len(self.decode_tick_ms)
+
+    @property
+    def completed(self) -> int:
+        return sum(1 for o in self.outcomes.values()
+                   if o.state == RequestState.DONE)
+
+    @property
+    def failed(self) -> int:
+        """Requests in a terminal state other than DONE."""
+        return sum(1 for o in self.outcomes.values()
+                   if o.state not in (RequestState.DONE,
+                                      RequestState.QUEUED,
+                                      RequestState.RUNNING))
 
     def percentile(self, field: str, q: float) -> float:
         vals = [getattr(r, field) for r in self.requests]
@@ -146,7 +242,10 @@ class _Request:
     max_new: int
     t_enqueue: float
     t_admit: float = 0.0
-    t_first: float = 0.0
+    t_first: float | None = None
+    ttft_budget_s: float | None = None
+    total_budget_s: float | None = None
+    cancel: bool = False
 
 
 class _Slot:
@@ -174,7 +273,10 @@ class ContinuousBatchingScheduler:
 
     ``engine`` needs: ``cfg``, ``max_len``, and the two paged step
     methods — the invariant tests drive the scheduler with a stub engine
-    to cover thousands of schedules without tracing.
+    to cover thousands of schedules without tracing.  Engines exposing
+    ``supports_fallback`` additionally accept ``fallback=True`` on the
+    paged steps (the ``xla``-backend escape hatch the dispatch
+    degradation ladder uses).
 
     ``num_pages`` below the dense-equivalent total turns on real paging
     pressure: admission then waits until finished requests return enough
@@ -214,11 +316,29 @@ class ContinuousBatchingScheduler:
     as this scheduler — ``run`` may be called repeatedly and later
     requests hit earlier runs' prefixes.  Outputs stay bit-identical
     to per-request ``generate`` (the cached KV is bitwise what this
-    request's own prefill would have written).
+    request's own prefill would have written).  A prefix-cache error
+    (lookup/admit/insert) never fails the request: the scheduler
+    degrades to cold prefill and counts the reason in
+    ``ServeStats.degraded``.
+
+    Fault-isolation knobs: ``max_queue`` bounds the admission queue
+    (``submit`` past the bound raises :class:`RejectedError` with a
+    state snapshot — load shedding); ``watchdog_factor`` arms a
+    :class:`~repro.runtime.fault_tolerance.StepWatchdog` over scheduler
+    ticks (straggler events land in ``ServeStats.stragglers``);
+    ``shutdown`` takes an object with a ``requested`` flag (a
+    ``GracefulShutdown``) — once set, queued requests are drained to
+    CANCELLED("shutdown") outcomes, new submissions are rejected, and
+    in-flight requests run to completion; ``clock`` injects a fake
+    monotonic clock for deterministic deadline tests (device timing
+    stats always use the real clock).  Per-request deadlines ride on
+    ``submit(..., ttft_budget_s=, total_budget_s=)`` and are enforced
+    at tick boundaries, as is cooperative :meth:`cancel`.
 
     ``trace`` records ``(event, ...)`` tuples — the scheduler's own audit
     log, asserted over by the serving invariant tests.  ``run`` ends
-    with the pool's ``assert_all_free`` leak audit: with every request
+    with the pool's ``assert_all_free`` leak audit — on the success
+    path AND on every exception path (try/finally): with every request
     freed, a page refcount that never returned to zero (possible only
     through a sharing bug) raises instead of leaking silently.
     """
@@ -227,7 +347,9 @@ class ContinuousBatchingScheduler:
                  page_size: int = 16, num_pages: int | None = None,
                  check_invariants: bool = False,
                  sync_per_step: bool = False, megastep_depth: int = 1,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, max_queue: int | None = None,
+                 watchdog_factor: float | None = None, shutdown=None,
+                 clock=None):
         cfg = engine.cfg
         if cfg.modality != "text":
             raise NotImplementedError("continuous batching serves token "
@@ -249,6 +371,12 @@ class ContinuousBatchingScheduler:
                              "decode_megastep (Engine, or a stub "
                              "providing it)")
         self.megastep_depth = megastep_depth
+        self.max_queue = max_queue
+        self.watchdog = (FT.StepWatchdog(factor=watchdog_factor)
+                         if watchdog_factor else None)
+        self._shutdown = shutdown
+        self._draining = False
+        self._clock = clock if clock is not None else time.perf_counter
         self.kv = KV.PagedKVCache(
             num_layers=cfg.num_layers, num_slots=batch_slots,
             max_len=engine.max_len, page_size=page_size,
@@ -258,9 +386,11 @@ class ContinuousBatchingScheduler:
         self.queue: collections.deque[_Request] = collections.deque()
         self.trace: list[tuple] = []
         self.stats = ServeStats(megastep_depth=megastep_depth)
+        self.outcomes = self.stats.outcomes        # rid -> RequestOutcome
         self._results: dict[int, np.ndarray] = {}
         self._next_rid = 0
         self._admit_seq = 0
+        self._ticks = 0
         # device-side run state: last emitted token per slot, and the
         # per-step [slots] token history (materialized at run end)
         self._last = jnp.zeros((batch_slots,), jnp.int32)
@@ -268,7 +398,17 @@ class ContinuousBatchingScheduler:
         self._pending: list[tuple] = []   # (rid, slot, first_tok, steps)
 
     # ------------------------------------------------------------ intake
-    def submit(self, tokens, max_new: int) -> int:
+    def submit(self, tokens, max_new: int, *,
+               ttft_budget_s: float | None = None,
+               total_budget_s: float | None = None) -> int:
+        """Enqueue one request; returns its rid.  ``ttft_budget_s`` /
+        ``total_budget_s`` are per-request deadlines (enqueue-relative,
+        enforced at tick boundaries — a request whose first token
+        misses its TTFT budget, or whose wall clock exceeds its total
+        budget, is evicted as TIMED_OUT with partial tokens in its
+        outcome).  Raises :class:`RejectedError` when the bounded
+        queue is full or the scheduler is draining for shutdown;
+        ``ValueError`` for requests that could never be served."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         if tokens.size == 0:
             raise ValueError("empty prompt")
@@ -284,12 +424,62 @@ class ContinuousBatchingScheduler:
             raise ValueError(
                 f"request needs {need} pages but the pool only has "
                 f"{self.kv.num_pages} — it could never be admitted")
+        if self._draining or (self._shutdown is not None
+                              and getattr(self._shutdown, "requested",
+                                          False)):
+            raise RejectedError("admission rejected: shutting down",
+                                snapshot=self.snapshot())
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            raise RejectedError(
+                f"admission rejected: queue full "
+                f"({len(self.queue)}/{self.max_queue})",
+                snapshot=self.snapshot())
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(_Request(rid, tokens, max_new,
-                                   t_enqueue=time.perf_counter()))
+        req = _Request(rid, tokens, max_new, t_enqueue=self._clock(),
+                       ttft_budget_s=ttft_budget_s,
+                       total_budget_s=total_budget_s)
+        self.queue.append(req)
+        self.outcomes[rid] = RequestOutcome(
+            rid=rid, state=RequestState.QUEUED, prompt_len=tokens.size)
         self.trace.append(("enqueue", rid))
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cooperative cancellation, honored at the next tick boundary:
+        a queued request is dropped, a running one is evicted (pages
+        freed, slot recycled, partial tokens in its outcome).  Returns
+        False if ``rid`` is unknown or already terminal."""
+        for req in self.queue:
+            if req.rid == rid:
+                req.cancel = True
+                return True
+        for sl in self.slots:
+            if sl.request is not None and sl.request.rid == rid:
+                sl.request.cancel = True
+                return True
+        return False
+
+    def snapshot(self) -> dict:
+        """Queue/slot/page-pool state — attached to RejectedError and
+        SchedulerStallError, and useful for live introspection."""
+        return {
+            "tick": self._ticks,
+            "queue_depth": len(self.queue),
+            "max_queue": self.max_queue,
+            "queued_rids": [r.rid for r in self.queue],
+            "live": {i: {"rid": sl.request.rid,
+                         "prefilled": sl.n_prefilled,
+                         "emitted": sl.n_emitted,
+                         "max_new": sl.request.max_new}
+                     for i, sl in enumerate(self.slots)
+                     if sl.request is not None},
+            "free_pages": self.kv.free_count,
+            "num_pages": self.kv.num_pages,
+            "cached_pages": self.kv.cached_count,
+            "outstanding_growth": self._outstanding_growth(),
+            "draining": self._draining,
+        }
 
     # ------------------------------------------------------- page budget
     def _footprint(self, req: _Request) -> int:
@@ -303,6 +493,132 @@ class ContinuousBatchingScheduler:
             if sl.request is not None:
                 need += self._footprint(sl.request) - self.kv.held(i)
         return need
+
+    # --------------------------------------------------- fault isolation
+    def _degrade(self, reason: str, err: Exception) -> None:
+        self.stats.degraded[reason] = self.stats.degraded.get(reason, 0) + 1
+        self.trace.append(("degraded", reason, type(err).__name__))
+
+    def _finalize_queued(self, req: _Request, state: RequestState,
+                         error: str, error_type: str | None = None) -> None:
+        oc = self.outcomes[req.rid]
+        oc.state, oc.error, oc.error_type = state, error, error_type
+        self.trace.append(("reject", req.rid, state.value))
+
+    def _release_slot(self, i: int, state: RequestState, *,
+                      error: str | None = None,
+                      error_type: str | None = None) -> None:
+        """Terminal transition for the request in slot ``i``: record its
+        outcome, keep whatever tokens it emitted for materialization,
+        free its pages (refcounted — shared prefix pages survive with
+        their other holders), and recycle the slot.  The quarantine
+        primitive: DONE and every eviction state go through here so no
+        exit path can leak pages."""
+        sl = self.slots[i]
+        req = sl.request
+        if sl.first_tok is not None:
+            self._pending.append((req.rid, i, sl.first_tok,
+                                  tuple(sl.steps)))
+        oc = self.outcomes[req.rid]
+        oc.state, oc.emitted = state, sl.n_emitted
+        oc.error, oc.error_type = error, error_type
+        if state == RequestState.DONE:
+            now = self._clock()
+            self.stats.requests.append(RequestStats(
+                rid=req.rid, prompt_len=len(req.tokens),
+                new_tokens=req.max_new,
+                queue_wait_s=req.t_admit - req.t_enqueue,
+                ttft_s=req.t_first - req.t_enqueue,
+                total_s=now - req.t_enqueue,
+                decode_tps=req.max_new / max(now - req.t_first, 1e-9)))
+            self.trace.append(("finish", req.rid, i))
+        else:
+            self.trace.append(("evict", req.rid, i, state.value))
+        freed = self.kv.free(i)
+        self.trace.append(("free", i, tuple(freed)))
+        sl.request, sl.first_tok = None, None
+        sl.n_prefilled, sl.n_emitted, sl.steps = 0, 0, []
+
+    def _guarded(self, point: str, dispatch, *, rid=None, rids=()):
+        """The dispatch degradation ladder: attempt, one retry on the
+        engine's own backend, then — for engines advertising
+        ``supports_fallback`` — one attempt on the ``xla`` fallback
+        backend (bit-exact: all registered backends pass the same
+        gate).  The chaos injection point fires host-side before each
+        attempt, so injected faults never leave donated buffers
+        half-consumed.  Raises the final error; the caller
+        quarantines the victims."""
+        try:
+            faults.maybe_fire(point, rid=rid, rids=rids, attempt=0)
+            return dispatch(False)
+        except Exception:
+            self.stats.dispatch_retries += 1
+            try:
+                faults.maybe_fire(point, rid=rid, rids=rids, attempt=1)
+                return dispatch(False)
+            except Exception:
+                if not getattr(self.engine, "supports_fallback", False):
+                    raise
+                self.stats.backend_fallbacks += 1
+                faults.maybe_fire(point, rid=rid, rids=rids, attempt=2)
+                return dispatch(True)
+
+    def _enforce_deadlines(self) -> None:
+        """Tick-boundary enforcement of deadlines, cancellation, and
+        shutdown drain — the only places a request leaves the system
+        outside DONE/quarantine."""
+        if self._shutdown is not None and getattr(self._shutdown,
+                                                  "requested", False):
+            self._draining = True
+        if self._draining:
+            while self.queue:
+                req = self.queue.popleft()
+                self._finalize_queued(req, RequestState.CANCELLED,
+                                      "shutdown")
+        now = self._clock()
+        if self.queue:
+            keep: collections.deque[_Request] = collections.deque()
+            while self.queue:
+                req = self.queue.popleft()
+                wait = now - req.t_enqueue
+                if req.cancel:
+                    self._finalize_queued(req, RequestState.CANCELLED,
+                                          "cancelled while queued")
+                elif (req.total_budget_s is not None
+                        and wait > req.total_budget_s):
+                    self._finalize_queued(
+                        req, RequestState.TIMED_OUT,
+                        f"total budget {req.total_budget_s}s exceeded "
+                        f"while queued ({wait:.3f}s)")
+                elif (req.ttft_budget_s is not None
+                        and wait > req.ttft_budget_s):
+                    self._finalize_queued(
+                        req, RequestState.TIMED_OUT,
+                        f"ttft budget {req.ttft_budget_s}s exceeded "
+                        f"while queued ({wait:.3f}s)")
+                else:
+                    keep.append(req)
+            self.queue = keep
+        for i, sl in enumerate(self.slots):
+            req = sl.request
+            if req is None:
+                continue
+            age = now - req.t_enqueue
+            if req.cancel:
+                self._release_slot(i, RequestState.CANCELLED,
+                                   error="cancelled")
+            elif req.total_budget_s is not None \
+                    and age > req.total_budget_s:
+                self._release_slot(
+                    i, RequestState.TIMED_OUT,
+                    error=f"total budget {req.total_budget_s}s exceeded "
+                          f"({age:.3f}s)")
+            elif req.ttft_budget_s is not None and req.t_first is None \
+                    and age > req.ttft_budget_s:
+                self._release_slot(
+                    i, RequestState.TIMED_OUT,
+                    error=f"ttft budget {req.ttft_budget_s}s exceeded "
+                          f"with no first token ({age:.3f}s)")
 
     # ------------------------------------------------------------- steps
     def _admit(self):
@@ -320,23 +636,36 @@ class ContinuousBatchingScheduler:
             hit = None
             avail = self.kv.free_count
             if self.prefix is not None:
-                hit = self.prefix.lookup(req.tokens)
-                need -= len(hit.nodes)
-                pinned = hit.pages + (
-                    [hit.fork_node.page] if hit.fork_node is not None
-                    else [])
-                avail += self.kv.reclaimable_count(exclude=pinned)
+                try:
+                    hit = self.prefix.lookup(req.tokens)
+                except Exception as e:
+                    # degraded: budget with the full cold footprint
+                    self._degrade("prefix_lookup", e)
+                if hit is not None:
+                    need -= len(hit.nodes)
+                    pinned = hit.pages + (
+                        [hit.fork_node.page] if hit.fork_node is not None
+                        else [])
+                    avail += self.kv.reclaimable_count(exclude=pinned)
             if need + self._outstanding_growth() > avail:
                 break                      # FIFO: never skip the head
             self.queue.popleft()
-            req.t_admit = time.perf_counter()
+            req.t_admit = self._clock()
             sl.request, sl.first_tok = req, None
             sl.n_prefilled, sl.n_emitted, sl.steps = 0, 0, []
             sl.order = self._admit_seq
             self._admit_seq += 1
+            self.outcomes[req.rid].state = RequestState.RUNNING
             hit_tokens = 0
-            if self.prefix is not None:
-                hit_tokens = self.prefix.admit(i, req.tokens, hit=hit)
+            if self.prefix is not None and hit is not None:
+                try:
+                    hit_tokens = self.prefix.admit(i, req.tokens, hit=hit)
+                except Exception as e:
+                    # cold-prefill degradation: drop any partial install
+                    # (refcounts make the free safe) and start at 0
+                    self._degrade("prefix_admit", e)
+                    self.kv.free(i)
+                    hit_tokens = 0
                 if hit_tokens:
                     # shared pages cover positions [0, hit_tokens);
                     # chunked prefill resumes at the divergent token
@@ -367,15 +696,35 @@ class ContinuousBatchingScheduler:
         width = self.chunk if rem >= self.chunk else gemm_api.bucket_m(rem)
         end = min(start + width, len(req.tokens))
         final = end == len(req.tokens)
-        self.kv.alloc(i, end)
+        try:
+            self.kv.alloc(i, end)
+        except Exception as e:
+            # allocator fault (real OOM past the reservation, or
+            # injected): quarantine this request only
+            self._release_slot(i, RequestState.FAILED,
+                               error=f"page allocation failed: {e}",
+                               error_type=type(e).__name__)
+            return True
         chunk = np.zeros((1, width), np.int32)
         chunk[0, :end - start] = req.tokens[start:end]
+
+        def dispatch(fb):
+            kw = {"fallback": True} if fb else {}
+            return self.engine.prefill_chunk(
+                self.kv.pages, self.kv.table_device([i]),
+                self.kv.lens_device([i]), jnp.asarray(chunk),
+                jnp.asarray(end - start - 1, jnp.int32),
+                page_size=self.page_size, **kw)
+
         t0 = time.perf_counter()
-        tok, pages = self.engine.prefill_chunk(
-            self.kv.pages, self.kv.table_device([i]),
-            self.kv.lens_device([i]), jnp.asarray(chunk),
-            jnp.asarray(end - start - 1, jnp.int32),
-            page_size=self.page_size)
+        try:
+            tok, pages = self._guarded("prefill_dispatch", dispatch,
+                                       rid=req.rid)
+        except Exception as e:
+            self._release_slot(i, RequestState.FAILED,
+                               error=f"prefill dispatch failed: {e}",
+                               error_type=type(e).__name__)
+            return True
         self.kv.pages = pages
         if self.sync_per_step:
             jax.block_until_ready(tok)
@@ -391,13 +740,17 @@ class ContinuousBatchingScheduler:
             if self.prefix is not None:
                 # prompt fully prefilled: its full pages are immutable
                 # from here (decode writes land strictly past the
-                # prompt) — index them BEFORE _emit can free the slot
-                self.prefix.insert(i, req.tokens)
+                # prompt) — index them BEFORE _emit can free the slot.
+                # An index error only loses future hits: degrade.
+                try:
+                    self.prefix.insert(i, req.tokens)
+                except Exception as e:
+                    self._degrade("prefix_insert", e)
             # first token stays on device — it feeds the slot's decode
             # steps through the last-token row, no host sync needed
             self._last = self._last.at[i].set(tok)
             sl.first_tok = tok
-            req.t_first = time.perf_counter()
+            req.t_first = self._clock()
             self._emit(i)
         if self.check_invariants:
             self.kv.check_no_aliasing()
@@ -416,24 +769,58 @@ class ContinuousBatchingScheduler:
             d = min(self.megastep_depth,
                     min(self.slots[i].request.max_new
                         - self.slots[i].n_emitted for i in dec))
-        mask = np.zeros((self.batch_slots,), bool)
+        # per-slot page growth, individually guarded: an allocator fault
+        # growing one slot evicts that request only; the rest decode on
+        ok = []
         for i in dec:
-            self.kv.alloc(i, int(self.kv.lens[i]) + d)
+            try:
+                self.kv.alloc(i, int(self.kv.lens[i]) + d)
+            except Exception as e:
+                self._release_slot(i, RequestState.FAILED,
+                                   error=f"page allocation failed: {e}",
+                                   error_type=type(e).__name__)
+                continue
+            ok.append(i)
+        if not ok:
+            return True                    # work happened: quarantines
+        mask = np.zeros((self.batch_slots,), bool)
+        for i in ok:
             mask[i] = True
+        rids = tuple(self.slots[i].request.rid for i in ok)
+
+        def dispatch(fb):
+            kw = {"fallback": True} if fb else {}
+            if d > 1:
+                last, hist, pages = self.engine.decode_megastep(
+                    self.kv.pages, self.kv.table_device(),
+                    self.kv.lens_device(), jnp.asarray(mask), self._last,
+                    d, page_size=self.page_size,
+                    max_depth=self.megastep_depth, **kw)
+                return last, [hist[t] for t in range(d)], pages
+            last, pages = self.engine.decode_step(
+                self.kv.pages, self.kv.table_device(),
+                self.kv.lens_device(), jnp.asarray(mask), self._last,
+                page_size=self.page_size, **kw)
+            return last, [last], pages
+
         t0 = time.perf_counter()
-        if d > 1:
-            self._last, hist, pages = self.engine.decode_megastep(
-                self.kv.pages, self.kv.table_device(),
-                self.kv.lens_device(), jnp.asarray(mask), self._last,
-                d, page_size=self.page_size,
-                max_depth=self.megastep_depth)
-            ticks = [hist[t] for t in range(d)]
-        else:
-            self._last, pages = self.engine.decode_step(
-                self.kv.pages, self.kv.table_device(),
-                self.kv.lens_device(), jnp.asarray(mask), self._last,
-                page_size=self.page_size)
-            ticks = [self._last]
+        try:
+            last, ticks, pages = self._guarded("decode_dispatch", dispatch,
+                                               rids=rids)
+        except Exception as e:
+            # single-victim attribution when the error names a rid (an
+            # injected poison request, or any error carrying .rid);
+            # otherwise the whole decoding set is poisoned
+            bad_rid = getattr(e, "rid", None)
+            victims = ([i for i in ok
+                        if self.slots[i].request.rid == bad_rid]
+                       if bad_rid in rids else ok)
+            for i in victims:
+                self._release_slot(i, RequestState.FAILED,
+                                   error=f"decode dispatch failed: {e}",
+                                   error_type=type(e).__name__)
+            return True
+        self._last = last
         self.kv.pages = pages
         self.stats.decode_dispatches += 1
         if self.sync_per_step:
@@ -442,12 +829,11 @@ class ContinuousBatchingScheduler:
         dt = time.perf_counter() - t0
         self.stats.decode_s += dt
         self.stats.decode_tick_ms.extend([dt * 1e3 / d] * d)
-        rids = tuple(self.slots[i].request.rid for i in dec)
         for tok_row in ticks:
             step_idx = len(self._history)
             self._history.append(tok_row)
             self.trace.append(("decode", rids))
-            for i in dec:
+            for i in ok:
                 self.kv.lens[i] += 1
                 self.slots[i].steps.append(step_idx)
                 self._emit(i)
@@ -457,77 +843,138 @@ class ContinuousBatchingScheduler:
 
     def _emit(self, i: int):
         sl = self.slots[i]
-        req = sl.request
         sl.n_emitted += 1
         self.stats.decode_tokens += 1
-        if sl.n_emitted == req.max_new:
-            now = time.perf_counter()
-            self._pending.append((req.rid, i, sl.first_tok,
-                                  tuple(sl.steps)))
-            self.stats.requests.append(RequestStats(
-                rid=req.rid, prompt_len=len(req.tokens),
-                new_tokens=req.max_new,
-                queue_wait_s=req.t_admit - req.t_enqueue,
-                ttft_s=req.t_first - req.t_enqueue,
-                total_s=now - req.t_enqueue,
-                decode_tps=req.max_new / max(now - req.t_first, 1e-9)))
-            self.trace.append(("finish", req.rid, i))
-            freed = self.kv.free(i)
-            self.trace.append(("free", i, tuple(freed)))
-            sl.request, sl.first_tok = None, None
-            sl.n_prefilled, sl.n_emitted, sl.steps = 0, 0, []
+        if sl.n_emitted == sl.request.max_new:
+            self._release_slot(i, RequestState.DONE)
 
     def _materialize(self):
         """Pull the device-side token history to host and assemble each
-        finished request's output (one transfer per run, not per step)."""
+        request's tokens (one transfer per run, not per step) — full
+        outputs for DONE requests, partial tokens into the outcome
+        record for evicted ones."""
         hist = (np.stack([np.asarray(h) for h in self._history])
                 if self._history else np.zeros((0, self.batch_slots),
                                                np.int32))
         for rid, slot, first, steps in self._pending:
             toks = np.concatenate(
                 [[np.asarray(first)], hist[list(steps), slot]]
-                if steps else [[np.asarray(first)]])
-            self._results[rid] = toks.astype(np.int32)
+                if steps else [[np.asarray(first)]]).astype(np.int32)
+            oc = self.outcomes.get(rid)
+            if oc is not None:
+                oc.tokens = toks
+            if oc is not None and oc.state == RequestState.DONE:
+                self._results[rid] = toks
         self._pending.clear()
 
     # --------------------------------------------------------------- run
     def step(self) -> bool:
-        """One scheduler tick: admit, one prefill chunk, one decode step.
-        Returns False once no work remains."""
+        """One scheduler tick: enforce deadlines/cancellations, admit,
+        one prefill chunk, one decode step.  Returns False once no work
+        remains."""
+        t0 = time.perf_counter()
+        self._ticks += 1
+        # chaos point: delay specs model stragglers (the watchdog must
+        # flag them); error specs model scheduler-internal failures
+        # (the run()-level try/finally must still release every page)
+        faults.maybe_fire("slow_tick", tick=self._ticks)
+        self._enforce_deadlines()
         self._admit()
         did_p = self._prefill_step()
         did_d = self._decode_step()
+        if self.watchdog is not None:
+            self.watchdog.record(time.perf_counter() - t0)
         return did_p or did_d or bool(self.queue)
 
-    def run(self, requests, max_new_tokens) -> tuple[list[np.ndarray],
-                                                     ServeStats]:
+    def run(self, requests, max_new_tokens, *,
+            ttft_budget_s=None, total_budget_s=None) \
+            -> tuple[list[np.ndarray | None], ServeStats]:
         """Serve ``requests`` (list of int32 prompt arrays) to completion.
-        ``max_new_tokens``: int, or a per-request sequence.  Returns
-        (per-request generated tokens in submission order, ServeStats).
+        ``max_new_tokens``: int, or a per-request sequence; the optional
+        deadline budgets broadcast the same way.  Returns (per-request
+        generated tokens in submission order — None for requests that
+        ended FAILED/CANCELLED/TIMED_OUT, whose structured
+        ``RequestOutcome`` in ``stats.outcomes`` carries the reason and
+        any partial tokens — and the ServeStats).
+
+        ``max_queue`` is not consulted for this bulk submission (the
+        whole batch is enqueued up front); it guards incremental
+        ``submit`` callers.  The page-pool leak audit
+        (``assert_all_free``) runs on EVERY exit path, including
+        exception exits, after live slots are released.
         """
         n = len(requests)
         mn = ([int(max_new_tokens)] * n if np.isscalar(max_new_tokens)
               else [int(m) for m in max_new_tokens])
         if len(mn) != n:
             raise ValueError("max_new_tokens list must match requests")
+
+        def _bcast(v):
+            if v is None or np.isscalar(v):
+                return [v] * n
+            return list(v)
+        tbs, wbs = _bcast(ttft_budget_s), _bcast(total_budget_s)
         t0 = time.perf_counter()
-        rids = [self.submit(r, m) for r, m in zip(requests, mn)]
+        # bulk submission bypasses the incremental-admission guards
+        # (bounded queue, shutdown rejection): the caller handed us the
+        # whole batch, and a SIGTERM racing this loop must not raise —
+        # the first tick's drain cancels the queue with structured
+        # outcomes instead
+        max_q, self.max_queue = self.max_queue, None
+        sd, self._shutdown = self._shutdown, None
+        draining, self._draining = self._draining, False
+        try:
+            rids = [self.submit(r, m, ttft_budget_s=tb, total_budget_s=wb)
+                    for r, m, tb, wb in zip(requests, mn, tbs, wbs)]
+        finally:
+            self.max_queue = max_q
+            self._shutdown = sd
+            self._draining = draining
         # every tick either prefills a chunk or decodes >=1 token, so this
         # bound is generous; hitting it means a scheduler bug, not load
         max_ticks = 10 + 2 * (sum(mn) + sum(
             -(-len(np.atleast_1d(r)) // self.chunk) for r in requests))
-        for _ in range(max_ticks):
-            if not self.step():
-                break
-        else:
-            raise RuntimeError("scheduler made no progress")
-        self._materialize()
-        self.stats.host_syncs += 1     # the one end-of-run materialize
-        self.stats.wall_s += time.perf_counter() - t0
-        if self.prefix is not None:
-            self.stats.prefix = self.prefix.snapshot_stats()
-        # teardown leak audit: every request freed — a page refcount
-        # still above zero (a free() that dropped a shared reference
-        # short) is a leak the free-list count alone cannot see
-        self.kv.assert_all_free()
-        return [self._results[r] for r in rids], self.stats
+        try:
+            for _ in range(max_ticks):
+                if not self.step():
+                    break
+            else:
+                raise SchedulerStallError(
+                    f"scheduler made no progress in {max_ticks} ticks",
+                    snapshot=self.snapshot())
+            self._materialize()
+            self.stats.host_syncs += 1     # the end-of-run materialize
+        except BaseException as e:
+            # exception exit: confine the damage — every in-flight
+            # request is evicted (pages freed), queued requests are
+            # drained to outcomes, partial tokens are salvaged — so the
+            # finally-audit below sees a clean pool and the caller sees
+            # structured outcomes beside the raised error
+            for i, sl in enumerate(self.slots):
+                if sl.request is not None:
+                    self._release_slot(
+                        i, RequestState.FAILED,
+                        error=f"run aborted: {e}",
+                        error_type=type(e).__name__)
+            while self.queue:
+                req = self.queue.popleft()
+                self._finalize_queued(req, RequestState.CANCELLED,
+                                      f"run aborted: {e}",
+                                      type(e).__name__)
+            try:
+                self._materialize()
+            except Exception:
+                pass                       # salvage only; keep original
+            raise
+        finally:
+            self.stats.wall_s += time.perf_counter() - t0
+            if self.watchdog is not None:
+                self.stats.stragglers = list(self.watchdog.events)
+            if self.prefix is not None:
+                self.stats.prefix = self.prefix.snapshot_stats()
+            # teardown leak audit — success AND error paths: every
+            # request freed, so a page refcount still above zero (a
+            # free() that dropped a shared reference short) is a leak
+            # the free-list count alone cannot see
+            self.kv.assert_all_free()
+        return [self._results.get(r) for r in rids], self.stats

@@ -17,6 +17,15 @@ The pieces here map one-to-one:
                       shardings (checkpoints store unsharded leaves and
                       mesh-agnostic logical specs — parallel/sharding
                       refits them to any divisible topology).
+
+The serving stack wires the first two in as well (the failure model in
+docs/serving.md): ``ContinuousBatchingScheduler(watchdog_factor=...)``
+arms a StepWatchdog over scheduler ticks and surfaces its events as
+``ServeStats.stragglers``, and ``launch/serve`` installs a
+GracefulShutdown around the serve loop — SIGTERM drains in-flight
+requests to completion, cancels the queue with structured outcomes,
+and still persists the plan store on exit.  Deterministic fault
+*injection* (the chaos-testing side) lives in runtime/faults.
 """
 from __future__ import annotations
 

@@ -1,0 +1,199 @@
+"""Seeded, deterministic fault injection for the serving stack.
+
+Chaos testing the scheduler's isolation guarantees needs faults that
+are (a) *deterministic* — the same seed and trace must fire the same
+faults at the same occurrences, or the survivor-parity gate cannot
+diff a faulted run against a fault-free one — and (b) *host-side* —
+an injected error must fire BEFORE a jitted dispatch consumes its
+donated buffers, so the retry / fallback ladder always operates on
+intact state.  This module provides both:
+
+  * :class:`FaultSpec` — one injection rule: WHERE (an
+    ``INJECTION_POINTS`` name), WHEN (explicit occurrence indices
+    ``at`` and/or a seeded per-occurrence probability ``p``), WHO
+    (``target_rid`` restricts a spec to dispatches involving one
+    request — the deterministic poison-request selector), and WHAT
+    (an exception to raise, or ``delay_s`` to sleep instead — the
+    slow-tick/straggler injection).
+  * :class:`FaultPlan` — a set of specs plus the seeded RNG and the
+    per-spec occurrence counters; records every fire in ``events``
+    and ``fired`` for test assertions.
+  * :func:`use_faults` — scopes a plan over a block, thread-locally,
+    exactly like ``gemm.use_backend``.  Nothing fires outside a
+    scope: :func:`maybe_fire` is a no-op when no plan is active, so
+    production code paths carry only a thread-local read.
+
+Injection points (the WHERE vocabulary — each is a named call site in
+the serving stack, all host-side):
+
+  ``alloc_oom``         kv_cache.PagedKVCache._take_free (page pool)
+  ``prefill_dispatch``  scheduler prefill-chunk dispatch (per attempt)
+  ``decode_dispatch``   scheduler decode/megastep dispatch (per attempt)
+  ``slow_tick``         top of every scheduler tick (delay or error)
+  ``prefix_cache``      prefix_cache lookup / admit / insert entry
+  ``plan_resolve``      gemm.policy.plan() miss path, before _resolve
+
+``plan_resolve`` is wired through a hook global on ``gemm.policy``
+(installed lazily at the first ``use_faults`` entry) rather than an
+import, because ``repro.gemm`` must not import ``repro.runtime`` at
+module level.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import random
+import threading
+import time
+
+INJECTION_POINTS = frozenset({
+    "alloc_oom", "prefill_dispatch", "decode_dispatch", "slow_tick",
+    "prefix_cache", "plan_resolve",
+})
+
+
+class FaultInjected(RuntimeError):
+    """The default injected error.  ``point`` names the injection site;
+    ``rid`` carries the targeted request (``FaultSpec.target_rid``) so
+    the scheduler's quarantine can attribute a batched-decode fault to
+    the single poisoned request instead of failing the whole batch."""
+
+    def __init__(self, point: str, msg: str | None = None, *,
+                 rid: int | None = None):
+        super().__init__(msg or f"injected fault at {point!r}"
+                         + (f" (rid {rid})" if rid is not None else ""))
+        self.point = point
+        self.rid = rid
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One injection rule.
+
+    ``at``: explicit 0-based occurrence indices (counted per spec, over
+    the occurrences the spec is *eligible* for — see ``target_rid``) at
+    which to fire.  ``p``: additionally fire with this per-occurrence
+    probability, drawn from the plan's seeded RNG (deterministic for a
+    deterministic schedule).  ``at=()`` with ``p=0`` fires on EVERY
+    eligible occurrence.
+
+    ``target_rid``: only occurrences whose context involves this
+    request id are eligible (matched against the ``rid``/``rids``
+    context the call site passes) — the poison-request selector.
+    Firing with a target raises :class:`FaultInjected` carrying the
+    rid, which the scheduler uses for single-victim quarantine.
+
+    ``delay_s`` > 0 turns the spec into a straggler injection: firing
+    sleeps instead of raising.  ``error`` overrides the raised
+    exception (an instance, or a zero-arg callable returning one) —
+    e.g. ``kv_cache.OutOfPagesError`` to exercise the exact production
+    error type.
+    """
+    point: str
+    at: tuple = ()
+    p: float = 0.0
+    delay_s: float = 0.0
+    error: object = None
+    target_rid: int | None = None
+
+    def __post_init__(self):
+        if self.point not in INJECTION_POINTS:
+            raise ValueError(
+                f"unknown injection point {self.point!r}; known: "
+                f"{sorted(INJECTION_POINTS)}")
+        object.__setattr__(self, "at", tuple(int(a) for a in self.at))
+
+
+class FaultPlan:
+    """A set of :class:`FaultSpec` rules plus the deterministic firing
+    state: one occurrence counter per spec, the seeded RNG behind
+    probabilistic specs, and the fire log (``events``: ``(point,
+    occurrence, ctx)`` tuples; ``fired``: per-point counts)."""
+
+    def __init__(self, *specs: FaultSpec, seed: int = 0):
+        self.specs = tuple(specs)
+        self.seed = seed
+        self._rng = random.Random(seed)
+        self._seen = [0] * len(self.specs)
+        self.fired: dict[str, int] = {}
+        self.events: list[tuple] = []
+
+    def check(self, point: str, ctx: dict) -> FaultSpec | None:
+        """Advance the counters for ``point`` and return the first spec
+        that fires at this occurrence (None: nothing fires)."""
+        hit = None
+        for idx, spec in enumerate(self.specs):
+            if spec.point != point:
+                continue
+            if spec.target_rid is not None:
+                rid = ctx.get("rid")
+                rids = ctx.get("rids") or ()
+                if spec.target_rid != rid and spec.target_rid not in rids:
+                    continue                    # not eligible: no count
+            occ = self._seen[idx]
+            self._seen[idx] += 1
+            fire = (occ in spec.at if (spec.at or spec.p <= 0)
+                    else False) or (spec.p > 0
+                                    and self._rng.random() < spec.p)
+            if not spec.at and spec.p <= 0:
+                fire = True                      # fire every occurrence
+            if fire and hit is None:
+                hit = spec
+                self.fired[point] = self.fired.get(point, 0) + 1
+                self.events.append((point, occ, dict(ctx)))
+        return hit
+
+
+_tls = threading.local()
+
+
+def active_plan() -> FaultPlan | None:
+    stack = getattr(_tls, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_faults(plan: FaultPlan):
+    """Scope ``plan`` over the block (thread-local, nestable — the
+    innermost plan wins), mirroring ``gemm.use_backend``."""
+    _install_policy_hook()
+    stack = getattr(_tls, "stack", None)
+    if stack is None:
+        stack = _tls.stack = []
+    stack.append(plan)
+    try:
+        yield plan
+    finally:
+        stack.pop()
+
+
+def maybe_fire(point: str, **ctx) -> None:
+    """The call-site hook: no-op unless a plan is active and one of its
+    specs fires at this occurrence.  A firing delay spec sleeps
+    ``delay_s``; anything else raises (``FaultInjected`` by default,
+    carrying the spec's ``target_rid``)."""
+    plan = active_plan()
+    if plan is None:
+        return
+    spec = plan.check(point, ctx)
+    if spec is None:
+        return
+    if spec.delay_s > 0:
+        time.sleep(spec.delay_s)
+        return
+    err = spec.error
+    if callable(err):
+        err = err()
+    if err is not None:
+        raise err
+    raise FaultInjected(point, rid=spec.target_rid)
+
+
+def _install_policy_hook() -> None:
+    """Install :func:`maybe_fire` as ``gemm.policy``'s plan-resolution
+    fault hook.  Lazy and idempotent: ``repro.gemm`` cannot import
+    ``repro.runtime`` at module level, so the wiring runs the other
+    way, at the first ``use_faults`` entry."""
+    from repro.gemm import policy
+    if getattr(policy, "_FAULT_HOOK", None) is not maybe_fire:
+        policy._FAULT_HOOK = maybe_fire

@@ -50,6 +50,8 @@ import collections
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime import faults as _faults
+
 PAGE_FREE = -1
 
 
@@ -214,6 +216,9 @@ class PagedKVCache:
     def _take_free(self, why: str) -> int:
         """Pop a free page (evicting reclaimable cached pages first under
         pressure); the caller owns its single reference."""
+        # chaos injection point: an injected OOM fires before any state
+        # changes, so the scheduler's quarantine sees a consistent pool
+        _faults.maybe_fire("alloc_oom", why=why)
         if not self._free and self._evictor is not None:
             self._evictor(1)
         if not self._free:

@@ -56,6 +56,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.runtime import faults as _faults
+
 
 @dataclasses.dataclass
 class PrefixCacheStats:
@@ -132,6 +134,9 @@ class PrefixCache:
         ``len(tokens) - 1`` positions (the last prompt token is always
         recomputed — its logits seed generation).  Pure: no refcount,
         LRU or pool mutation."""
+        # chaos point: fires before any walk — the scheduler degrades a
+        # failed lookup to cold prefill (full footprint, no install)
+        _faults.maybe_fire("prefix_cache", op="lookup")
         tokens = np.asarray(tokens).reshape(-1)
         P = self.page_size
         limit = len(tokens) - 1
@@ -169,6 +174,10 @@ class PrefixCache:
         divergence page by COW fork.  Returns the number of prompt
         positions covered — the scheduler sets the slot's length there
         and starts chunked prefill at the first uncovered token."""
+        # chaos point: fires before the install — a failed admit leaves
+        # the slot empty and the scheduler prefills cold (any partial
+        # install from a deeper failure is freed by the scheduler)
+        _faults.maybe_fire("prefix_cache", op="admit", slot=slot)
         if hit is None:
             hit = self.lookup(tokens)
         self.stats.lookups += 1
@@ -193,6 +202,9 @@ class PrefixCache:
         racing cold duplicate stays private and is freed normally);
         new runs register the slot's own page via ``mark_cached``.
         Returns the number of pages newly indexed."""
+        # chaos point: a failed insert only loses future hits — the
+        # request's own pages stay private and are freed normally
+        _faults.maybe_fire("prefix_cache", op="insert", slot=slot)
         tokens = np.asarray(tokens).reshape(-1)
         P = self.page_size
         node, added = self.root, 0

@@ -186,82 +186,98 @@ class Engine:
         # _pick applies, so tokens stay bit-identical) — each scheduler
         # tick is then a single device dispatch, which is what lets the
         # pool's decode pipeline match generate's device-side loop.
-        def _paged_prefill(params, pages, page_table, lens, tokens,
-                           logit_index, *, page_size):
-            with gemm_api.use_backend(backend), \
-                    gemm_api.use_plan_store(store):
+        # The builder is parameterized on the GEMM backend so the
+        # scheduler's degradation ladder can ask for a SECOND step set
+        # traced against the ``xla`` reference backend (built lazily on
+        # first fallback — see ``_paged_steps``); every registered
+        # backend passes the same bit-exactness gate, so a fallback
+        # dispatch is token-identical to the primary.
+        def _build_paged_steps(step_backend):
+            def _paged_prefill(params, pages, page_table, lens, tokens,
+                               logit_index, *, page_size):
+                with gemm_api.use_backend(step_backend), \
+                        gemm_api.use_plan_store(store):
+                    cache = {"layers": pages, "page_table": page_table,
+                             "lens": lens}
+                    logits, cache = transformer.prefill_chunk(
+                        cfg, params, cache, tokens, page_size=page_size,
+                        logit_index=logit_index, shard_fn=shard_fn)
+                    tok = jnp.argmax(logits[0]).astype(jnp.int32)
+                    return tok, cache["layers"]
+
+            def _decode_tick(params, pages, page_table, lens, write_mask,
+                             last_tokens, *, page_size):
+                """One pool decode tick: the SINGLE definition both the
+                per-tick step and the megastep body trace, so a megastep
+                of depth D is bit-identical to D per-tick dispatches."""
                 cache = {"layers": pages, "page_table": page_table,
-                         "lens": lens}
-                logits, cache = transformer.prefill_chunk(
-                    cfg, params, cache, tokens, page_size=page_size,
-                    logit_index=logit_index, shard_fn=shard_fn)
-                tok = jnp.argmax(logits[0]).astype(jnp.int32)
-                return tok, cache["layers"]
+                         "lens": lens, "write_mask": write_mask}
+                logits, cache = transformer.paged_decode_step(
+                    cfg, params, cache, last_tokens[:, None],
+                    page_size=page_size, shard_fn=shard_fn)
+                toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                # masked rows (idle / still prefilling) keep their token
+                new_last = jnp.where(write_mask, toks, last_tokens)
+                return new_last, cache["layers"]
 
-        def _decode_tick(params, pages, page_table, lens, write_mask,
-                         last_tokens, *, page_size):
-            """One pool decode tick: the SINGLE definition both the
-            per-tick step and the megastep body trace, so a megastep of
-            depth D is bit-identical to D per-tick dispatches."""
-            cache = {"layers": pages, "page_table": page_table,
-                     "lens": lens, "write_mask": write_mask}
-            logits, cache = transformer.paged_decode_step(
-                cfg, params, cache, last_tokens[:, None],
-                page_size=page_size, shard_fn=shard_fn)
-            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            # masked rows (idle / still prefilling) keep their token
-            new_last = jnp.where(write_mask, toks, last_tokens)
-            return new_last, cache["layers"]
+            def _paged_decode(params, pages, page_table, lens, write_mask,
+                              last_tokens, *, page_size):
+                with gemm_api.use_backend(step_backend), \
+                        gemm_api.decode_lane(), \
+                        gemm_api.use_plan_store(store):
+                    return _decode_tick(params, pages, page_table, lens,
+                                        write_mask, last_tokens,
+                                        page_size=page_size)
 
-        def _paged_decode(params, pages, page_table, lens, write_mask,
-                          last_tokens, *, page_size):
-            with gemm_api.use_backend(backend), gemm_api.decode_lane(), \
-                    gemm_api.use_plan_store(store):
-                return _decode_tick(params, pages, page_table, lens,
-                                    write_mask, last_tokens,
-                                    page_size=page_size)
+            def _paged_megastep(params, pages, page_table, lens,
+                                write_mask, last_tokens, n_ticks, *,
+                                page_size, max_depth):
+                """The fused decode megastep: up to ``max_depth`` decode
+                ticks — greedy argmax, paged KV write and next-token
+                embed each tick — inside ONE jitted ``lax.fori_loop``,
+                so the host dispatches (and syncs) once per ``n_ticks``
+                tokens per slot instead of once per token.  ``n_ticks``
+                is a TRACED operand (the while-loop trip count), so one
+                compilation serves every drain depth 1..max_depth.
+                Per-slot lengths advance device-side
+                (``lens + t * write_mask``); the scheduler pre-allocates
+                the pages the D ticks will write.  Returns (last tokens,
+                [max_depth, slots] token history — rows past ``n_ticks``
+                are zeros the host never reads, pages).
+                """
+                with gemm_api.use_backend(step_backend), \
+                        gemm_api.decode_lane(), \
+                        gemm_api.use_plan_store(store):
+                    hist0 = jnp.zeros((max_depth, last_tokens.shape[0]),
+                                      jnp.int32)
+                    step = write_mask.astype(jnp.int32)
 
-        def _paged_megastep(params, pages, page_table, lens, write_mask,
-                            last_tokens, n_ticks, *, page_size,
-                            max_depth):
-            """The fused decode megastep: up to ``max_depth`` decode
-            ticks — greedy argmax, paged KV write and next-token embed
-            each tick — inside ONE jitted ``lax.fori_loop``, so the
-            host dispatches (and syncs) once per ``n_ticks`` tokens per
-            slot instead of once per token.  ``n_ticks`` is a TRACED
-            operand (the while-loop trip count), so one compilation
-            serves every drain depth 1..max_depth.  Per-slot lengths
-            advance device-side (``lens + t * write_mask``); the
-            scheduler pre-allocates the pages the D ticks will write.
-            Returns (last tokens, [max_depth, slots] token history —
-            rows past ``n_ticks`` are zeros the host never reads, pages).
-            """
-            with gemm_api.use_backend(backend), gemm_api.decode_lane(), \
-                    gemm_api.use_plan_store(store):
-                hist0 = jnp.zeros((max_depth, last_tokens.shape[0]),
-                                  jnp.int32)
-                step = write_mask.astype(jnp.int32)
+                    def body(t, carry):
+                        last, pages, hist = carry
+                        last, pages = _decode_tick(
+                            params, pages, page_table, lens + t * step,
+                            write_mask, last, page_size=page_size)
+                        hist = jax.lax.dynamic_update_index_in_dim(
+                            hist, last, t, 0)
+                        return last, pages, hist
 
-                def body(t, carry):
-                    last, pages, hist = carry
-                    last, pages = _decode_tick(
-                        params, pages, page_table, lens + t * step,
-                        write_mask, last, page_size=page_size)
-                    hist = jax.lax.dynamic_update_index_in_dim(
-                        hist, last, t, 0)
-                    return last, pages, hist
+                    last, pages, hist = jax.lax.fori_loop(
+                        0, n_ticks, body, (last_tokens, pages, hist0))
+                    return last, hist, pages
 
-                last, pages, hist = jax.lax.fori_loop(
-                    0, n_ticks, body, (last_tokens, pages, hist0))
-                return last, hist, pages
+            return {
+                "prefill": jax.jit(_paged_prefill, donate_argnums=donate,
+                                   static_argnames=("page_size",)),
+                "decode": jax.jit(_paged_decode, donate_argnums=donate,
+                                  static_argnames=("page_size",)),
+                "megastep": jax.jit(
+                    _paged_megastep, donate_argnums=donate,
+                    static_argnames=("page_size", "max_depth")),
+            }
 
-        self._paged_prefill = jax.jit(_paged_prefill, donate_argnums=donate,
-                                      static_argnames=("page_size",))
-        self._paged_decode = jax.jit(_paged_decode, donate_argnums=donate,
-                                     static_argnames=("page_size",))
-        self._paged_megastep = jax.jit(
-            _paged_megastep, donate_argnums=donate,
-            static_argnames=("page_size", "max_depth"))
+        self._build_paged = _build_paged_steps
+        self._paged = _build_paged_steps(backend)
+        self._paged_fb = None           # lazy xla fallback step set
 
     # ------------------------------------------------------------- prefill
     def prefill(self, inputs):
@@ -273,29 +289,51 @@ class Engine:
         return self._decode(self.params, cache, tokens)
 
     # ----------------------------------------- paged steps (slot pool)
+    # The scheduler's dispatch degradation ladder (batching._guarded)
+    # keys off this flag: after a retry on the primary backend fails, it
+    # re-dispatches once with ``fallback=True``, which routes through a
+    # step set traced against the ``xla`` reference backend.  Bit-exact
+    # by the backend gate, so survivors of a backend fault keep
+    # token-identical outputs.
+    supports_fallback = True
+
+    def _paged_steps(self, fallback: bool):
+        if not fallback:
+            return self._paged
+        if self._paged_fb is None:
+            # the primary set IS the xla set when this engine already
+            # pins xla; otherwise trace a fresh set against it lazily
+            # (first fallback dispatch pays the trace/compile, later
+            # ones reuse it)
+            self._paged_fb = (self._paged if self.backend == "xla"
+                              else self._build_paged("xla"))
+        return self._paged_fb
+
     def prefill_chunk(self, pages, page_table, lens, tokens, logit_index,
-                      *, page_size: int):
+                      *, page_size: int, fallback: bool = False):
         """One chunked-prefill admission step: write ``tokens`` [1, C]
         into one slot's pages at its current length.  Returns
         (greedy token for chunk row ``logit_index`` — the prompt's last
-        real row on the final chunk — as a device scalar, pages)."""
-        return self._paged_prefill(self.params, pages, page_table, lens,
-                                   tokens, logit_index,
-                                   page_size=page_size)
+        real row on the final chunk — as a device scalar, pages).
+        ``fallback=True`` dispatches the xla-backend step set."""
+        return self._paged_steps(fallback)["prefill"](
+            self.params, pages, page_table, lens, tokens, logit_index,
+            page_size=page_size)
 
     def decode_step(self, pages, page_table, lens, write_mask,
-                    last_tokens, *, page_size: int):
+                    last_tokens, *, page_size: int,
+                    fallback: bool = False):
         """One decode step for the whole pool: feeds ``last_tokens``
         [slots] back through the model at per-slot lengths, write-masked
         so idle / still-prefilling slots touch nothing.  Returns
         (next last_tokens [slots] — masked rows unchanged, pages)."""
-        return self._paged_decode(self.params, pages, page_table, lens,
-                                  write_mask, last_tokens,
-                                  page_size=page_size)
+        return self._paged_steps(fallback)["decode"](
+            self.params, pages, page_table, lens, write_mask,
+            last_tokens, page_size=page_size)
 
     def decode_megastep(self, pages, page_table, lens, write_mask,
                         last_tokens, n_ticks: int, *, page_size: int,
-                        max_depth: int):
+                        max_depth: int, fallback: bool = False):
         """``n_ticks`` decode ticks for the whole pool in ONE device
         dispatch (jitted ``lax.fori_loop`` — greedy argmax + paged KV
         write + next-token embed per tick).  The caller must have
@@ -304,11 +342,10 @@ class Engine:
         and every tick is bit-identical to a ``decode_step`` dispatch.
         Returns (last tokens [slots], token history [max_depth, slots]
         — rows past ``n_ticks`` are zeros, pages)."""
-        return self._paged_megastep(self.params, pages, page_table, lens,
-                                    write_mask, last_tokens,
-                                    jnp.asarray(n_ticks, jnp.int32),
-                                    page_size=page_size,
-                                    max_depth=max_depth)
+        return self._paged_steps(fallback)["megastep"](
+            self.params, pages, page_table, lens, write_mask,
+            last_tokens, jnp.asarray(n_ticks, jnp.int32),
+            page_size=page_size, max_depth=max_depth)
 
     # ------------------------------------------------------- plan warmup
     def warmup_plans(self, *, batch_slots: int, prefill_chunk: int = 32,
@@ -466,7 +503,9 @@ class Engine:
               page_size: int = 16, num_pages: int | None = None,
               check_invariants: bool = False,
               sync_per_step: bool = False, megastep_depth: int = 1,
-              prefix_cache: bool = False):
+              prefix_cache: bool = False,
+              watchdog_factor: float | None = None, shutdown=None,
+              ttft_budget_s=None, total_budget_s=None):
         """Real continuous batching (greedy): slot refill mid-generation,
         paged KV cache, chunked prefill admission — runtime/batching.
 
@@ -480,9 +519,18 @@ class Engine:
         divergent token, reusing refcounted KV pages (COW-forked at
         the divergence page); ``ServeStats.prefix`` carries the
         hit/evict/COW counters.  Returns (list of generated-token
-        arrays in request order, batching.ServeStats).  Outputs are
+        arrays in request order — None for requests that ended in a
+        non-DONE terminal state, whose ``RequestOutcome`` lives in
+        ``stats.outcomes`` — and batching.ServeStats).  Outputs are
         bit-identical to per-request greedy ``generate`` at every
         megastep depth, with the cache on or off.
+
+        Fault-isolation knobs (docs/serving.md "Failure model"):
+        ``watchdog_factor`` arms the straggler watchdog over scheduler
+        ticks; ``shutdown`` (a ``GracefulShutdown``) drains the run on
+        SIGTERM; ``ttft_budget_s`` / ``total_budget_s`` set per-request
+        deadlines (scalar or per-request sequence, enforced at tick
+        boundaries — missed deadlines end TIMED_OUT, not raised).
         """
         from repro.runtime.batching import ContinuousBatchingScheduler
         sched = ContinuousBatchingScheduler(
@@ -490,8 +538,11 @@ class Engine:
             page_size=page_size, num_pages=num_pages,
             check_invariants=check_invariants,
             sync_per_step=sync_per_step, megastep_depth=megastep_depth,
-            prefix_cache=prefix_cache)
-        outs, stats = sched.run(requests, max_new_tokens)
+            prefix_cache=prefix_cache, watchdog_factor=watchdog_factor,
+            shutdown=shutdown)
+        outs, stats = sched.run(requests, max_new_tokens,
+                                ttft_budget_s=ttft_budget_s,
+                                total_budget_s=total_budget_s)
         stats.fused = self.fused if self.packed else None
         stats.quant = self.quant if self.packed else None
         stats.plan_cache = gemm_api.plan_cache_info()

@@ -113,6 +113,45 @@ def test_store_load_tolerates_corruption(tmp_path, blob):
     assert PS.PlanStore.load(path).invalidated is None
 
 
+@pytest.mark.parametrize("blob", [
+    b"this is not json {",                       # garbage
+    b'{"schema": 1, "plans"',                    # truncated mid-write
+    b'[1, 2, 3]',                                # wrong top-level type
+])
+def test_corrupt_store_into_live_serve(tmp_path, blob):
+    """Degradation end to end (the chaos-suite contract at the plan
+    layer): a server booted on a corrupt plan store must SERVE — the
+    store degrades to empty, the engine plans analytically, continuous
+    batching completes with bit-exact outputs, and save() re-persists
+    a clean store over the wreck."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.models import model_zoo
+    from repro.runtime.serve_loop import Engine
+
+    path = tmp_path / "plans.json"
+    path.write_bytes(blob)
+    store = PS.PlanStore.load(path)
+    assert store.invalidated is not None
+    cfg = model_zoo.reduced_config(model_zoo.get_config("stablelm-3b"))
+    eng = Engine(cfg, model_zoo.build(cfg), max_len=48, packed=True,
+                 plan_store=store)
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(1, cfg.vocab_size, l).astype(np.int32)
+            for l in (5, 17, 8)]
+    mns = [4, 3, 5]
+    refs = [np.asarray(eng.generate(jnp.asarray(r)[None], m)[0][0])
+            for r, m in zip(reqs, mns)]
+    outs, stats = eng.serve(reqs, batch_slots=2, max_new_tokens=mns,
+                            prefill_chunk=8, page_size=8)
+    assert stats.completed == 3
+    for o, r in zip(outs, refs):
+        np.testing.assert_array_equal(o, r)
+    store.save()
+    fresh = PS.PlanStore.load(path)
+    assert fresh.invalidated is None and len(fresh) > 0
+
+
 def test_store_skips_bad_entries_keeps_good(tmp_path):
     """Per-entry tolerance: one undecodable entry is dropped, the rest
     of the store survives."""
