@@ -17,6 +17,8 @@ import time
 import jax
 import numpy as np
 
+from repro.obs import spans as _spans
+
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 
 
@@ -48,12 +50,18 @@ def retry_on_noise(measure, accept, *, max_retries: int = 4):
     adds ``2 * tries`` reps.  Returns ``(row, tries)`` — the last row
     stands even if it never cleared, so a real regression still shows.
     """
-    row = measure(0)
-    tries = 0
-    while not accept(row) and tries < max_retries:
-        tries += 1
-        row = measure(2 * tries)
-    return row, tries
+    with _spans.span("retry_on_noise", max_retries=max_retries) as sp:
+        with _spans.span("measure", extra_reps=0):
+            row = measure(0)
+        tries = 0
+        while not accept(row) and tries < max_retries:
+            tries += 1
+            _spans.instant("noise_retry", tries=tries,
+                           extra_reps=2 * tries)
+            with _spans.span("measure", extra_reps=2 * tries):
+                row = measure(2 * tries)
+        sp.set(tries=tries, accepted=bool(accept(row)))
+        return row, tries
 
 
 def shared_prefix_trace(rng, *, requests: int, prompt_len: int, vocab: int,

@@ -1,0 +1,175 @@
+"""Table 12 — the observability layer's no-overhead claims, gated.
+
+An observability layer that slows the thing it observes corrupts its
+own numbers, so the obs PR carries its cost budget as a committed
+baseline:
+
+1. INACTIVE IS FREE: with no recorder/tracer/metrics installed, the
+   hook in ``gemm.execute`` is one module-level int check — measured
+   ``execute`` vs the bare ``_execute_impl`` must agree within
+   ``GATE_RTOL`` (3%) on every gated shape.
+2. RECORDING IS CHEAP: with an (unfenced) flight recorder active, the
+   per-dispatch record — plan fields, ring insert, seen-set probe —
+   must stay within ``GATE_RTOL`` of the bare path on the gated shapes
+   (dispatches big enough that the paper's serving traffic looks like
+   them; the tiny-shape rows are reported but not gated, since a
+   microsecond of bookkeeping is a visible fraction of a 10us GEMM and
+   no serving dispatch is that small — jitted serving dispatches pay
+   ZERO per-dispatch recorder cost by construction, manifests are
+   registered at trace time).
+3. TRACED SERVING (report-only): end-to-end ``generate`` under the
+   full obs stack (tracer + recorder + metrics) vs bare, on a reduced
+   engine — context for the per-dispatch gates, not gated itself
+   (seconds-scale end-to-end runs drift more than 3% from machine
+   noise alone).
+
+Below-threshold measurements re-measure with more reps
+(``common.retry_on_noise``) — never fudged, and a persistent failure
+fails the run.  Emits ``benchmarks/out/table12_obs.json`` and the
+version-tracked ``benchmarks/BENCH_obs.json``.  ``--dry-run`` gates
+one shape (the CI smoke).
+"""
+from __future__ import annotations
+
+import importlib
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import gemm as G
+from repro import obs
+
+_exec = importlib.import_module("repro.gemm.execute")
+
+GATE_RTOL = 0.03
+# (m, n, k, gated): tiny shapes are context, serving-scale shapes gate
+SHAPES = [(8, 64, 64, False),
+          (32, 256, 256, True),
+          (128, 512, 512, True),
+          (256, 1024, 1024, True)]
+
+
+def _measure_shape(m, n, k, *, trials):
+    rng = np.random.default_rng(m + n + k)
+    p = G.plan(m, n, k)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    # interleave the three paths' trials via common.time_fn's own
+    # warmup; bare first compiles the kernel both variants share
+    t_bare = common.time_fn(_exec._execute_impl, p, x, w, trials=trials)
+    t_inact = common.time_fn(G.execute, p, x, w, trials=trials)
+    rec = obs.FlightRecorder(capacity=65536)      # unfenced
+    with obs.use_recorder(rec):
+        t_rec = common.time_fn(G.execute, p, x, w, trials=trials)
+    assert rec.total >= trials
+    return {"M": m, "N": n, "K": k,
+            "t_bare_us": t_bare * 1e6,
+            "t_inactive_us": t_inact * 1e6,
+            "t_recorder_us": t_rec * 1e6,
+            "inactive_vs_bare": t_inact / t_bare,
+            "recorder_vs_bare": t_rec / t_bare,
+            "gflops_bare": common.gflops(m, n, k, t_bare)}
+
+
+def _traced_serve_overhead(trials: int = 3):
+    """End-to-end generate with the full obs stack vs bare (report-only)."""
+    from repro.models import model_zoo
+    from repro.runtime.serve_loop import Engine
+    cfg = model_zoo.reduced_config(model_zoo.get_config("stablelm-3b"))
+    eng = Engine(cfg, model_zoo.build(cfg), max_len=64, packed=True)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 24)),
+                          jnp.int32)
+    eng.generate(prompts, 8)                      # compile once
+
+    def bare():
+        return eng.generate(prompts, 8)[0]
+
+    def instrumented():
+        tracer, rec, reg = (obs.Tracer(), obs.FlightRecorder(),
+                            obs.MetricsRegistry())
+        with obs.use_tracer(tracer), obs.use_recorder(rec), \
+                obs.use_metrics(reg):
+            return eng.generate(prompts, 8)[0]
+
+    t_bare = common.time_fn(bare, trials=trials, warmup=1)
+    t_obs = common.time_fn(instrumented, trials=trials, warmup=1)
+    return {"t_bare_s": t_bare, "t_obs_s": t_obs,
+            "obs_vs_bare": t_obs / t_bare}
+
+
+def run(dry_run: bool = False, trials: int = 30, noise_retries: int = 4):
+    shapes = [(64, 256, 256, True)] if dry_run else SHAPES
+    rows = []
+    for m, n, k, gated in shapes:
+        def accept(r):
+            if not gated:
+                return True
+            return (r["inactive_vs_bare"] <= 1.0 + GATE_RTOL
+                    and r["recorder_vs_bare"] <= 1.0 + GATE_RTOL)
+        r, tries = common.retry_on_noise(
+            lambda extra: _measure_shape(m, n, k,
+                                         trials=trials + 10 * extra),
+            accept, max_retries=noise_retries)
+        r["gated"] = gated
+        r["noise_retries"] = tries
+        rows.append(r)
+    serve = None if dry_run else _traced_serve_overhead()
+    return rows, serve
+
+
+def main(argv=()):
+    dry = "--dry-run" in argv
+    rows, serve = run(dry_run=dry, trials=10 if dry else 30)
+    common.print_csv("table12_obs", rows)
+    bad = [r for r in rows if r["gated"] and
+           (r["inactive_vs_bare"] > 1.0 + GATE_RTOL
+            or r["recorder_vs_bare"] > 1.0 + GATE_RTOL)]
+    assert not bad, \
+        f"obs overhead gate failed ({GATE_RTOL:.0%} budget): {bad}"
+    if serve is not None:
+        print(f"# traced serve (report-only): obs_vs_bare "
+              f"{serve['obs_vs_bare']:.3f}")
+    if dry:
+        print("dry-run OK: inactive hook and active recorder both "
+              f"within {GATE_RTOL:.0%} of the bare GEMM path")
+        return rows
+    meta = {
+        "note": "obs overhead gates: inactive execute-hook and active "
+                "(unfenced) flight recorder vs the bare GEMM path, "
+                f"<= {GATE_RTOL:.0%} on gated (serving-scale) shapes; "
+                "tiny shapes reported for context, not gated; traced "
+                "end-to-end generate reported, not gated",
+        "protocol": "median over >=30 blocked trials per path; "
+                    "retry_on_noise with +10 reps per retry",
+        "gate_rtol": GATE_RTOL,
+        "schema": G.SCHEMA_VERSION,
+        "host": G.host_fingerprint(),
+        "traced_serve": serve,
+    }
+    common.write_table("table12_obs", rows, meta=meta)
+    summary = {
+        "max_inactive_vs_bare_gated": max(r["inactive_vs_bare"]
+                                          for r in rows if r["gated"]),
+        "max_recorder_vs_bare_gated": max(r["recorder_vs_bare"]
+                                          for r in rows if r["gated"]),
+        "gate_rtol": GATE_RTOL,
+        "traced_serve_obs_vs_bare": serve["obs_vs_bare"],
+        "rows": rows,
+    }
+    path = os.path.join(os.path.dirname(__file__), "BENCH_obs.json")
+    with open(path, "w") as f:
+        json.dump({"meta": {"baseline_of": "table12_obs",
+                            "tracked_since": "observability layer PR",
+                            **meta},
+                   "baseline": summary}, f, indent=1)
+    print(f"baseline -> {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

@@ -23,6 +23,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import bitexact, scheduler
+from repro.obs import spans as _spans
 
 BLOCK_N_CANDIDATES = (128, 256, 512, 1024)
 BLOCK_K_CANDIDATES = (128, 256, 512, 1024, 2048)
@@ -282,8 +283,11 @@ def measured_autotune(m: int, n: int, k: int, *, dtype=None,
 
     retries = 0
     while True:
-        meds = _time_interleaved(runs, trials=trials + 2 * retries,
-                                 warmup=warmup)
+        with _spans.span("autotune_measure", m=m, n=n, k=k,
+                         candidates=len(runs), round=retries,
+                         trials=trials + 2 * retries):
+            meds = _time_interleaved(runs, trials=trials + 2 * retries,
+                                     warmup=warmup)
         t_analytic = meds[0]                  # analytic plan is cands[0]
         order = sorted(range(len(cands)), key=lambda i: meds[i])
         best = order[0]

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import panel_gemm as _kernel
+from repro.obs import spans as _spans
 
 
 @jax.tree_util.register_dataclass
@@ -100,27 +101,34 @@ def pack(
     weight bytes per tile through the dequant-fused kernel.  The error
     ledger measures and tolerance-gates every concrete quantized pack
     (docs/quantization.md)."""
-    if quant is not None:
-        from repro.quant.formats import quantize_pack
+    with _spans.span("pack", n=int(w.shape[-1] if not transposed
+                                   else w.shape[-2]),
+                     k=int(w.shape[-2] if not transposed
+                           else w.shape[-1]),
+                     quant=quant or "fp32") as sp:
+        if quant is not None:
+            from repro.quant.formats import quantize_pack
+            if dtype is not None:
+                raise ValueError("dtype casts do not compose with quant= "
+                                 "(codes have a fixed storage type)")
+            return quantize_pack(w, quant, transposed=transposed,
+                                 block_n=block_n, block_k=block_k,
+                                 sharding=sharding)
+        if transposed:
+            n, k = w.shape
+            w = w.T
+        else:
+            k, n = w.shape
         if dtype is not None:
-            raise ValueError("dtype casts do not compose with quant= "
-                             "(codes have a fixed storage type)")
-        return quantize_pack(w, quant, transposed=transposed,
-                             block_n=block_n, block_k=block_k,
-                             sharding=sharding)
-    if transposed:
-        n, k = w.shape
-        w = w.T
-    else:
-        k, n = w.shape
-    if dtype is not None:
-        w = w.astype(dtype)
-    block_k = fit_block(k, block_k)
-    block_n = fit_block(n, block_n)
-    w = _pad_to(w, (block_k, block_n))
-    if sharding is not None:
-        w = jax.device_put(w, sharding)
-    return PackedWeight(data=w, n=n, k=k, block_n=block_n, block_k=block_k)
+            w = w.astype(dtype)
+        block_k = fit_block(k, block_k)
+        block_n = fit_block(n, block_n)
+        sp.set(block_n=block_n, block_k=block_k)
+        w = _pad_to(w, (block_k, block_n))
+        if sharding is not None:
+            w = jax.device_put(w, sharding)
+        return PackedWeight(data=w, n=n, k=k, block_n=block_n,
+                            block_k=block_k)
 
 
 def pack_fused(
@@ -150,9 +158,20 @@ def pack_fused(
         from repro.quant.formats import quantize_pack_fused
         if dtype is not None:
             raise ValueError("dtype casts do not compose with quant=")
-        return quantize_pack_fused(parts, quant, transposed=transposed,
-                                   block_n=block_n, block_k=block_k,
-                                   sharding=sharding)
+        with _spans.span("pack_fused", parts=len(parts),
+                         quant=quant):
+            return quantize_pack_fused(parts, quant,
+                                       transposed=transposed,
+                                       block_n=block_n, block_k=block_k,
+                                       sharding=sharding)
+    with _spans.span("pack_fused", parts=len(parts), quant="fp32"):
+        return _pack_fused_fp32(parts, transposed=transposed,
+                                block_n=block_n, block_k=block_k,
+                                dtype=dtype, sharding=sharding)
+
+
+def _pack_fused_fp32(parts, *, transposed, block_n, block_k, dtype,
+                     sharding) -> PackedWeight:
     ws = [jnp.swapaxes(w, -1, -2) if transposed else w for w in parts]
     if len(ws) < 2:
         raise ValueError("pack_fused needs at least two weights; "

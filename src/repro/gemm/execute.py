@@ -21,6 +21,8 @@ result is bit-identical across packed / per-call operands and across the
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 
@@ -29,6 +31,7 @@ from repro.gemm import backends as _backends
 from repro.gemm.plan import GemmPlan, PACK_NONE
 from repro.gemm.policy import _bitexact_gate
 from repro.kernels.panel_gemm import EpilogueSpec  # noqa: F401 (re-export)
+from repro.obs import recorder as _flight
 from repro.quant.formats import QuantizedPackedWeight
 
 
@@ -64,6 +67,15 @@ def execute(p: GemmPlan, x: jax.Array, w, *, bias=None, residual=None,
             out_dtype=None) -> jax.Array:
     """y[..., N_out] = epilogue(x[..., K] @ w), dispatched per ``p``.
 
+    Observability (repro.obs): when a flight recorder or manifest scope
+    is active, the dispatch is recorded — eager calls into the
+    recorder's ring (wall-timed; fenced with ``block_until_ready`` when
+    the recorder opted in, since async dispatch otherwise times the
+    enqueue), traced calls (operands are jit tracers — every serving
+    step) into the trace-time manifest of the enclosing
+    ``obs.manifest_scope``.  The inactive path is one module-level int
+    check; the active-path branch below never touches the math.
+
     Shapes and pack blocks are checked against the plan; ``p.dtype`` is
     cache-keying metadata, NOT an executed constraint — mixed-dtype
     operands (bf16 activations against fp32-packed weights in the
@@ -79,6 +91,29 @@ def execute(p: GemmPlan, x: jax.Array, w, *, bias=None, residual=None,
     under a glu epilogue, where the halves are combined in the store step
     and only the single ``p.n_out``-wide result comes back.
     """
+    if not _flight._HOT:
+        return _execute_impl(p, x, w, bias=bias, residual=residual,
+                             out_dtype=out_dtype)
+    rec = _flight.active_recorder()
+    t0 = time.perf_counter()
+    y = _execute_impl(p, x, w, bias=bias, residual=residual,
+                      out_dtype=out_dtype)
+    if isinstance(y, jax.core.Tracer):
+        # jit-trace time: no wall clock exists per dispatch — register
+        # the plan into the open manifest scope instead (once per
+        # compilation; obs.report apportions tick time at export)
+        _flight.on_traced(p, lead_m(x))
+    elif rec is not None:
+        fenced = rec.fence
+        if fenced:
+            jax.block_until_ready(y)
+        rec.record(p, lead_m(x), wall_s=time.perf_counter() - t0,
+                   fenced=fenced)
+    return y
+
+
+def _execute_impl(p: GemmPlan, x: jax.Array, w, *, bias=None,
+                  residual=None, out_dtype=None) -> jax.Array:
     backend = _backends.get_backend(p.backend)
     spec = p.epilogue
     _check((bias is not None) == bool(spec is not None and spec.bias),

@@ -42,6 +42,7 @@ from repro.gemm.plan import (EpilogueSpec, GemmPlan, LEVER_FINE_PANELS,
                              LEVER_PREPACK, PACK_NONE, PACK_PERCALL,
                              PACK_PREPACKED)
 from repro.kernels import panel_gemm as _kernel
+from repro.obs import spans as _spans
 
 # Occupancy target of the fine-panel lever: the paper tunes panels against
 # the two AMX blocks; the TPU analogue scores candidates against this many
@@ -617,28 +618,37 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
         # loop: adopt its cached plan (a hit), or — if it failed —
         # become the owner ourselves
     try:
-        if _FAULT_HOOK is not None:
-            _FAULT_HOOK("plan_resolve", m=m, n=n, k=k)
-        store = _plan_store.active_plan_store()
-        p = None
-        if store is not None:
-            sp = store.lookup(_store_key_of(key))
-            if (sp is not None and sp.shape == (m, n, k)
-                    and (not validate or sp.validated)):
-                p = sp
-        if p is None:
-            p = _resolve(m, n, k, dtype=dtype, backend=backend,
-                         num_cores=num_cores, block_m=block_m,
-                         block_n=block_n, block_k=block_k, pack=pack,
-                         transposed=transposed, sharding_key=skey,
-                         validate=validate, epilogue=epilogue,
-                         fused_n_splits=fused_n_splits,
-                         weight_format=weight_format, decode=decode,
-                         split_k=split_k)
+        # the plan-cache MISS path only: hits return above without a
+        # span, so plan_resolve events in a trace are exactly the plan
+        # churn the serving tests watch via plan_cache_info().misses
+        with _spans.span("plan_resolve", m=m, n=n, k=k, dtype=dtype,
+                         backend=backend, decode=bool(decode)) as span:
+            if _FAULT_HOOK is not None:
+                _FAULT_HOOK("plan_resolve", m=m, n=n, k=k)
+            store = _plan_store.active_plan_store()
+            p = None
             if store is not None:
-                store.put(_store_key_of(key), p)
-        _cache_insert(key, p)
-        return p
+                sp = store.lookup(_store_key_of(key))
+                if (sp is not None and sp.shape == (m, n, k)
+                        and (not validate or sp.validated)):
+                    p = sp
+                    span.set(source="plan_store")
+            if p is None:
+                p = _resolve(m, n, k, dtype=dtype, backend=backend,
+                             num_cores=num_cores, block_m=block_m,
+                             block_n=block_n, block_k=block_k, pack=pack,
+                             transposed=transposed, sharding_key=skey,
+                             validate=validate, epilogue=epilogue,
+                             fused_n_splits=fused_n_splits,
+                             weight_format=weight_format, decode=decode,
+                             split_k=split_k)
+                span.set(source="policy")
+                if store is not None:
+                    store.put(_store_key_of(key), p)
+            span.set(lever=p.lever, split_k=p.split_k,
+                     blocks=f"{p.block_m}x{p.block_n}x{p.block_k}")
+            _cache_insert(key, p)
+            return p
     finally:
         with _cache_lock:
             _inflight.pop(key, None)

@@ -27,16 +27,22 @@ import json
 import time
 
 from repro import gemm as gemm_api
+from repro import obs
 from repro.core import autotune
 from repro.models.model_zoo import PAPER_GEMM_SHAPES, PAPER_M
 
 
 def _sweep_one(m, n, k, *, weight_format, decode, label, args):
     t0 = time.perf_counter()
-    mp = autotune.measured_autotune(
-        m, n, k, weight_format=weight_format, decode=decode,
-        trials=args.trials, max_retries=args.max_retries,
-        max_candidates=args.max_candidates)
+    with obs.span("autotune_sweep", label=label, m=m, n=n, k=k,
+                  format=weight_format, decode=decode) as sp:
+        mp = autotune.measured_autotune(
+            m, n, k, weight_format=weight_format, decode=decode,
+            trials=args.trials, max_retries=args.max_retries,
+            max_candidates=args.max_candidates)
+        sp.set(analytic_kept=mp.analytic, speedup=float(mp.speedup),
+               candidates=mp.candidates, retries=mp.retries,
+               rejected=mp.rejected)
     row = {"label": label, "M": m, "N": n, "K": k,
            "format": weight_format, "decode": decode,
            "sweep_s": round(time.perf_counter() - t0, 3), **mp.row()}
@@ -71,7 +77,16 @@ def main(argv=None):
     ap.add_argument("--dry-run", action="store_true",
                     help="one tiny shape + store round-trip assert "
                          "(the CI smoke)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the sweep as a Chrome-trace/Perfetto "
+                         "timeline (autotune_sweep spans with per-round "
+                         "autotune_measure children)")
     args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace_out:
+        tracer = obs.Tracer()
+        obs.set_tracer(tracer)
 
     store = gemm_api.PlanStore.load(args.plan_store)
     if store.invalidated:
@@ -123,6 +138,12 @@ def main(argv=None):
     if args.dry_run:
         print("dry-run OK: sweep committed a gate-passed plan and the "
               "store round-trips")
+
+    if tracer is not None:
+        obs.set_tracer(None)
+        tracer.export_chrome_trace(args.trace_out)
+        print(f"trace written -> {args.trace_out} "
+              f"({len(tracer.events)} span events)")
 
     if args.out:
         with open(args.out, "w") as f:

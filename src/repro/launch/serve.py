@@ -10,6 +10,13 @@ through the continuous-batching pool (``--batch-slots`` slots, chunked
 prefill admission of ``--prefill-chunk`` rows) and reports per-request
 latency percentiles: queue wait, time-to-first-token, and per-request
 decode tokens/s — the stats fields docs/serving.md describes.
+
+Observability (docs/observability.md): ``--trace-out PATH`` records the
+whole run — pack, plan resolution, warmup, every scheduler tick, prefix
+cache and fault events, plus the GEMM flight recorder — as a
+Chrome-trace JSON loadable at ui.perfetto.dev and summarizable with
+``repro.launch.trace_report``; ``--metrics-out PATH`` writes the unified
+metrics registry's snapshot (JSON, plus Prometheus text at PATH.prom).
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import gemm as gemm_api
+from repro import obs
 from repro.launch.mesh import make_host_mesh
 from repro.models import model_zoo
 from repro.runtime.serve_loop import Engine
@@ -94,7 +102,34 @@ def main():
     ap.add_argument("--total-budget-s", type=float, default=None,
                     help="per-request total wall-clock deadline "
                          "(seconds, enqueue-relative)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON timeline of "
+                         "this run (span tracing + GEMM flight recorder; "
+                         "load at ui.perfetto.dev, or summarize with "
+                         "repro.launch.trace_report)")
+    ap.add_argument("--trace-fence", action="store_true",
+                    help="fence (block_until_ready) eagerly-dispatched "
+                         "GEMMs so their recorder entries carry real "
+                         "execution times and GFLOPS — serializes the "
+                         "pipeline (docs/observability.md)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a metrics snapshot at exit: JSON to PATH "
+                         "and Prometheus text beside it (PATH + '.prom')")
     args = ap.parse_args()
+
+    # obs activation happens BEFORE engine construction so pack /
+    # plan-resolve / warmup spans and the jitted steps' GEMM manifests
+    # land in the same timeline as the serve itself
+    tracer = rec = reg = None
+    if args.trace_out:
+        tracer = obs.Tracer()
+        obs.set_tracer(tracer)
+        rec = obs.FlightRecorder(fence=args.trace_fence)
+        obs.set_recorder(rec)
+    if args.metrics_out:
+        reg = obs.MetricsRegistry()
+        reg.add_collector(obs.gemm_collector)
+        obs.set_metrics(reg)
 
     cfg = model_zoo.reduced_config(model_zoo.get_config(args.arch))
     mesh = make_host_mesh()
@@ -266,6 +301,27 @@ def main():
         store.save()
         print(f"plan store saved -> {store.path} "
               f"({store.info().entries} entries)")
+
+    if tracer is not None:
+        obs.set_tracer(None)
+        obs.set_recorder(None)
+        tracer.export_chrome_trace(args.trace_out, recorder=rec)
+        s = rec.summary()
+        print(f"trace written -> {args.trace_out} "
+              f"({len(tracer.events)} span events"
+              + (f", {tracer.dropped} dropped" if tracer.dropped else "")
+              + f"; flight recorder: {s['total']} eager dispatches, "
+              f"{s['traced']} traced registrations, "
+              f"fence {'on' if s['fence'] else 'off'})")
+        print("  load at ui.perfetto.dev, or summarize: "
+              f"python -m repro.launch.trace_report {args.trace_out}")
+    if reg is not None:
+        obs.set_metrics(None)
+        reg.write_snapshot(args.metrics_out)
+        with open(args.metrics_out + ".prom", "w") as f:
+            f.write(reg.prometheus_text(collect=False))
+        print(f"metrics snapshot -> {args.metrics_out} "
+              f"(+ {args.metrics_out}.prom, Prometheus text)")
 
 
 if __name__ == "__main__":

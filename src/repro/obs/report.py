@@ -1,0 +1,177 @@
+"""Flight-recorder reductions: per-GEMM trace spans and the paper-style
+per-shape table.
+
+Two jobs, both operating on the exported trace object (the JSON
+``launch/serve --trace-out`` writes):
+
+* :func:`synthesize_gemm_events` — per-GEMM child spans for the jitted
+  serving path.  Inside jit, ``gemm.execute`` runs at trace time; a
+  per-dispatch wall clock does not exist, and pretending otherwise
+  would be fabrication.  What IS known exactly: the manifest (which
+  plans each compiled step dispatches, registered at trace time) and
+  each scheduler tick's measured span.  So for every tick span carrying
+  a ``step=<key>`` attribute we emit one child span per manifest plan,
+  with the tick's duration *apportioned by the plans' ``t_pred``
+  share* and each child explicitly flagged ``"apportioned": true`` —
+  honest attribution, visually useful in Perfetto, never mistakable
+  for a measurement.  Eager dispatches (warmup, direct execute) get
+  real measured spans from the recorder and are flagged
+  ``apportioned: false``.
+
+* :func:`per_shape_table` — the paper's shape-resolved characterization
+  from live traffic: per (m, n, k, format), the dispatch count, lever
+  mix, median achieved GFLOPS and median fraction-of-roofline.
+  Surfaced by the ``launch/trace_report`` CLI.
+"""
+from __future__ import annotations
+
+import math
+
+
+def _share_weights(records: list[dict]) -> list[float]:
+    """Relative duration weights for a step's manifest plans: scheduler
+    ``t_pred`` when finite, else the flop count — normalized to sum 1."""
+    raw = []
+    for r in records:
+        t = r.get("t_pred")
+        if t is None or not math.isfinite(t) or t <= 0:
+            t = 2.0 * r["m"] * r["n"] * r["k"]
+        raw.append(float(t))
+    total = sum(raw)
+    if total <= 0:
+        return [1.0 / len(raw)] * len(raw)
+    return [w / total for w in raw]
+
+
+def synthesize_gemm_events(trace: dict) -> list[dict]:
+    """Apportioned per-GEMM child spans for every tick span that names a
+    manifested step (see module docstring).  Returns the new events;
+    does not mutate ``trace``."""
+    manifests = trace.get("gemmManifests") or {}
+    if not manifests:
+        return []
+    out = []
+    for ev in trace.get("traceEvents", []):
+        if ev.get("ph") != "X":
+            continue
+        step = (ev.get("args") or {}).get("step")
+        recs = manifests.get(step)
+        if not recs:
+            continue
+        shares = _share_weights(recs)
+        ts = ev["ts"]
+        # megastep drains carry ticks=D: the manifest runs once per
+        # device-side tick, so the child sequence repeats D times
+        ticks = int((ev.get("args") or {}).get("ticks", 1)) or 1
+        dur_per_tick = ev["dur"] / ticks
+        for t in range(ticks):
+            for r, share in zip(recs, shares):
+                d = dur_per_tick * share
+                args = dict(r)
+                args["apportioned"] = True
+                args["step"] = step
+                wall_s = d * 1e-6
+                if wall_s > 0:
+                    args["gflops"] = (2.0 * r["m"] * r["n"] * r["k"]
+                                      / wall_s / 1e9)
+                    args["roofline_frac"] = _frac(r, wall_s)
+                out.append({"name": "gemm_dispatch", "ph": "X", "ts": ts,
+                            "dur": d, "pid": 1,
+                            "tid": ev.get("tid", 1), "args": args})
+                ts += d
+    return out
+
+
+def _frac(rec: dict, wall_s: float) -> float | None:
+    try:
+        from repro.roofline import gemm_roofline
+        bound = gemm_roofline(rec["m"], rec["n"], rec["k"],
+                              weight_format=rec.get("weight_format",
+                                                    "fp32"))
+        if bound and bound > 0:
+            return min(1.0, bound / wall_s)
+    except Exception:
+        pass
+    return None
+
+
+def gemm_events(trace: dict) -> list[dict]:
+    """Every per-GEMM dispatch span's args dict — measured (eager) and
+    apportioned (jitted) alike."""
+    return [ev.get("args", {}) for ev in trace.get("traceEvents", [])
+            if ev.get("name") == "gemm_dispatch" and ev.get("ph") == "X"]
+
+
+def _median(vals: list[float]) -> float | None:
+    vals = sorted(v for v in vals if v is not None)
+    if not vals:
+        return None
+    n = len(vals)
+    mid = n // 2
+    return vals[mid] if n % 2 else 0.5 * (vals[mid - 1] + vals[mid])
+
+
+def per_shape_table(trace: dict) -> list[dict]:
+    """The paper-style shape-resolved characterization from a trace:
+    one row per (m, n, k, weight_format) with dispatch count, lever
+    mix, median GFLOPS and median roofline fraction.  ``apportioned``
+    counts how many of the shape's samples are share-attributed rather
+    than measured (0 = all real timings)."""
+    groups: dict[tuple, dict] = {}
+    for a in gemm_events(trace):
+        if "m" not in a:
+            continue
+        key = (a["m"], a["n"], a["k"], a.get("weight_format", "fp32"))
+        g = groups.setdefault(key, {"count": 0, "apportioned": 0,
+                                    "levers": {}, "gflops": [],
+                                    "frac": [], "split_k": set(),
+                                    "epilogues": set()})
+        g["count"] += 1
+        if a.get("apportioned"):
+            g["apportioned"] += 1
+        lv = a.get("lever", "?")
+        g["levers"][lv] = g["levers"].get(lv, 0) + 1
+        if a.get("gflops") is not None:
+            g["gflops"].append(a["gflops"])
+        if a.get("roofline_frac") is not None:
+            g["frac"].append(a["roofline_frac"])
+        g["split_k"].add(a.get("split_k", 1))
+        g["epilogues"].add(a.get("epilogue", "none"))
+    rows = []
+    for (m, n, k, fmt), g in sorted(groups.items()):
+        lever_mix = ",".join(f"{lv}:{c}" for lv, c in
+                             sorted(g["levers"].items(),
+                                    key=lambda kv: -kv[1]))
+        rows.append({
+            "m": m, "n": n, "k": k, "format": fmt,
+            "dispatches": g["count"],
+            "apportioned": g["apportioned"],
+            "lever_mix": lever_mix,
+            "split_k": ",".join(str(s) for s in sorted(g["split_k"])),
+            "median_gflops": _median(g["gflops"]),
+            "median_roofline_frac": _median(g["frac"]),
+        })
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    """Fixed-width text rendering of :func:`per_shape_table` rows."""
+    if not rows:
+        return "(no GEMM dispatch spans in trace)"
+    cols = [("m", 6), ("n", 6), ("k", 6), ("format", 8),
+            ("dispatches", 10), ("apportioned", 11), ("lever_mix", 26),
+            ("split_k", 7), ("median_gflops", 13),
+            ("median_roofline_frac", 20)]
+    lines = ["  ".join(name.rjust(w) for name, w in cols),
+             "  ".join("-" * w for _, w in cols)]
+    for r in rows:
+        cells = []
+        for name, w in cols:
+            v = r[name]
+            if v is None:
+                v = "-"
+            elif isinstance(v, float):
+                v = f"{v:.3f}"
+            cells.append(str(v).rjust(w))
+        lines.append("  ".join(cells))
+    return "\n".join(lines)

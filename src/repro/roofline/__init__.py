@@ -1,8 +1,8 @@
 """Roofline: 3-term analysis from compiled dry-run artifacts."""
 from repro.roofline.analysis import (
-    CollectiveOp, collective_seconds, model_flops, parse_collectives,
-    roofline_terms,
+    CollectiveOp, collective_seconds, gemm_roofline, model_flops,
+    parse_collectives, roofline_terms,
 )
 
-__all__ = ["CollectiveOp", "collective_seconds", "model_flops",
-           "parse_collectives", "roofline_terms"]
+__all__ = ["CollectiveOp", "collective_seconds", "gemm_roofline",
+           "model_flops", "parse_collectives", "roofline_terms"]

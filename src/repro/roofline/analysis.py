@@ -149,6 +149,33 @@ def model_flops(cfg, shape) -> float:
     return 2.0 * n_active * shape.global_batch          # decode: 1 token
 
 
+# Weight bytes per element by pack-time format (the quantized formats
+# stream codes, not floats): fp32 full precision, int8 one byte,
+# ternary 2-bit codes packed 4-per-byte.
+_FORMAT_BYTES = {"fp32": 4.0, "int8": 1.0, "ternary": 0.25}
+
+
+def gemm_roofline(m: int, n: int, k: int, *, weight_format: str = "fp32",
+                  act_bytes: int = 4, hw: dict = HW) -> float:
+    """Analytic lower-bound seconds for ONE ``[m,k] @ [k,n]`` dispatch —
+    the denominator of the flight recorder's ``roofline_frac``.
+
+    Two terms, take the max: compute (``2mnk`` over fp32 peak — the
+    GEMM accumulates in fp32 regardless of pack format) and memory (the
+    operand/result traffic floor: activations + result at ``act_bytes``,
+    weights at the pack format's bytes-per-element — the term decode's
+    skinny-M dispatches live on, and why quantized decode beats fp32 at
+    the same FLOPs).  Single-dispatch and collective-free by
+    construction; the step-level three-term model stays
+    :func:`roofline_terms`."""
+    flops = 2.0 * m * n * k
+    wb = _FORMAT_BYTES.get(weight_format, 4.0)
+    bytes_moved = (m * k + m * n) * act_bytes + k * n * wb
+    t_compute = flops / hw["peak_flops_fp32"]
+    t_memory = bytes_moved / hw["hbm_bw"]
+    return max(t_compute, t_memory)
+
+
 def roofline_terms(*, flops_per_device: float, bytes_per_device: float,
                    collective: dict, chips: int, model_fl: float,
                    dtype: str = "bf16", hw: dict = HW) -> dict:

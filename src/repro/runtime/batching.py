@@ -57,6 +57,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import gemm as gemm_api
+from repro.obs import metrics as _metrics
+from repro.obs import spans as _spans
+from repro.obs.timing import FencedTimer
 from repro.runtime import fault_tolerance as FT
 from repro.runtime import faults
 from repro.runtime import kv_cache as KV
@@ -168,7 +171,9 @@ class ServeStats:
     degradations by reason (e.g. ``prefix_lookup`` — a prefix-cache
     error served cold); ``stragglers`` holds the serving watchdog's
     :class:`~repro.runtime.fault_tolerance.StragglerEvent` records
-    (``watchdog_factor`` runs only).
+    (``watchdog_factor`` runs only); ``trace_dropped`` counts audit-log
+    events the bounded scheduler trace dropped (oldest first) once past
+    its cap.
     """
     prefill_tokens: int = 0
     decode_tokens: int = 0
@@ -192,6 +197,7 @@ class ServeStats:
     backend_fallbacks: int = 0
     degraded: dict = dataclasses.field(default_factory=dict)
     stragglers: list = dataclasses.field(default_factory=list)
+    trace_dropped: int = 0
 
     @property
     def prefill_tps(self):
@@ -233,6 +239,40 @@ class ServeStats:
         vals = {"prefill": self.prefill_tick_ms,
                 "decode": self.decode_tick_ms}[phase]
         return float(np.percentile(vals, q)) if vals else 0.0
+
+
+class _BoundedTrace:
+    """The scheduler's audit log, bounded (ISSUE 9 satellite: the bare
+    ``list`` grew without limit — a long-lived scheduler leaked memory
+    at one tuple per event forever).  Drops the OLDEST events past
+    ``cap`` and counts them in ``dropped`` (surfaced as
+    ``ServeStats.trace_dropped`` and the ``serve_trace_dropped``
+    metric), so the recent window the invariant audits replay stays
+    intact while the log stops growing.  The cap is deliberately far
+    above any test run's event count — the audits see complete logs."""
+
+    __slots__ = ("cap", "dropped", "_buf")
+
+    def __init__(self, cap: int = 100_000):
+        self.cap = cap
+        self.dropped = 0
+        self._buf: collections.deque[tuple] = collections.deque(maxlen=cap)
+
+    def append(self, ev: tuple) -> None:
+        if len(self._buf) == self.cap:
+            self.dropped += 1
+        self._buf.append(ev)
+
+    def __iter__(self):
+        return iter(self._buf)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def __getitem__(self, idx):
+        if isinstance(idx, slice):
+            return list(self._buf)[idx]
+        return self._buf[idx]
 
 
 @dataclasses.dataclass
@@ -336,7 +376,10 @@ class ContinuousBatchingScheduler:
     at tick boundaries, as is cooperative :meth:`cancel`.
 
     ``trace`` records ``(event, ...)`` tuples — the scheduler's own audit
-    log, asserted over by the serving invariant tests.  ``run`` ends
+    log, asserted over by the serving invariant tests.  It is BOUNDED
+    (:class:`_BoundedTrace`): past the cap the oldest events are dropped
+    and counted (``ServeStats.trace_dropped``), so a long-lived
+    scheduler never grows its log without limit.  ``run`` ends
     with the pool's ``assert_all_free`` leak audit — on the success
     path AND on every exception path (try/finally): with every request
     freed, a page refcount that never returned to zero (possible only
@@ -384,7 +427,7 @@ class ContinuousBatchingScheduler:
         self.prefix = PrefixCache(self.kv) if prefix_cache else None
         self.slots = [_Slot() for _ in range(batch_slots)]
         self.queue: collections.deque[_Request] = collections.deque()
-        self.trace: list[tuple] = []
+        self.trace = _BoundedTrace()
         self.stats = ServeStats(megastep_depth=megastep_depth)
         self.outcomes = self.stats.outcomes        # rid -> RequestOutcome
         self._results: dict[int, np.ndarray] = {}
@@ -498,6 +541,8 @@ class ContinuousBatchingScheduler:
     def _degrade(self, reason: str, err: Exception) -> None:
         self.stats.degraded[reason] = self.stats.degraded.get(reason, 0) + 1
         self.trace.append(("degraded", reason, type(err).__name__))
+        _spans.instant("degraded", reason=reason,
+                       error=type(err).__name__)
 
     def _finalize_queued(self, req: _Request, state: RequestState,
                          error: str, error_type: str | None = None) -> None:
@@ -534,6 +579,8 @@ class ContinuousBatchingScheduler:
             self.trace.append(("finish", req.rid, i))
         else:
             self.trace.append(("evict", req.rid, i, state.value))
+            _spans.instant("evict", rid=req.rid, slot=i,
+                           state=state.value, error=error or "")
         freed = self.kv.free(i)
         self.trace.append(("free", i, tuple(freed)))
         sl.request, sl.first_tok = None, None
@@ -674,6 +721,8 @@ class ContinuousBatchingScheduler:
             self.trace.append(("admit", req.rid, i))
             if hit_tokens:
                 self.trace.append(("prefix_hit", req.rid, i, hit_tokens))
+                _spans.instant("prefix_hit", rid=req.rid, slot=i,
+                               tokens=hit_tokens)
             if self.check_invariants:
                 self.kv.check_no_aliasing()
 
@@ -716,20 +765,28 @@ class ContinuousBatchingScheduler:
                 jnp.asarray(end - start - 1, jnp.int32),
                 page_size=self.page_size, **kw)
 
-        t0 = time.perf_counter()
-        try:
-            tok, pages = self._guarded("prefill_dispatch", dispatch,
-                                       rid=req.rid)
-        except Exception as e:
-            self._release_slot(i, RequestState.FAILED,
-                               error=f"prefill dispatch failed: {e}",
-                               error_type=type(e).__name__)
-            return True
-        self.kv.pages = pages
-        if self.sync_per_step:
-            jax.block_until_ready(tok)
-            self.stats.host_syncs += 1
-        dt = time.perf_counter() - t0
+        # tick timing through the obs fenced timer: under sync_per_step
+        # the fence closes the clock AFTER the device finishes (real
+        # execution time, one host sync — counted); unfenced, the number
+        # is honestly a dispatch time (timer.fenced stays False).  The
+        # span's ``step=`` attr names the jitted body's GEMM manifest so
+        # the trace exporter can attribute per-dispatch GEMM work.
+        timer = FencedTimer(fence=self.sync_per_step)
+        with _spans.span("prefill_chunk", step=f"prefill_chunk_m{width}",
+                         rid=req.rid, slot=i, tokens=end - start,
+                         fenced=self.sync_per_step), timer:
+            try:
+                tok, pages = self._guarded("prefill_dispatch", dispatch,
+                                           rid=req.rid)
+            except Exception as e:
+                self._release_slot(i, RequestState.FAILED,
+                                   error=f"prefill dispatch failed: {e}",
+                                   error_type=type(e).__name__)
+                return True
+            self.kv.pages = pages
+            timer.fence(tok)
+        self.stats.host_syncs += timer.synced
+        dt = timer.elapsed_s
         self.stats.prefill_s += dt
         self.stats.prefill_tick_ms.append(dt * 1e3)
         self.stats.prefill_tokens += end - start
@@ -803,30 +860,34 @@ class ContinuousBatchingScheduler:
                 page_size=self.page_size, **kw)
             return last, [last], pages
 
-        t0 = time.perf_counter()
-        try:
-            last, ticks, pages = self._guarded("decode_dispatch", dispatch,
-                                               rids=rids)
-        except Exception as e:
-            # single-victim attribution when the error names a rid (an
-            # injected poison request, or any error carrying .rid);
-            # otherwise the whole decoding set is poisoned
-            bad_rid = getattr(e, "rid", None)
-            victims = ([i for i in ok
-                        if self.slots[i].request.rid == bad_rid]
-                       if bad_rid in rids else ok)
-            for i in victims:
-                self._release_slot(i, RequestState.FAILED,
-                                   error=f"decode dispatch failed: {e}",
-                                   error_type=type(e).__name__)
-            return True
-        self._last = last
-        self.kv.pages = pages
-        self.stats.decode_dispatches += 1
-        if self.sync_per_step:
-            jax.block_until_ready(self._last)
-            self.stats.host_syncs += 1
-        dt = time.perf_counter() - t0
+        # same fenced-timer discipline as _prefill_step; ``ticks=d``
+        # tells the trace exporter how many decode_step manifests this
+        # one dispatch covers (a megastep drain runs d device ticks)
+        timer = FencedTimer(fence=self.sync_per_step)
+        with _spans.span("decode_tick", step="decode_step", ticks=d,
+                         slots=len(ok), fenced=self.sync_per_step), timer:
+            try:
+                last, ticks, pages = self._guarded("decode_dispatch",
+                                                   dispatch, rids=rids)
+            except Exception as e:
+                # single-victim attribution when the error names a rid
+                # (an injected poison request, or any error carrying
+                # .rid); otherwise the whole decoding set is poisoned
+                bad_rid = getattr(e, "rid", None)
+                victims = ([i for i in ok
+                            if self.slots[i].request.rid == bad_rid]
+                           if bad_rid in rids else ok)
+                for i in victims:
+                    self._release_slot(i, RequestState.FAILED,
+                                       error=f"decode dispatch failed: {e}",
+                                       error_type=type(e).__name__)
+                return True
+            self._last = last
+            self.kv.pages = pages
+            self.stats.decode_dispatches += 1
+            timer.fence(self._last)
+        self.stats.host_syncs += timer.synced
+        dt = timer.elapsed_s
         self.stats.decode_s += dt
         self.stats.decode_tick_ms.extend([dt * 1e3 / d] * d)
         for tok_row in ticks:
@@ -972,6 +1033,12 @@ class ContinuousBatchingScheduler:
                 self.stats.stragglers = list(self.watchdog.events)
             if self.prefix is not None:
                 self.stats.prefix = self.prefix.snapshot_stats()
+            self.stats.trace_dropped = self.trace.dropped
+            # view publication: when a metrics registry is active, map
+            # this run's ServeStats into it (the dataclass itself is
+            # returned unchanged — the registry is a view, not a move)
+            if _metrics._ANY:
+                _metrics.publish_serve_stats(self.stats)
             # teardown leak audit — success AND error paths: every
             # request freed, so a page refcount still above zero (a
             # free() that dropped a shared reference short) is a leak

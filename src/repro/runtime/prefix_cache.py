@@ -56,6 +56,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs import spans as _spans
 from repro.runtime import faults as _faults
 
 
@@ -138,31 +139,34 @@ class PrefixCache:
         # failed lookup to cold prefill (full footprint, no install)
         _faults.maybe_fire("prefix_cache", op="lookup")
         tokens = np.asarray(tokens).reshape(-1)
-        P = self.page_size
-        limit = len(tokens) - 1
-        node, nodes, pos = self.root, [], 0
-        while pos + P <= limit:
-            child = node.children.get(self._run(tokens, pos))
-            if child is None:
-                break
-            nodes.append(child)
-            node = child
-            pos += P
-        # divergence page: the deepest frontier child sharing the
-        # longest head with the remaining tokens is the COW candidate
-        fork, reuse = None, 0
-        want = tuple(int(t) for t in tokens[pos:min(pos + P, limit)])
-        if want:
-            for run, child in node.children.items():
-                r = 0
-                for a, b in zip(run, want):
-                    if a != b:
-                        break
-                    r += 1
-                if r > reuse:
-                    fork, reuse = child, r
-        return PrefixHit(nodes=nodes, fork_node=fork, fork_reuse=reuse,
-                         tokens=pos + reuse)
+        with _spans.span("prefix_lookup", prompt=len(tokens)) as sp:
+            P = self.page_size
+            limit = len(tokens) - 1
+            node, nodes, pos = self.root, [], 0
+            while pos + P <= limit:
+                child = node.children.get(self._run(tokens, pos))
+                if child is None:
+                    break
+                nodes.append(child)
+                node = child
+                pos += P
+            # divergence page: the deepest frontier child sharing the
+            # longest head with the remaining tokens is the COW candidate
+            fork, reuse = None, 0
+            want = tuple(int(t) for t in tokens[pos:min(pos + P, limit)])
+            if want:
+                for run, child in node.children.items():
+                    r = 0
+                    for a, b in zip(run, want):
+                        if a != b:
+                            break
+                        r += 1
+                    if r > reuse:
+                        fork, reuse = child, r
+            sp.set(hit_tokens=pos + reuse, pages=len(nodes),
+                   cow=fork is not None and reuse > 0)
+            return PrefixHit(nodes=nodes, fork_node=fork, fork_reuse=reuse,
+                             tokens=pos + reuse)
 
     def _run(self, tokens, pos) -> tuple:
         return tuple(int(t) for t in tokens[pos:pos + self.page_size])
@@ -184,13 +188,15 @@ class PrefixCache:
         if hit.tokens == 0:
             self.stats.misses += 1
             return 0
-        self.pool.install(slot, hit.pages)
-        if hit.fork_node is not None and hit.fork_reuse > 0:
-            self.pool.fork(slot, hit.fork_node.page)
-            self.stats.cow_forks += 1
-            self._touch(hit.fork_node)
-        for n in hit.nodes:
-            self._touch(n)
+        with _spans.span("prefix_admit", slot=slot,
+                         hit_tokens=hit.tokens, pages=len(hit.nodes)):
+            self.pool.install(slot, hit.pages)
+            if hit.fork_node is not None and hit.fork_reuse > 0:
+                self.pool.fork(slot, hit.fork_node.page)
+                self.stats.cow_forks += 1
+                self._touch(hit.fork_node)
+            for n in hit.nodes:
+                self._touch(n)
         self.stats.hits += 1
         self.stats.hit_tokens += hit.tokens
         return hit.tokens
@@ -206,23 +212,26 @@ class PrefixCache:
         # request's own pages stay private and are freed normally
         _faults.maybe_fire("prefix_cache", op="insert", slot=slot)
         tokens = np.asarray(tokens).reshape(-1)
-        P = self.page_size
-        node, added = self.root, 0
-        for j in range(len(tokens) // P):
-            run = self._run(tokens, j * P)
-            child = node.children.get(run)
-            if child is None:
-                page = int(self.pool.page_table[slot, j])
-                if page < 0:
-                    raise ValueError(
-                        f"insert: slot {slot} has no page for prompt "
-                        f"run {j} — prompt not fully prefilled?")
-                child = _Node(run=run, page=page, parent=node)
-                node.children[run] = child
-                self.pool.mark_cached([page])
-                added += 1
-            self._touch(child)
-            node = child
+        with _spans.span("prefix_insert", slot=slot,
+                         prompt=len(tokens)) as sp:
+            P = self.page_size
+            node, added = self.root, 0
+            for j in range(len(tokens) // P):
+                run = self._run(tokens, j * P)
+                child = node.children.get(run)
+                if child is None:
+                    page = int(self.pool.page_table[slot, j])
+                    if page < 0:
+                        raise ValueError(
+                            f"insert: slot {slot} has no page for prompt "
+                            f"run {j} — prompt not fully prefilled?")
+                    child = _Node(run=run, page=page, parent=node)
+                    node.children[run] = child
+                    self.pool.mark_cached([page])
+                    added += 1
+                self._touch(child)
+                node = child
+            sp.set(added_pages=added)
         self.stats.inserted_pages += added
         return added
 
@@ -232,23 +241,26 @@ class PrefixCache:
         refcount-0 leaves (cascading as parents become leaves) until
         ``need`` pages came back to the free list or nothing is
         evictable."""
-        freed = 0
-        while freed < need:
-            victim = None
-            stack = list(self.root.children.values())
-            while stack:
-                n = stack.pop()
-                if n.children:
-                    stack.extend(n.children.values())
-                elif self.pool.refcount[n.page] == 0 and (
-                        victim is None or n.last_used < victim.last_used):
-                    victim = n
-            if victim is None:
-                break
-            victim.parent.children.pop(victim.run)
-            freed += len(self.pool.uncache([victim.page]))
-            self.stats.evicted_pages += 1
-        return freed
+        with _spans.span("prefix_evict", need=need) as sp:
+            freed = 0
+            while freed < need:
+                victim = None
+                stack = list(self.root.children.values())
+                while stack:
+                    n = stack.pop()
+                    if n.children:
+                        stack.extend(n.children.values())
+                    elif self.pool.refcount[n.page] == 0 and (
+                            victim is None
+                            or n.last_used < victim.last_used):
+                        victim = n
+                if victim is None:
+                    break
+                victim.parent.children.pop(victim.run)
+                freed += len(self.pool.uncache([victim.page]))
+                self.stats.evicted_pages += 1
+            sp.set(freed=freed)
+            return freed
 
     def clear(self) -> int:
         """Drop the whole index, returning idle pages to the free list."""

@@ -30,6 +30,9 @@ import numpy as np
 
 from repro import gemm as gemm_api
 from repro.models import model_zoo, transformer
+from repro.obs import recorder as _flight
+from repro.obs import spans as _spans
+from repro.obs.timing import FencedTimer
 from repro.parallel import sharding as Sh
 
 
@@ -160,16 +163,25 @@ class Engine:
         # forced prepack, split-K scored) and is plan-keyed apart from the
         # prefill plans of the same shapes.  Prefill traces never enter the
         # lane, so their plans and numerics are untouched.
+        # obs.manifest_scope wraps each jitted body like use_backend
+        # does: the body runs at TRACE time, so every gemm.execute the
+        # step dispatches registers its plan under the step's manifest
+        # key exactly once per compilation — the flight recorder's
+        # answer to "which GEMMs does this step run", with zero
+        # per-dispatch cost (docs/observability.md).
         def _prefill(params, inputs):
             with gemm_api.use_backend(backend), \
-                    gemm_api.use_plan_store(store):
+                    gemm_api.use_plan_store(store), \
+                    _flight.manifest_scope(
+                        f"prefill_m{inputs.shape[0] * inputs.shape[1]}"):
                 return transformer.prefill(cfg, params, inputs,
                                            max_len=max_len,
                                            shard_fn=shard_fn)
 
         def _decode(params, cache, tokens):
             with gemm_api.use_backend(backend), gemm_api.decode_lane(), \
-                    gemm_api.use_plan_store(store):
+                    gemm_api.use_plan_store(store), \
+                    _flight.manifest_scope("decode"):
                 return transformer.decode_step(cfg, params, cache, tokens,
                                                shard_fn=shard_fn)
 
@@ -196,7 +208,9 @@ class Engine:
             def _paged_prefill(params, pages, page_table, lens, tokens,
                                logit_index, *, page_size):
                 with gemm_api.use_backend(step_backend), \
-                        gemm_api.use_plan_store(store):
+                        gemm_api.use_plan_store(store), \
+                        _flight.manifest_scope(
+                            f"prefill_chunk_m{tokens.shape[1]}"):
                     cache = {"layers": pages, "page_table": page_table,
                              "lens": lens}
                     logits, cache = transformer.prefill_chunk(
@@ -224,7 +238,8 @@ class Engine:
                               last_tokens, *, page_size):
                 with gemm_api.use_backend(step_backend), \
                         gemm_api.decode_lane(), \
-                        gemm_api.use_plan_store(store):
+                        gemm_api.use_plan_store(store), \
+                        _flight.manifest_scope("decode_step"):
                     return _decode_tick(params, pages, page_table, lens,
                                         write_mask, last_tokens,
                                         page_size=page_size)
@@ -247,7 +262,8 @@ class Engine:
                 """
                 with gemm_api.use_backend(step_backend), \
                         gemm_api.decode_lane(), \
-                        gemm_api.use_plan_store(store):
+                        gemm_api.use_plan_store(store), \
+                        _flight.manifest_scope("decode_step"):
                     hist0 = jnp.zeros((max_depth, last_tokens.shape[0]),
                                       jnp.int32)
                     step = write_mask.astype(jnp.int32)
@@ -466,24 +482,32 @@ class Engine:
         stats.fused = self.fused if self.packed else None
         stats.quant = self.quant if self.packed else None
         b, s0 = prompts.shape[0], prompts.shape[1]
-        t0 = time.perf_counter()
-        logits, cache = self.prefill(prompts)
-        logits.block_until_ready()
-        stats.prefill_s += time.perf_counter() - t0
+        # phase timing through the obs fenced timer: both phases fence
+        # (generate's numbers were always execution times — the fence
+        # here is the same block_until_ready the bare pairs used to
+        # wrap, now attributed explicitly; see docs/observability.md)
+        with _spans.span("generate_prefill", step=f"prefill_m{b * s0}",
+                         rows=b, tokens=b * s0), \
+                FencedTimer(fence=True) as t:
+            logits, cache = self.prefill(prompts)
+            t.fence(logits)
+        stats.prefill_s += t.elapsed_s
         stats.prefill_tokens += b * s0
 
         key = jax.random.key(seed)
         out = []
         tok = self._pick(logits, key, greedy)
         out.append(tok)
-        t0 = time.perf_counter()
-        for i in range(max_new_tokens - 1):
-            key, sub = jax.random.split(key)
-            logits, cache = self.decode(cache, tok[:, None])
-            tok = self._pick(logits, sub, greedy)
-            out.append(tok)
-        jax.block_until_ready(tok)
-        stats.decode_s += time.perf_counter() - t0
+        with _spans.span("generate_decode", step="decode", rows=b,
+                         ticks=max_new_tokens - 1), \
+                FencedTimer(fence=True) as t:
+            for i in range(max_new_tokens - 1):
+                key, sub = jax.random.split(key)
+                logits, cache = self.decode(cache, tok[:, None])
+                tok = self._pick(logits, sub, greedy)
+                out.append(tok)
+            t.fence(tok)
+        stats.decode_s += t.elapsed_s
         stats.decode_tokens += b * max_new_tokens      # emitted per row
         stats.plan_cache = gemm_api.plan_cache_info()
         stats.vmem_clamped_plans = gemm_api.vmem_clamped_count()
