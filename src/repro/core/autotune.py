@@ -159,7 +159,8 @@ class MeasuredPlan:
 
 
 def _candidate_plans(p0, m, n, k, *, dtype, backend, num_cores,
-                     epilogue, weight_format, decode, max_candidates):
+                     epilogue, weight_format, decode, max_candidates,
+                     density_bucket=-1):
     """Analytic pruning: score block-triple (x decode split-K)
     candidates with the scheduler model, keep the ``max_candidates``
     best plus the analytic winner itself.  Every candidate resolves
@@ -171,6 +172,12 @@ def _candidate_plans(p0, m, n, k, *, dtype, backend, num_cores,
 
     bns = sorted({packing.fit_block(n, c) for c in BLOCK_N_CANDIDATES})
     bks = sorted({packing.fit_block(k, c) for c in BLOCK_K_CANDIDATES})
+    if density_bucket >= 0:
+        # sparse arm: the group-granular walk ignores block_k, and one
+        # block_k keeps every candidate's pack (and padded K, hence the
+        # synthetic weight's group structure) identical — the sweep's
+        # real lever is the column-panel width
+        bks = [p0.block_k]
     splits = (DECODE_SPLIT_K_CANDIDATES if (decode and p0.split_k > 1)
               else (p0.split_k,))
     scored = []
@@ -196,7 +203,8 @@ def _candidate_plans(p0, m, n, k, *, dtype, backend, num_cores,
                           num_cores=num_cores, block_m=p0.block_m,
                           block_n=bn, block_k=bk, pack=p0.pack,
                           epilogue=epilogue, weight_format=weight_format,
-                          decode=decode, split_k=s)
+                          decode=decode, split_k=s,
+                          density_bucket=density_bucket)
         except ValueError:
             continue          # split does not cut this K; not a candidate
         tr = (p.block_m, p.block_n, p.block_k, p.split_k)
@@ -232,7 +240,8 @@ def measured_autotune(m: int, n: int, k: int, *, dtype=None,
                       trials: int = 5, warmup: int = 2,
                       max_retries: int = 3, noise_rtol: float = NOISE_RTOL,
                       max_candidates: int = 4, commit: bool = True,
-                      seed: int = 0) -> MeasuredPlan:
+                      seed: int = 0,
+                      density_bucket: int = -1) -> MeasuredPlan:
     """Measure candidate plans for one ``[m,k] @ [k,n]`` dispatch and
     deploy the winner (module docstring has the full protocol).
 
@@ -241,6 +250,13 @@ def measured_autotune(m: int, n: int, k: int, *, dtype=None,
     and a store active, the gate-passed winner is committed under the
     policy-position store key (and adopted by this process's in-memory
     plan cache), with its measured time as provenance.
+
+    ``density_bucket >= 0`` sweeps the SPARSE-ternary arm
+    (``weight_format='ternary'`` only): the synthetic weight zeroes
+    whole GROUP_K K-groups to land in exactly that bucket, packs through
+    the compressed layout, and the winner commits under the
+    bucket-keyed store position a later ``plan_for_packed`` on a
+    same-bucket pack will ask.
     """
     import jax
     import jax.numpy as jnp
@@ -255,17 +271,38 @@ def measured_autotune(m: int, n: int, k: int, *, dtype=None,
     with _ps.no_plan_store():
         p0 = gemm.plan(m, n, k, dtype=dtype, backend=backend,
                        num_cores=num_cores, epilogue=epilogue,
-                       weight_format=weight_format, decode=decode)
+                       weight_format=weight_format, decode=decode,
+                       density_bucket=density_bucket)
         cands = _candidate_plans(
             p0, m, n, k, dtype=dtype, backend=backend,
             num_cores=num_cores, epilogue=epilogue,
             weight_format=weight_format, decode=decode,
-            max_candidates=max_candidates)
+            max_candidates=max_candidates, density_bucket=density_bucket)
 
     rng = np.random.default_rng(seed)
     quant = weight_format != "fp32"
+    sparse = density_bucket >= 0
     x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
-    w = jnp.asarray(rng.standard_normal((k, n)) * 0.02, jnp.float32)
+    w_np = (rng.standard_normal((k, n)) * 0.02).astype(np.float32)
+    if sparse:
+        # land the synthetic weight in EXACTLY the requested bucket:
+        # zero whole GROUP_K K-groups of the candidate-shared padded K
+        # (sparse candidates pin one block_k, so one weight serves all)
+        from repro.quant.formats import GROUP_K
+        k_pad = -(-k // p0.block_k) * p0.block_k
+        kg = k_pad // GROUP_K
+        pad_zero = kg - (-(-k // GROUP_K))      # all-pad tail groups
+        z = max(0, -(-density_bucket * kg // 10) - pad_zero)
+        for g in range(z):
+            lo, hi = g * GROUP_K, min((g + 1) * GROUP_K, k)
+            w_np[lo:hi] = 0.0
+        got = int((z + pad_zero) / kg * 10)     # density_bucket_of's math
+        if got != density_bucket:
+            raise ValueError(
+                f"density_bucket={density_bucket} is unreachable for "
+                f"K={k} at block_k={p0.block_k} ({kg} groups, {pad_zero} "
+                f"already zero from padding -> bucket {got})")
+    w = jnp.asarray(w_np)
 
     def make_run(p):
         # measure the plan's own deployment: a prepack plan pays its
@@ -273,9 +310,15 @@ def measured_autotune(m: int, n: int, k: int, *, dtype=None,
         # percall plan pays the in-call re-layout it actually costs
         if p.prepack:
             pw = packing.pack(w, block_n=p.block_n, block_k=p.block_k,
-                              quant=weight_format if quant else None)
+                              quant=weight_format if quant else None,
+                              sparse=True if sparse else None)
         else:
             pw = w
+        if sparse and getattr(pw, "density_bucket", -1) != p.density_bucket:
+            raise RuntimeError(
+                f"synthetic sparse pack landed in bucket "
+                f"{getattr(pw, 'density_bucket', -1)}, plan expects "
+                f"{p.density_bucket}")
         run = jax.jit(lambda x, pw: gemm.execute(p, x, pw))
         return lambda: run(x, pw)
 
@@ -325,13 +368,15 @@ def measured_autotune(m: int, n: int, k: int, *, dtype=None,
     if commit and store is not None:
         skey = _pol.store_key(m, n, k, dtype=dtype, backend=backend,
                               num_cores=num_cores, epilogue=epilogue,
-                              weight_format=weight_format, decode=decode)
+                              weight_format=weight_format, decode=decode,
+                              density_bucket=density_bucket)
         store.put(skey, final, t_meas=t_meas, autotuned=True)
         # adopt in-process too: the policy-position cache entry (if the
         # analytic resolution above seeded it) must agree with the store
         ck = _pol._plan_key(m, n, k, dtype=dtype, backend=backend,
                             num_cores=num_cores, epilogue=epilogue,
-                            weight_format=weight_format, decode=decode)
+                            weight_format=weight_format, decode=decode,
+                            density_bucket=density_bucket)
         _pol._cache_insert(ck, final)
         committed = True
 

@@ -91,6 +91,7 @@ def pack(
     dtype: Any = None,
     sharding: jax.sharding.Sharding | None = None,
     quant: str | None = None,
+    sparse: bool | None = None,
 ) -> PackedWeight:
     """Pack a weight once at model load (see module docstring).
 
@@ -100,7 +101,10 @@ def pack(
     the plan carries the format, and execute() streams 4x/16x fewer
     weight bytes per tile through the dequant-fused kernel.  The error
     ledger measures and tolerance-gates every concrete quantized pack
-    (docs/quantization.md)."""
+    (docs/quantization.md).  ``sparse`` (ternary only) controls the
+    compressed zero-group layout: ``None`` auto-compresses when the
+    pack's zero-group fraction clears ``quant.SPARSE_DENSITY_THRESHOLD``,
+    ``True`` forces it, ``False`` keeps the dense layout."""
     with _spans.span("pack", n=int(w.shape[-1] if not transposed
                                    else w.shape[-2]),
                      k=int(w.shape[-2] if not transposed
@@ -113,7 +117,10 @@ def pack(
                                  "(codes have a fixed storage type)")
             return quantize_pack(w, quant, transposed=transposed,
                                  block_n=block_n, block_k=block_k,
-                                 sharding=sharding)
+                                 sharding=sharding, sparse=sparse)
+        if sparse:
+            raise ValueError("sparse= is a ternary pack-time lever; it "
+                             "requires quant='ternary'")
         if transposed:
             n, k = w.shape
             w = w.T
@@ -140,6 +147,7 @@ def pack_fused(
     dtype: Any = None,
     sharding: jax.sharding.Sharding | None = None,
     quant: str | None = None,
+    sparse: bool | None = None,
 ) -> PackedWeight:
     """Horizontally fuse same-input weights into ONE pack (paper lever 2
     applied across projections): concatenate along N at load, so one
@@ -163,7 +171,10 @@ def pack_fused(
             return quantize_pack_fused(parts, quant,
                                        transposed=transposed,
                                        block_n=block_n, block_k=block_k,
-                                       sharding=sharding)
+                                       sharding=sharding, sparse=sparse)
+    if sparse:
+        raise ValueError("sparse= is a ternary pack-time lever; it "
+                         "requires quant='ternary'")
     with _spans.span("pack_fused", parts=len(parts), quant="fp32"):
         return _pack_fused_fp32(parts, transposed=transposed,
                                 block_n=block_n, block_k=block_k,

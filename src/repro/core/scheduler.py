@@ -53,24 +53,36 @@ class PanelPlan:
 
 def plan(m: int, n: int, k: int, *, block_m: int, block_n: int,
          block_k: int, dtype_bytes: int = 4, num_cores: int = 1,
-         peak_flops: float = PEAK_FLOPS_F32, split_k: int = 1) -> PanelPlan:
+         peak_flops: float = PEAK_FLOPS_F32, split_k: int = 1,
+         weight_density: float = 1.0,
+         sparse_index_bytes: float = 0.0) -> PanelPlan:
     """``split_k > 1`` scores the decode lane's reduction-side panels:
     the grid gains ``split_k`` parallel K slices per output panel
     (occupancy restored where a skinny M exposes almost none), paid for
     by the combine epilogue — ``split_k`` fp32 partials written and
     re-read plus ``split_k - 1`` panel adds.  The decode policy arm
     picks the candidate whose predicted time wins (paper Fig. 2's
-    sweep, applied to the K dimension)."""
+    sweep, applied to the K dimension).
+
+    ``weight_density`` scores the sparse-ternary arm: the kernel
+    streams (and multiplies) only the occupied K-group fraction, so the
+    weight-side HBM term, the compute term, and the K-grid depth scale
+    by it; ``sparse_index_bytes`` adds the occupancy-bitmap +
+    group-offset slab the sparse walk reads once per dispatch — the
+    overhead side of ``gemm.policy.sparse_threshold``'s break-even."""
     gm, gn, gk = (math.ceil(m / block_m), math.ceil(n / block_n),
                   math.ceil(k / block_k))
+    if weight_density < 1.0:
+        gk = max(1, math.ceil(gk * weight_density))
     panels = gm * gn * split_k
     # tail utilization: last wave of panels may underfill the cores
     waves = math.ceil(panels / num_cores)
     occ = panels / (waves * num_cores)
     vm = vmem_bytes(block_m, block_n, block_k, split_k=split_k)
     # HBM traffic: x re-read per column panel, w re-read per row panel.
-    hbm = dtype_bytes * (m * k * gn + k * n * gm + 2 * m * n)
-    t_c = 2.0 * m * n * k / (peak_flops * num_cores)
+    hbm = dtype_bytes * (m * k * gn + weight_density * k * n * gm
+                         + 2 * m * n) + sparse_index_bytes
+    t_c = 2.0 * m * n * k * weight_density / (peak_flops * num_cores)
     if split_k > 1:
         # combine cost: the partials slab round-trips HBM once, and the
         # tree adds are extra (cheap) vector work

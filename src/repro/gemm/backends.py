@@ -198,9 +198,35 @@ def _run_interpret(x_p, w_p, **kw):
 # fused path deletes.
 def _run_quant_xla(x_p, codes, scales, *, weight_format, block_m, block_n,
                    block_k, out_dtype, epilogue=None, bias=None,
-                   residual=None, split_k=1):
+                   residual=None, split_k=1, sparse_layout=None):
     del block_m, block_n, block_k
     from repro.quant import formats as _F
+    if sparse_layout is not None:
+        # compressed-ternary lane: gather the activation columns of the
+        # surviving K-groups (static slices — the group union is pack
+        # metadata) and dot against the compacted dequantized panels.
+        # The dense lane materializes the FULL K x N fp32 dequant; this
+        # one materializes only the occupied fraction — the weight-byte
+        # (and dequant-flop) cut IS the sparse win on this backend.
+        assert split_k == 1, "sparse plans run split_k=1 (policy-forced)"
+        from repro.quant.formats import GROUP_K
+        k_groups, group_index, _bitmap, _bn = sparse_layout
+        if not group_index:          # fully-zero weight
+            acc = jnp.zeros((x_p.shape[0], codes.shape[-1]), jnp.float32)
+        else:
+            if len(group_index) == k_groups:
+                x_c = x_p            # degenerate union: nothing removed
+            else:
+                x_c = jnp.concatenate(
+                    [x_p[:, g * GROUP_K:(g + 1) * GROUP_K]
+                     for g in group_index], axis=1)
+            w = _F.dequantize_padded(codes, scales, weight_format)
+            w = jax.lax.optimization_barrier(w)
+            acc = jnp.dot(x_c, w, preferred_element_type=jnp.float32)
+        if epilogue is not None:
+            acc = _kernel.apply_epilogue(acc, epilogue, bias=bias,
+                                         residual=residual)
+        return acc.astype(out_dtype or x_p.dtype)
     if split_k > 1:
         # per-slice dequant + slice dots: each K slice's dequantized
         # panel is materialized (barriered, same rationale as below) and
@@ -237,8 +263,15 @@ def _run_quant_xla(x_p, codes, scales, *, weight_format, block_m, block_n,
 def _run_quant_pallas(x_p, codes, scales, *, weight_format, block_m,
                       block_n, block_k, out_dtype, epilogue=None,
                       bias=None, residual=None, split_k=1,
-                      interpret=False):
+                      interpret=False, sparse_layout=None):
     from repro.quant import kernels as _qk
+    if sparse_layout is not None:
+        assert split_k == 1, "sparse plans run split_k=1 (policy-forced)"
+        return _qk.sparse_quant_panel_gemm(
+            x_p, codes, scales, bias, residual,
+            sparse_layout=sparse_layout, block_m=block_m,
+            block_n=block_n, out_dtype=out_dtype, epilogue=epilogue,
+            interpret=interpret)
     if split_k > 1:
         return _qk.quant_panel_gemm_splitk(
             x_p, codes, scales, bias, residual,

@@ -32,7 +32,8 @@ from repro.gemm.plan import GemmPlan, PACK_NONE
 from repro.gemm.policy import _bitexact_gate
 from repro.kernels.panel_gemm import EpilogueSpec  # noqa: F401 (re-export)
 from repro.obs import recorder as _flight
-from repro.quant.formats import QuantizedPackedWeight
+from repro.quant.formats import (QuantizedPackedWeight,
+                                 SparseTernaryPackedWeight)
 
 
 class PlanMismatchError(ValueError):
@@ -138,6 +139,16 @@ def _execute_impl(p: GemmPlan, x: jax.Array, w, *, bias=None,
         _check(w.fmt == p.weight_format,
                f"pack format {w.fmt!r} vs plan "
                f"weight_format={p.weight_format!r}")
+        sparse = isinstance(w, SparseTernaryPackedWeight)
+        _check(sparse == p.sparse,
+               f"operand {'is' if sparse else 'is not'} a sparse-ternary "
+               f"pack but plan density_bucket={p.density_bucket} "
+               f"({p.describe()}); re-plan via plan_for_packed")
+        if sparse:
+            _check(w.density_bucket == p.density_bucket,
+                   f"pack density_bucket={w.density_bucket} vs plan "
+                   f"density_bucket={p.density_bucket}; the pack was "
+                   f"re-quantized since the plan resolved — re-plan")
     if isinstance(w, packing.PackedWeight):
         _check((w.k, w.n) == (p.k, p.n),
                f"packed weight {w.shape} vs plan ({p.k},{p.n})")
@@ -224,6 +235,10 @@ def _execute_impl(p: GemmPlan, x: jax.Array, w, *, bias=None,
                f"backend {p.backend!r} has no dequant-fused run "
                f"(register_backend(..., run_quant=)); it cannot execute "
                f"weight_format={p.weight_format!r} plans")
+        if isinstance(w, SparseTernaryPackedWeight):
+            # static metadata tuple — hashable, so jit-traced dispatch
+            # keys the compiled sparse walk per compressed layout
+            epi_kw["sparse_layout"] = w.sparse_layout
         y = run_q(x2, w_p, w.scales, weight_format=p.weight_format,
                   block_m=p.block_m, block_n=p.block_n,
                   block_k=p.block_k, out_dtype=out_dtype, **epi_kw)
@@ -290,6 +305,6 @@ def validate_plan(p: GemmPlan) -> bool:
             return False
         return quant_gate(p.block_m, p.block_n, p.block_k,
                           p.weight_format, epilogue=p.epilogue,
-                          split_k=p.split_k)
+                          split_k=p.split_k, sparse=p.sparse)
     return _bitexact_gate(p.block_m, p.block_n, p.block_k,
                           epilogue=p.epilogue, split_k=p.split_k)

@@ -75,6 +75,14 @@ class GemmPlan:
     canonical decode M — never per operand M — so every decode-bucket
     plan for one weight shares one slice map and ``serve`` stays
     bit-identical to per-request ``generate``.
+
+    Sparse-ternary field: ``density_bucket`` is ``-1`` on the dense arm
+    and the pack's zero-group-fraction decile (0..9, see
+    ``quant.density_bucket_of``) on a plan resolved for a
+    ``SparseTernaryPackedWeight`` — plan-keyed, so the sparse and dense
+    ternary arms for one shape never alias in the cache or the plan
+    store.  Sparse plans execute the group-granular sparse walk (which
+    ignores ``block_k``) and always carry ``split_k=1``.
     """
     m: int
     n: int
@@ -97,6 +105,7 @@ class GemmPlan:
     weight_format: str = "fp32"
     split_k: int = 1
     decode: bool = False
+    density_bucket: int = -1
 
     # ----------------------------------------------------------- geometry
     @property
@@ -135,6 +144,11 @@ class GemmPlan:
         return self.weight_format != "fp32"
 
     @property
+    def sparse(self) -> bool:
+        """True when this plan executes the compressed-ternary walk."""
+        return self.density_bucket >= 0
+
+    @property
     def n_out(self) -> int:
         """Output column count execute() returns.
 
@@ -157,6 +171,8 @@ class GemmPlan:
             epi += f", fused={self.fused_n_splits}"
         if self.quantized:
             epi += f", weight_format={self.weight_format}"
+        if self.sparse:
+            epi += f", sparse(bucket={self.density_bucket})"
         if self.decode:
             epi += f", lane=decode, split_k={self.split_k}"
         elif self.split_k != 1:

@@ -58,7 +58,9 @@ from repro.gemm.plan import EpilogueSpec, GemmPlan
 # makes stored plans untrustworthy (e.g. new plan-keyed fields, kernel
 # VMEM accounting changes).  A stored file with any other version is
 # discarded wholesale at load.
-SCHEMA_VERSION = 1
+# v2: sparse-ternary arm — plans carry density_bucket, store keys grew
+# the bucket element, and the scheduler/VMEM models score sparse walks.
+SCHEMA_VERSION = 2
 
 StoreInfo = collections.namedtuple(
     "StoreInfo", ["hits", "misses", "autotuned", "entries", "path"])

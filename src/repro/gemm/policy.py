@@ -197,7 +197,8 @@ def _warn_vmem_clamp(key: tuple, requested: tuple, got: tuple):
 
 def _fit_vmem(bm: int, bn: int, bk: int, dtype: str,
               epilogue: EpilogueSpec | None,
-              weight_format: str = "fp32", split_k: int = 1):
+              weight_format: str = "fp32", split_k: int = 1,
+              sparse_groups: int = 0, sparse_n: int = 0):
     """Shrink the block triple until ``kernels.panel_gemm.vmem_bytes``
     fits the VMEM budget (satellite: an explicit or fused-wide triple —
     a glu epilogue doubles the weight + accumulator tiles — could
@@ -210,13 +211,20 @@ def _fit_vmem(bm: int, bn: int, bk: int, dtype: str,
     triples that clamp at fp32 can stand at reduced precision.
     ``split_k`` sizes the decode lane's fp32 partials slab into the
     same budget (the combine epilogue holds every slice's partial for
-    one output tile)."""
+    one output tile).  ``sparse_groups > 0`` budgets the sparse-ternary
+    walk instead of the dense K stream (the kernel's K step is pinned
+    at ``GROUP_K`` regardless of block_k); ``sparse_n`` is the logical
+    N the occupancy matrix spans, so its per-panel width is re-derived
+    as the shrink loop narrows block_n."""
     dt = jnp.dtype(dtype)
     clamped = False
     quant = weight_format != "fp32"
-    while _kernel.vmem_bytes(bm, bn, bk, dt, epilogue=epilogue,
-                             weight_format=weight_format,
-                             split_k=split_k) > _kernel.VMEM_BUDGET:
+    while _kernel.vmem_bytes(
+            bm, bn, bk, dt, epilogue=epilogue,
+            weight_format=weight_format, split_k=split_k,
+            sparse_groups=sparse_groups,
+            sparse_panels=(max(1, -(-sparse_n // bn)) if sparse_groups
+                           else 0)) > _kernel.VMEM_BUDGET:
         if bk >= bn and bk > 128:
             bk = max(128, bk // 2)
             if quant and bk % 128:
@@ -279,7 +287,25 @@ def _resolve(m: int, n: int, k: int, *, dtype: str, backend: str,
              epilogue: EpilogueSpec | None = None,
              fused_n_splits: tuple = (),
              weight_format: str = "fp32", decode: bool = False,
-             split_k: int | None = None) -> GemmPlan:
+             split_k: int | None = None,
+             density_bucket: int = -1) -> GemmPlan:
+    sparse = density_bucket >= 0
+    if sparse:
+        if weight_format != "ternary":
+            raise ValueError(
+                f"density_bucket={density_bucket} marks the sparse-ternary "
+                f"arm; it requires weight_format='ternary' "
+                f"(got {weight_format!r})")
+        if split_k is not None and int(split_k) != 1:
+            raise ValueError(
+                f"split_k={split_k} is incompatible with the sparse-ternary "
+                f"walk (the group-granular grid has no reduction-side "
+                f"slices); sparse plans always carry split_k=1")
+        # the sparse walk streams one GROUP_K K-group per grid step and
+        # combines per-group partials in group order — a split-K cut of
+        # that order would change the accumulation tree, so the arm pins
+        # split_k=1 at plan time rather than rejecting at dispatch
+        split_k = 1
     bm = block_m or min(_kernel.DEFAULT_BLOCK_M, _rnd_up(m, 8))
     if decode and block_m is None:
         # skinny-M specialization: decode row panels are ONE 8-row
@@ -325,9 +351,18 @@ def _resolve(m: int, n: int, k: int, *, dtype: str, backend: str,
     # explicit split_k that the clamp made undivisible fails HERE, at
     # plan time — not as a PlanMismatchError at dispatch.
     req = (bm, bn, bk)
+    sparse_groups = 0
+    if sparse:
+        from repro.quant.formats import GROUP_K
+        kg = max(1, -(-k // GROUP_K))
+        # VMEM-worst-case occupied-group count the bucket still admits
+        # (bucket b certifies zero-group fraction >= b/10)
+        sparse_groups = max(1, kg - (kg * density_bucket) // 10)
     bm, bn, bk, clamped = _fit_vmem(bm, bn, bk, dtype, epilogue,
                                     weight_format,
-                                    1 if split_k is None else int(split_k))
+                                    1 if split_k is None else int(split_k),
+                                    sparse_groups=sparse_groups,
+                                    sparse_n=n)
     if clamped:
         _warn_vmem_clamp((m, n, k, dtype, backend, weight_format), req,
                          (bm, bn, bk))
@@ -361,14 +396,24 @@ def _resolve(m: int, n: int, k: int, *, dtype: str, backend: str,
                f"{(bm, bn, bk)}; request budget-fitting blocks or a "
                "compatible split)" if clamped else ""))
 
+    weight_density = 1.0
+    sparse_index_bytes = 0.0
+    if sparse:
+        # score the arm at the bucket's midpoint occupied fraction, and
+        # charge the occupancy-bitmap + group-offset slab the walk reads
+        weight_density = max(0.05, 1.0 - (density_bucket + 0.5) / 10.0)
+        nb = max(1, -(-n // bn))
+        sparse_index_bytes = float(nb * ((kg + 7) // 8) + 4 * kg)
     sched = scheduler.plan(m, n, k, block_m=bm, block_n=bn, block_k=bk,
-                           num_cores=num_cores, split_k=split_k)
+                           num_cores=num_cores, split_k=split_k,
+                           weight_density=weight_density,
+                           sparse_index_bytes=sparse_index_bytes)
     validated = False
     if validate:
         if weight_format != "fp32":
             from repro.quant.kernels import quant_gate
             ok = quant_gate(bm, bn, bk, weight_format, epilogue=epilogue,
-                            split_k=split_k)
+                            split_k=split_k, sparse=sparse)
         else:
             ok = _bitexact_gate(bm, bn, bk, epilogue=epilogue,
                                 split_k=split_k)
@@ -386,7 +431,8 @@ def _resolve(m: int, n: int, k: int, *, dtype: str, backend: str,
                     sharding_key=sharding_key, validated=validated,
                     epilogue=epilogue, fused_n_splits=fused_n_splits,
                     vmem_clamped=clamped, weight_format=weight_format,
-                    split_k=split_k, decode=decode)
+                    split_k=split_k, decode=decode,
+                    density_bucket=density_bucket)
 
 
 def _rnd_up(x: int, mult: int) -> int:
@@ -507,10 +553,13 @@ def _plan_key(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
               epilogue: EpilogueSpec | None = None,
               fused_n_splits: tuple = (), weight_format: str = "fp32",
               decode: bool = False,
-              split_k: int | None = None) -> tuple:
+              split_k: int | None = None,
+              density_bucket: int = -1) -> tuple:
     """The normalized in-memory cache key for a ``plan()`` request
     (``validate`` at index ``_KEY_VALIDATE_IDX``; the persistent store
-    key is this tuple minus that element — see :func:`store_key`)."""
+    key is this tuple minus that element — see :func:`store_key`).
+    ``density_bucket`` is appended LAST so the validate slice below and
+    every persisted schema-v1 store key prefix stay position-stable."""
     backend = _backends.resolve_backend(backend)
     dtype = _dtype_name(dtype)
     skey = _sharding_key(sharding)
@@ -519,7 +568,8 @@ def _plan_key(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
     fused_n_splits = tuple(int(s) for s in fused_n_splits)
     return (int(m), int(n), int(k), dtype, backend, num_cores, block_m,
             block_n, block_k, pack, bool(transposed), skey, bool(validate),
-            epilogue, fused_n_splits, weight_format, bool(decode), split_k)
+            epilogue, fused_n_splits, weight_format, bool(decode), split_k,
+            int(density_bucket))
 
 
 _KEY_VALIDATE_IDX = 12
@@ -558,7 +608,8 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
          validate: bool = False, epilogue: EpilogueSpec | None = None,
          fused_n_splits: tuple = (),
          weight_format: str = "fp32", decode: bool | None = None,
-         split_k: int | None = None) -> GemmPlan:
+         split_k: int | None = None,
+         density_bucket: int = -1) -> GemmPlan:
     """Resolve (and cache) the dispatch plan for a ``[m,k] @ [k,n]`` GEMM.
 
     ``backend=None`` takes the current default (``use_backend`` scope or
@@ -580,6 +631,13 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
     decode policy arm: skinny block_m, forced prepack, and ``split_k``
     resolved by :func:`_decode_split_k` unless given explicitly.
 
+    ``density_bucket >= 0`` resolves the sparse-ternary arm for a
+    ``SparseTernaryPackedWeight`` (``weight_format='ternary'`` only):
+    the scheduler scores the occupied-group fraction and the index-slab
+    overhead, the VMEM fit budgets the group-granular walk, ``split_k``
+    is pinned at 1, and the bucket is plan-keyed so sparse and dense
+    ternary plans for one shape never alias.
+
     When a plan store is active (``gemm.use_plan_store`` scope or the
     process default), an in-memory miss consults the store before
     ``_resolve``: a hit adopts the stored plan — skipping the analytic
@@ -598,10 +656,10 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
                     sharding=sharding, validate=validate, epilogue=epilogue,
                     fused_n_splits=fused_n_splits,
                     weight_format=weight_format, decode=decode,
-                    split_k=split_k)
+                    split_k=split_k, density_bucket=density_bucket)
     (m, n, k, dtype, backend, num_cores, block_m, block_n, block_k, pack,
      transposed, skey, validate, epilogue, fused_n_splits, weight_format,
-     decode, split_k) = key
+     decode, split_k, density_bucket) = key
     while True:
         with _cache_lock:
             hit = _cache.get(key)
@@ -641,7 +699,8 @@ def plan(m: int, n: int, k: int, *, dtype: Any = jnp.float32,
                              validate=validate, epilogue=epilogue,
                              fused_n_splits=fused_n_splits,
                              weight_format=weight_format, decode=decode,
-                             split_k=split_k)
+                             split_k=split_k,
+                             density_bucket=density_bucket)
                 span.set(source="policy")
                 if store is not None:
                     store.put(_store_key_of(key), p)
@@ -684,7 +743,9 @@ def plan_for_packed(m: int, pw: packing.PackedWeight, *,
     -> ``weight_format``), and the requested ``epilogue`` ride onto the
     plan.  A quantized pack's ``dtype`` keys as the fp32 the dequant
     produces (codes are not an operand dtype).  ``decode=None`` reads
-    the ambient :func:`decode_lane` scope (as :func:`plan` does)."""
+    the ambient :func:`decode_lane` scope (as :func:`plan` does).
+    A ``SparseTernaryPackedWeight`` carries its ``density_bucket`` onto
+    the plan, selecting the sparse arm."""
     fmt = getattr(pw, "fmt", "fp32")
     dtype = "float32" if fmt != "fp32" else pw.dtype
     return plan(m, pw.n, pw.k, dtype=dtype, backend=backend,
@@ -692,7 +753,8 @@ def plan_for_packed(m: int, pw: packing.PackedWeight, *,
                 block_k=pw.block_k, pack=PACK_PREPACKED, validate=validate,
                 sharding=_packed_sharding(pw), epilogue=epilogue,
                 fused_n_splits=pw.n_splits, weight_format=fmt,
-                decode=decode)
+                decode=decode,
+                density_bucket=getattr(pw, "density_bucket", -1))
 
 
 def pack_blocks(n: int, k: int, *, m_hint: int = 128,
@@ -711,6 +773,44 @@ def pack_blocks(n: int, k: int, *, m_hint: int = 128,
              num_cores=num_cores, epilogue=epilogue,
              weight_format=weight_format)
     return p.block_n, p.block_k
+
+
+def sparse_threshold(m: int = 128, n: int = 4096, k: int = 4096, *,
+                     num_cores: int = DEFAULT_NUM_CORES) -> float:
+    """Analytic break-even zero-group fraction for the sparse arm.
+
+    Sweeps the scheduler model: the dense ternary plan at the policy's
+    deep-K blocks vs the sparse walk (``block_k = GROUP_K``, weight
+    traffic and compute scaled by the occupied fraction, plus the
+    occupancy-bitmap + group-offset slab) — returning the smallest
+    zero-group fraction (in hundredths) at which the sparse arm's
+    predicted time first wins.  The model's break-even is small (the
+    index slab is a few KB against MBs of weight traffic; the real cost
+    is the 16x deeper grid the GROUP_K step forces, carried by the
+    ``GRID_STEP_OVERHEAD`` term), so the shipped pack-time trigger
+    ``quant.SPARSE_DENSITY_THRESHOLD`` (0.3) sits deliberately ABOVE
+    it: packs only cross to the compressed layout when the win also
+    survives measured launch overheads and the host dot kernels'
+    non-monotone-in-K behavior (see the constant's comment), not just
+    the napkin model.
+    """
+    from repro.quant.formats import GROUP_K
+    bm = min(_kernel.DEFAULT_BLOCK_M, _rnd_up(m, 8))
+    bn = packing.fit_block(n, _kernel.DEFAULT_BLOCK_N)
+    bk = packing.fit_block(k, _kernel.DEFAULT_BLOCK_K)
+    kg = max(1, -(-k // GROUP_K))
+    idx = float(max(1, -(-n // bn)) * ((kg + 7) // 8) + 4 * kg)
+    dense = scheduler.plan(m, n, k, block_m=bm, block_n=bn, block_k=bk,
+                           num_cores=num_cores).t_pred
+    for i in range(1, 100):
+        gs = i / 100.0
+        t = scheduler.plan(m, n, k, block_m=bm, block_n=bn,
+                           block_k=GROUP_K, num_cores=num_cores,
+                           weight_density=1.0 - gs,
+                           sparse_index_bytes=idx).t_pred
+        if t < dense:
+            return gs
+    return 1.0
 
 
 def policy_table(shapes, *, m: int | None = None,

@@ -217,7 +217,9 @@ def vmem_bytes(block_m: int, block_n: int, block_k: int,
                in_dtype=jnp.float32, *,
                epilogue: EpilogueSpec | None = None,
                weight_format: str = "fp32",
-               split_k: int = 1) -> int:
+               split_k: int = 1,
+               sparse_groups: int = 0,
+               sparse_panels: int = 0) -> int:
     """Static VMEM footprint model for one grid step (double-buffered ins).
 
     A ``glu`` epilogue streams two weight tiles and carries two fp32
@@ -238,17 +240,27 @@ def vmem_bytes(block_m: int, block_n: int, block_k: int,
     slab (``[split_k, block_m, block_n]``): the combine epilogue reads
     every slice's partial for one output tile, so the whole slab must
     be resident alongside the streaming tiles.
+
+    ``sparse_groups > 0`` budgets the compressed-ternary walk instead
+    of the dense K stream: the grid's K axis is the occupied-group list,
+    so one step streams a ``(block_m, GROUP_K)`` x tile, a packed
+    ``(GROUP_K/4, block_n)`` code tile and a single fp32 scale row —
+    ``block_k`` is ignored — plus the scalar-prefetched group-offset
+    index (int32 per occupied slot) and the ``sparse_panels``-wide
+    occupancy matrix, resident once (not double-buffered).
     """
     isz = jnp.dtype(in_dtype).itemsize
-    x = block_m * block_k * isz
     if weight_format == "fp32":
+        x = block_m * block_k * isz
         w = block_k * block_n * isz
         scales = 0
     else:
         from repro.quant.formats import GROUP_K, weight_itemsize
-        w = int(block_k * block_n * weight_itemsize(weight_format))
+        bk_eff = GROUP_K if sparse_groups > 0 else block_k
+        x = block_m * bk_eff * isz
+        w = int(bk_eff * block_n * weight_itemsize(weight_format))
         # per-(column, K-group) fp32 scale slab for this tile
-        scales = max(1, block_k // GROUP_K) * block_n * 4
+        scales = max(1, bk_eff // GROUP_K) * block_n * 4
     acc = block_m * block_n * 4          # fp32 accumulator scratch
     out = block_m * block_n * isz
     glu = epilogue is not None and epilogue.glu is not None
@@ -260,6 +272,8 @@ def vmem_bytes(block_m: int, block_n: int, block_k: int,
     extra = block_n * 4 * (2 if glu else 1) + block_m * block_n * 4
     if split_k > 1:     # decode lane: per-slice fp32 partials slab
         extra += split_k * block_m * block_n * 4
+    if sparse_groups > 0:   # sparse walk: group index + occupancy matrix
+        extra += 4 * sparse_groups * (1 + max(1, sparse_panels))
     return 2 * (x + w + scales) + acc + out + extra   # 2x: double buffering
 
 

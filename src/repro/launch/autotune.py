@@ -8,7 +8,10 @@ serving plan surface, committed to a persistent plan store that
   * the paper's twelve prefill GEMMs at M = PAPER_M, per weight format
     (fp32 and, with ``--quant``, int8 + ternary);
   * the decode ladder: the same shapes at every ``gemm.DECODE_M_BUCKETS``
-    width under the decode policy arm (split-K candidates scored).
+    width under the decode policy arm (split-K candidates scored);
+  * with ``--sparse-buckets``, the sparse-ternary arm: each shape swept
+    at the given zero-group-fraction deciles with synthetic group-sparse
+    weights, committed under density-bucketed store keys.
 
 Every committed plan passed the bit-exactness gate; every measured win
 cleared the retry-on-noise floor (mis-tune guard: a candidate that never
@@ -32,19 +35,23 @@ from repro.core import autotune
 from repro.models.model_zoo import PAPER_GEMM_SHAPES, PAPER_M
 
 
-def _sweep_one(m, n, k, *, weight_format, decode, label, args):
+def _sweep_one(m, n, k, *, weight_format, decode, label, args,
+               density_bucket=-1):
     t0 = time.perf_counter()
     with obs.span("autotune_sweep", label=label, m=m, n=n, k=k,
-                  format=weight_format, decode=decode) as sp:
+                  format=weight_format, decode=decode,
+                  density_bucket=density_bucket) as sp:
         mp = autotune.measured_autotune(
             m, n, k, weight_format=weight_format, decode=decode,
             trials=args.trials, max_retries=args.max_retries,
-            max_candidates=args.max_candidates)
+            max_candidates=args.max_candidates,
+            density_bucket=density_bucket)
         sp.set(analytic_kept=mp.analytic, speedup=float(mp.speedup),
                candidates=mp.candidates, retries=mp.retries,
                rejected=mp.rejected)
     row = {"label": label, "M": m, "N": n, "K": k,
            "format": weight_format, "decode": decode,
+           "density_bucket": density_bucket,
            "sweep_s": round(time.perf_counter() - t0, 3), **mp.row()}
     kind = "analytic kept" if mp.analytic else \
         f"tuned {mp.speedup:.2f}x"
@@ -64,6 +71,10 @@ def main(argv=None):
     ap.add_argument("--quant", action="store_true",
                     help="also sweep the quantized weight formats "
                          "(int8, ternary) per shape")
+    ap.add_argument("--sparse-buckets", default=None, metavar="B,B",
+                    help="comma-separated density buckets (0..9) to "
+                         "sweep the sparse-ternary arm at, per shape "
+                         "(e.g. '3,5,7')")
     ap.add_argument("--decode-buckets", action="store_true",
                     help="also sweep the decode ladder: every "
                          "gemm.DECODE_M_BUCKETS width per shape, under "
@@ -101,6 +112,11 @@ def main(argv=None):
         if args.dry_run:
             rows.append(_sweep_one(32, 64, 64, weight_format="fp32",
                                    decode=False, label="dry", args=args))
+            # sparse-ternary arm smoke: a density-bucketed key must
+            # sweep, commit, and round-trip exactly like a dense one
+            rows.append(_sweep_one(32, 128, 512, weight_format="ternary",
+                                   decode=False, label="dry-sparse",
+                                   args=args, density_bucket=5))
         else:
             formats = ["fp32"] + (["int8", "ternary"] if args.quant
                                   else [])
@@ -109,6 +125,15 @@ def main(argv=None):
                     rows.append(_sweep_one(
                         PAPER_M, n, k, weight_format=fmt, decode=False,
                         label=f"{model}/{op}", args=args))
+            if args.sparse_buckets:
+                buckets = [int(b) for b in
+                           args.sparse_buckets.split(",") if b != ""]
+                for model, op, n, k in PAPER_GEMM_SHAPES:
+                    for db in buckets:
+                        rows.append(_sweep_one(
+                            PAPER_M, n, k, weight_format="ternary",
+                            decode=False, density_bucket=db,
+                            label=f"{model}/{op}@d{db}", args=args))
             if args.decode_buckets:
                 for model, op, n, k in PAPER_GEMM_SHAPES:
                     for bucket in gemm_api.DECODE_M_BUCKETS:

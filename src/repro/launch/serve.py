@@ -165,6 +165,12 @@ def main():
             print(f"error ledger: {len(ents)} packs measured, all within "
                   f"tolerance; worst max_rel {worst.max_rel:.2e} "
                   f"(tol {worst.tol:.0e}, shape {worst.k}x{worst.n})")
+            n_sparse = sum(1 for e in ents if e.sparse)
+            if n_sparse:
+                dens = [e.density for e in ents]
+                print(f"  sparse-ternary: {n_sparse}/{len(ents)} packs on "
+                      f"the compressed zero-group layout, mean occupied "
+                      f"density {sum(dens) / len(dens):.2f}")
     if cfg.modality != "text":
         logits, _ = eng.prefill(prompts)
         print(f"stub-frontend arch: prefill ok, logits {logits.shape}")
@@ -187,7 +193,10 @@ def main():
             print(f"  plan store: {ps.hits} hits / {ps.misses} misses "
                   f"({ps.autotuned} autotuned entries adopted)")
     gen, stats = eng.generate(prompts, args.max_new)
-    print(f"packed engine (fused={stats.fused}, quant={stats.quant}): "
+    qd = (f", density {stats.quant_density:.2f} "
+          f"({stats.quant_sparse_packs} sparse packs)"
+          if stats.quant_density is not None else "")
+    print(f"packed engine (fused={stats.fused}, quant={stats.quant}{qd}): "
           f"prefill {stats.prefill_tps:,.0f} tok/s, "
           f"decode {stats.decode_tps:,.0f} tok/s")
     print(f"  plan cache: {stats.plan_cache.hits} hits / "

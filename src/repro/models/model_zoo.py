@@ -235,6 +235,14 @@ def pack_for_inference(cfg: ModelConfig, params, *, block_n=None,
     def place_pw(pw, shard_node):
         if shard_node is None:
             return pw
+        from repro.quant.formats import SparseTernaryPackedWeight
+        if isinstance(pw, SparseTernaryPackedWeight):
+            # shardings were derived from the abstract (eval_shape) tree,
+            # and abstract packs never compress — the dense-layout specs
+            # don't apply to the data-dependent occupied-group slab.
+            # Leave the compressed pack unplaced: jit replicates it, and
+            # the slab is small by construction (that's the point).
+            return pw
         kw = {}
         if isinstance(shard_node, packing.PackedWeight):
             if shard_node.data is not None:

@@ -135,6 +135,7 @@ def _plan_record(p, m: int) -> dict:
         "pack": p.pack,
         "split_k": int(p.split_k),
         "weight_format": p.weight_format,
+        "density_bucket": int(p.density_bucket),
         "epilogue": str(p.epilogue) if p.epilogue is not None else "none",
         "decode": bool(p.decode),
         "t_pred": float(p.t_pred),
@@ -243,8 +244,13 @@ def _roofline_frac(rec: dict, wall_s: float) -> float | None:
     level)."""
     try:
         from repro.roofline import gemm_roofline
+        db = rec.get("density_bucket", -1)
+        # sparse packs: score against the occupied fraction the layout
+        # implies (the bucket's midpoint), not the dense shape's work
+        wd = 1.0 if db < 0 else max(0.05, 1.0 - (db + 0.5) / 10.0)
         t_bound = gemm_roofline(rec["m"], rec["n"], rec["k"],
-                                weight_format=rec["weight_format"])
+                                weight_format=rec["weight_format"],
+                                weight_density=wd)
         if t_bound and t_bound > 0:
             return min(1.0, t_bound / wall_s)
     except Exception:

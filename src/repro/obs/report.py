@@ -85,9 +85,12 @@ def synthesize_gemm_events(trace: dict) -> list[dict]:
 def _frac(rec: dict, wall_s: float) -> float | None:
     try:
         from repro.roofline import gemm_roofline
+        db = rec.get("density_bucket", -1)
+        wd = 1.0 if db < 0 else max(0.05, 1.0 - (db + 0.5) / 10.0)
         bound = gemm_roofline(rec["m"], rec["n"], rec["k"],
                               weight_format=rec.get("weight_format",
-                                                    "fp32"))
+                                                    "fp32"),
+                              weight_density=wd)
         if bound and bound > 0:
             return min(1.0, bound / wall_s)
     except Exception:
@@ -116,7 +119,9 @@ def per_shape_table(trace: dict) -> list[dict]:
     one row per (m, n, k, weight_format) with dispatch count, lever
     mix, median GFLOPS and median roofline fraction.  ``apportioned``
     counts how many of the shape's samples are share-attributed rather
-    than measured (0 = all real timings)."""
+    than measured (0 = all real timings).  ``sparse`` lists the
+    density buckets seen for the shape (``dense`` or ``d<bucket>`` —
+    the sparse-ternary arm's zero-group-fraction decile)."""
     groups: dict[tuple, dict] = {}
     for a in gemm_events(trace):
         if "m" not in a:
@@ -125,7 +130,7 @@ def per_shape_table(trace: dict) -> list[dict]:
         g = groups.setdefault(key, {"count": 0, "apportioned": 0,
                                     "levers": {}, "gflops": [],
                                     "frac": [], "split_k": set(),
-                                    "epilogues": set()})
+                                    "epilogues": set(), "buckets": set()})
         g["count"] += 1
         if a.get("apportioned"):
             g["apportioned"] += 1
@@ -137,6 +142,7 @@ def per_shape_table(trace: dict) -> list[dict]:
             g["frac"].append(a["roofline_frac"])
         g["split_k"].add(a.get("split_k", 1))
         g["epilogues"].add(a.get("epilogue", "none"))
+        g["buckets"].add(a.get("density_bucket", -1))
     rows = []
     for (m, n, k, fmt), g in sorted(groups.items()):
         lever_mix = ",".join(f"{lv}:{c}" for lv, c in
@@ -148,6 +154,8 @@ def per_shape_table(trace: dict) -> list[dict]:
             "apportioned": g["apportioned"],
             "lever_mix": lever_mix,
             "split_k": ",".join(str(s) for s in sorted(g["split_k"])),
+            "sparse": ",".join("dense" if b < 0 else f"d{b}"
+                               for b in sorted(g["buckets"])),
             "median_gflops": _median(g["gflops"]),
             "median_roofline_frac": _median(g["frac"]),
         })
@@ -160,7 +168,7 @@ def format_table(rows: list[dict]) -> str:
         return "(no GEMM dispatch spans in trace)"
     cols = [("m", 6), ("n", 6), ("k", 6), ("format", 8),
             ("dispatches", 10), ("apportioned", 11), ("lever_mix", 26),
-            ("split_k", 7), ("median_gflops", 13),
+            ("split_k", 7), ("sparse", 8), ("median_gflops", 13),
             ("median_roofline_frac", 20)]
     lines = ["  ".join(name.rjust(w) for name, w in cols),
              "  ".join("-" * w for _, w in cols)]

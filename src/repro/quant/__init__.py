@@ -10,25 +10,33 @@ ledger that keeps reduced precision honest.
 See docs/quantization.md for the format definitions, the tolerance
 contract, the ledger schema, and the mixed-precision model policy.
 """
-from repro.quant.formats import (FORMATS, GROUP_K, QuantFormatError,
-                                 QuantizedPackedWeight, dequantize,
+from repro.quant.formats import (FORMATS, GROUP_K,
+                                 SPARSE_DENSITY_THRESHOLD,
+                                 QuantFormatError, QuantizedPackedWeight,
+                                 SparseTernaryPackedWeight,
+                                 compress_ternary, decompress_ternary,
+                                 density_bucket_of, dequantize,
                                  dequantize_padded, expand_scales,
                                  pack_ternary_codes, quantize,
                                  quantize_int8, quantize_pack,
                                  quantize_pack_fused, quantize_ternary,
                                  unpack_ternary_codes, weight_itemsize)
 from repro.quant.kernels import (quant_gate, quant_panel_gemm,
-                                 quant_panel_gemm_splitk)
+                                 quant_panel_gemm_splitk,
+                                 sparse_quant_panel_gemm, sparse_ref)
 from repro.quant.ledger import (PROBE_M, TOLERANCES, LedgerEntry,
                                 QuantToleranceError)
 from repro.quant import ledger
 
 __all__ = [
     "FORMATS", "GROUP_K", "LedgerEntry", "PROBE_M", "QuantFormatError",
-    "QuantToleranceError", "QuantizedPackedWeight", "TOLERANCES",
+    "QuantToleranceError", "QuantizedPackedWeight",
+    "SPARSE_DENSITY_THRESHOLD", "SparseTernaryPackedWeight", "TOLERANCES",
+    "compress_ternary", "decompress_ternary", "density_bucket_of",
     "dequantize", "dequantize_padded", "expand_scales", "ledger",
     "pack_ternary_codes", "quant_gate", "quant_panel_gemm",
     "quant_panel_gemm_splitk", "quantize",
     "quantize_int8", "quantize_pack", "quantize_pack_fused",
-    "quantize_ternary", "unpack_ternary_codes", "weight_itemsize",
+    "quantize_ternary", "sparse_quant_panel_gemm", "sparse_ref",
+    "unpack_ternary_codes", "weight_itemsize",
 ]

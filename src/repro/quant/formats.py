@@ -54,6 +54,34 @@ TERNARY_DELTA = 0.7
 # straddle a scale group" alignment contract.
 GROUP_K = 128
 
+# Zero-group fraction at which a concrete ternary pack compresses by
+# default (``quantize_pack(sparse=None)``): the sparse layout must skip
+# enough whole GROUP_K K-groups to pay for its bitmap + group-offset
+# index and the per-group (vs per-block_k) kernel schedule.  Set well
+# above the analytic break-even ``gemm.policy.sparse_threshold()``
+# resolves from the t_pred byte model (~0.03), because the MEASURED
+# crossover is higher and shape-dependent: host dot kernels are not
+# monotone in K (table8's density sweep caught a 1024x1024 shape whose
+# compacted K' = 768 dot ran slower than the full K = 1024 dot, losing
+# 15% at zero-group fraction 0.25), so the arm engages only where the
+# sweep shows every paper shape winning.  measured_autotune can still
+# override the arm per shape.
+SPARSE_DENSITY_THRESHOLD = 0.3
+
+# Four packed zero codes (code 0 stores as crumb 0b01): the byte value
+# an all-zero ternary K-run packs to — also what pack padding packs to,
+# so padded tail groups compress away like real zero groups.
+_TERNARY_ZERO_BYTE = 0x55
+
+
+def density_bucket_of(group_sparsity: float) -> int:
+    """Plan-key bucket for a sparse pack's zero-group fraction:
+    ``floor(gs * 10)`` clamped to 0..9.  ``-1`` (negative input) is the
+    dense arm's sentinel — a plan is sparse iff its bucket is >= 0."""
+    if group_sparsity < 0:
+        return -1
+    return min(9, max(0, int(group_sparsity * 10.0)))
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +119,94 @@ class QuantizedPackedWeight(PackedWeight):
     @property
     def n_pad(self) -> int:
         return self.data.shape[-1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseTernaryPackedWeight(QuantizedPackedWeight):
+    """Compressed ternary pack: all-zero ``GROUP_K`` K-groups removed.
+
+    The dense ternary layout streams every 2-bit code; at group-level
+    sparsity the compressed layout stores only the K-groups that carry a
+    nonzero code ANYWHERE (the union across column blocks and stacked
+    layers, so one column layout serves every panel), plus two static
+    index structures:
+
+    data:       uint8 ``[..., occ * (GROUP_K // 4), N_pad]`` — the
+                surviving code groups, dense-packed in ascending original
+                order (``occ = len(group_index)``).
+    scales:     fp32 ``[..., occ, N_pad]`` — the survivors' scale rows.
+    k_groups:   total LOGICAL padded groups (``k_pad // GROUP_K``) —
+                ``k_pad`` derives from this, NOT from the compacted rows.
+    group_index:   surviving original group ids, ascending.
+    group_offsets: original group id -> compacted slot, -1 when removed
+                (the group-offset index; inverse of ``group_index``).
+    occ_bitmap: one int bitmask per ``block_n`` column block, bit ``g``
+                set iff group ``g`` has a nonzero code in that block —
+                the per-(column-block, K-group) occupancy the sparse
+                kernel's per-panel skip reads.
+
+    Round-trip with the dense layout is exact by construction: a removed
+    group is all ``0x55`` bytes (four zero codes) with all-zero scale
+    rows, which is exactly what :func:`decompress_ternary` re-inserts.
+    Flows through ``pack_for_inference``, stacked ``[L, K, N]`` packs
+    and fused split maps unchanged — it subclasses the dense pack and
+    keeps every inherited field's meaning.
+    """
+    k_groups: int = dataclasses.field(default=0,
+                                      metadata=dict(static=True))
+    group_index: tuple = dataclasses.field(default=(),
+                                           metadata=dict(static=True))
+    group_offsets: tuple = dataclasses.field(default=(),
+                                             metadata=dict(static=True))
+    occ_bitmap: tuple = dataclasses.field(default=(),
+                                          metadata=dict(static=True))
+
+    @property
+    def k_pad(self) -> int:
+        """LOGICAL padded contraction depth (what the activations pad
+        to) — the compacted codes hold fewer rows than this."""
+        return self.k_groups * GROUP_K
+
+    @property
+    def occupied(self) -> int:
+        return len(self.group_index)
+
+    @property
+    def group_sparsity(self) -> float:
+        """Zero-group fraction — the density-sweep knob (bench "density")
+        and the quantity ``SPARSE_DENSITY_THRESHOLD`` thresholds."""
+        if not self.k_groups:
+            return 0.0
+        return 1.0 - len(self.group_index) / self.k_groups
+
+    @property
+    def density(self) -> float:
+        """Occupied-group fraction: effective weight bytes / dense."""
+        return 1.0 - self.group_sparsity
+
+    @property
+    def density_bucket(self) -> int:
+        """Plan-key bucket (0..9) — rides onto the plan so the sparse
+        arm is cache-keyed separately per density decile."""
+        return density_bucket_of(self.group_sparsity)
+
+    @property
+    def index_bytes(self) -> int:
+        """Bytes of sparse metadata the kernel reads alongside the code
+        tiles: the occupancy bitmaps + the group-offset index (int32
+        slots) — the overhead side of the analytic threshold."""
+        nb = max(1, self.n_pad // self.block_n)
+        return nb * ((self.k_groups + 7) // 8) + 4 * self.k_groups
+
+    @property
+    def sparse_layout(self) -> tuple:
+        """Hashable static descriptor of the compressed geometry —
+        ``(k_groups, group_index, occ_bitmap, block_n)`` — the backends
+        key their jitted sparse runs on it and rebuild the group-walk
+        constants from it."""
+        return (self.k_groups, self.group_index, self.occ_bitmap,
+                self.block_n)
 
 
 class QuantFormatError(ValueError):
@@ -247,8 +363,132 @@ def dequantize_padded(data: jax.Array, scales: jax.Array,
 
 def dequantize(qpw: QuantizedPackedWeight) -> jax.Array:
     """Padded fp32 panels for a quantized pack (the dequant-then-sgemm
-    baseline operand; also the error-ledger oracle's weight)."""
+    baseline operand; also the error-ledger oracle's weight).  A sparse
+    pack decompresses first — the oracle always sees the full logical
+    ``[K_pad, N_pad]`` panel layout."""
+    if isinstance(qpw, SparseTernaryPackedWeight):
+        qpw = decompress_ternary(qpw)
     return dequantize_padded(qpw.data, qpw.scales, qpw.fmt)
+
+
+# ----------------------------------------------- sparse ternary layout
+def _group_occupancy(data: np.ndarray, block_n: int) -> np.ndarray:
+    """``[kg, nb]`` bool: does (K-group, column block) hold any nonzero
+    code?  Union over stacked leading dims — one column layout must
+    serve every layer of a stacked pack."""
+    rpg = GROUP_K // 4                       # packed code rows per group
+    rows, n_pad = data.shape[-2], data.shape[-1]
+    if rows % rpg or n_pad % block_n:
+        raise QuantFormatError(
+            f"codes {data.shape} not aligned to GROUP_K={GROUP_K} groups "
+            f"/ block_n={block_n} panels — compress packed weights only")
+    kg, nb = rows // rpg, n_pad // block_n
+    g = data.reshape(-1, kg, rpg, nb, block_n)
+    return (g != _TERNARY_ZERO_BYTE).any(axis=(0, 2, 4))
+
+
+def compress_ternary(qpw: QuantizedPackedWeight) -> "SparseTernaryPackedWeight":
+    """Dense ternary pack -> compressed layout (see the subclass doc).
+
+    Host-side one-time scan at pack time: groups whose codes are all
+    zero in EVERY column block (and every stacked layer) are dropped
+    from ``data``/``scales``; the occupancy bitmap additionally records
+    which surviving groups each column block can skip.  Refuses packs
+    whose removed groups carry nonzero scales (cannot round-trip) —
+    ``quantize_pack`` never produces those (all-zero groups get scale
+    0), so this only fires on hand-built packs.
+    """
+    if qpw.fmt != "ternary":
+        raise QuantFormatError(
+            f"sparse layout is ternary-only; got {qpw.fmt!r}")
+    if isinstance(qpw, SparseTernaryPackedWeight):
+        return qpw
+    if not (_is_concrete(qpw.data) and _is_concrete(qpw.scales)):
+        raise QuantFormatError(
+            "cannot compress an abstract pack (jax.eval_shape) — no "
+            "code values exist to scan for occupancy")
+    data = np.asarray(qpw.data)
+    scales = np.asarray(qpw.scales)
+    rpg = GROUP_K // 4
+    occ = _group_occupancy(data, qpw.block_n)    # [kg, nb]
+    kg, nb = occ.shape
+    n_pad = data.shape[-1]
+    lead = data.shape[:-2]
+    occ_any = occ.any(axis=1)
+    gidx = [int(i) for i in np.nonzero(occ_any)[0]]
+    offs = np.full((kg,), -1, np.int64)
+    offs[gidx] = np.arange(len(gidx))
+    bitmap = tuple(
+        int(sum(1 << g for g in range(kg) if occ[g, b]))
+        for b in range(nb))
+    removed = [g for g in range(kg) if not occ_any[g]]
+    if removed and np.any(scales[..., removed, :] != 0):
+        raise QuantFormatError(
+            "pack has all-zero code groups with nonzero scales; the "
+            "compressed layout cannot round-trip them (quantize_pack "
+            "gives zero-code groups scale 0)")
+    cd = data.reshape(*lead, kg, rpg, n_pad)[..., gidx, :, :]
+    cd = cd.reshape(*lead, len(gidx) * rpg, n_pad)
+    cs = scales[..., gidx, :]
+    return SparseTernaryPackedWeight(
+        data=jnp.asarray(cd), n=qpw.n, k=qpw.k, block_n=qpw.block_n,
+        block_k=qpw.block_k, n_splits=qpw.n_splits,
+        scales=jnp.asarray(cs), fmt="ternary", sparsity=qpw.sparsity,
+        k_groups=kg, group_index=tuple(gidx),
+        group_offsets=tuple(int(v) for v in offs), occ_bitmap=bitmap)
+
+
+def decompress_ternary(spw: "SparseTernaryPackedWeight") \
+        -> QuantizedPackedWeight:
+    """Exact inverse of :func:`compress_ternary`: re-insert all-zero
+    code groups (bytes ``0x55``) and zero scale rows at the removed
+    slots — bit-for-bit the dense pack the sparse one was built from."""
+    rpg = GROUP_K // 4
+    data = np.asarray(spw.data)
+    scales = np.asarray(spw.scales)
+    lead = data.shape[:-2]
+    n_pad = data.shape[-1]
+    kg, occ = spw.k_groups, spw.occupied
+    full = np.full((*lead, kg, rpg, n_pad), _TERNARY_ZERO_BYTE, np.uint8)
+    if occ:
+        full[..., list(spw.group_index), :, :] = \
+            data.reshape(*lead, occ, rpg, n_pad)
+    fs = np.zeros((*lead, kg, n_pad), scales.dtype)
+    if occ:
+        fs[..., list(spw.group_index), :] = scales
+    return QuantizedPackedWeight(
+        data=jnp.asarray(full.reshape(*lead, kg * rpg, n_pad)),
+        n=spw.n, k=spw.k, block_n=spw.block_n, block_k=spw.block_k,
+        n_splits=spw.n_splits, scales=jnp.asarray(fs), fmt="ternary",
+        sparsity=spw.sparsity)
+
+
+def _maybe_compress(qpw: QuantizedPackedWeight, sparse: bool | None):
+    """The pack-time arm decision.  ``sparse=None`` (auto): compress a
+    concrete ternary pack iff its zero-group fraction reaches
+    ``SPARSE_DENSITY_THRESHOLD``; ``True`` forces the layout, ``False``
+    pins dense.  Abstract packs (eval_shape) never compress — forcing
+    one is an error, auto quietly keeps dense (real TWN packs sit near
+    group-sparsity 0, so the auto arm leaves today's packs untouched)."""
+    if sparse is False:
+        return qpw
+    if qpw.fmt != "ternary":
+        if sparse:
+            raise QuantFormatError(
+                f"sparse layout is ternary-only; got {qpw.fmt!r}")
+        return qpw
+    if not (_is_concrete(qpw.data) and _is_concrete(qpw.scales)):
+        if sparse:
+            raise QuantFormatError(
+                "sparse=True needs concrete weights (abstract packs "
+                "have no codes to scan)")
+        return qpw
+    if sparse is None:
+        occ = _group_occupancy(np.asarray(qpw.data), qpw.block_n)
+        gs = 1.0 - occ.any(axis=1).mean()
+        if gs < SPARSE_DENSITY_THRESHOLD:
+            return qpw
+    return compress_ternary(qpw)
 
 
 # ------------------------------------------------------------- packing
@@ -292,6 +532,7 @@ def quantize_pack(
     block_k: int | None = None,
     sharding=None,
     measure: bool = True,
+    sparse: bool | None = None,
 ) -> QuantizedPackedWeight:
     """Quantize + pack ``w[..., K, N]`` (or ``[..., N, K]`` with
     ``transposed``) once at model load.  Leading dims (stacked ``[L, K,
@@ -302,7 +543,9 @@ def quantize_pack(
     tiles dequantize to exact zero.  ``measure=True`` (default) records
     the pack's error vs the fp32 oracle in the error ledger and enforces
     the per-format tolerance — skipped automatically for abstract
-    weights (``jax.eval_shape``).
+    weights (``jax.eval_shape``).  ``sparse`` picks the ternary storage
+    layout (see :func:`_maybe_compress`): ``None`` auto-compresses at
+    ``SPARSE_DENSITY_THRESHOLD`` group sparsity.
     """
     _check_fmt(fmt)
     from repro.kernels import panel_gemm as _kernel
@@ -317,11 +560,13 @@ def quantize_pack(
     q = _pad_tail(q, pk, pn, q.ndim)
     s = _pad_tail(s, q.shape[-2] // GROUP_K - s.shape[-2], pn, s.ndim)
     data = pack_ternary_codes(q) if fmt == "ternary" else q
-    if sharding is not None:
-        data = jax.device_put(data, sharding)
     qpw = QuantizedPackedWeight(data=data, n=n, k=k, block_n=block_n,
                                 block_k=block_k, scales=s, fmt=fmt,
                                 sparsity=sparsity)
+    qpw = _maybe_compress(qpw, sparse)
+    if sharding is not None:
+        qpw = dataclasses.replace(qpw,
+                                  data=jax.device_put(qpw.data, sharding))
     if measure and _is_concrete(w):
         from repro.quant import ledger
         ledger.measure(w, qpw, enforce=True)
@@ -337,12 +582,15 @@ def quantize_pack_fused(
     block_k: int | None = None,
     sharding=None,
     measure: bool = True,
+    sparse: bool | None = None,
 ) -> QuantizedPackedWeight:
     """Horizontal fusion (``core.packing.pack_fused``) in a quantized
     format: each same-K part is quantized per its own output columns,
     padded to a ``block_n`` multiple, and concatenated along N — the
     static split map is preserved, tiles never straddle parts OR scale
-    groups, and a glu pair's two column halves stay block-addressable."""
+    groups, and a glu pair's two column halves stay block-addressable.
+    ``sparse`` behaves as in :func:`quantize_pack`; compression runs on
+    the fused concat, so the group union spans every part."""
     _check_fmt(fmt)
     from repro.kernels import panel_gemm as _kernel
     ws = [jnp.swapaxes(w, -1, -2) if transposed else w for w in parts]
@@ -374,12 +622,14 @@ def quantize_pack_fused(
     scales = jnp.concatenate(ss, axis=-1)
     sparsity = (zeros / elems) if elems else -1.0
     data = pack_ternary_codes(codes) if fmt == "ternary" else codes
-    if sharding is not None:
-        data = jax.device_put(data, sharding)
     qpw = QuantizedPackedWeight(
         data=data, n=int(codes.shape[-1]), k=k, block_n=bn,
         block_k=block_k, n_splits=n_splits, scales=scales, fmt=fmt,
         sparsity=sparsity)
+    qpw = _maybe_compress(qpw, sparse)
+    if sharding is not None:
+        qpw = dataclasses.replace(qpw,
+                                  data=jax.device_put(qpw.data, sharding))
     if measure and all(_is_concrete(w) for w in ws):
         from repro.quant import ledger
         ledger.measure(jnp.concatenate(

@@ -58,16 +58,25 @@ class LedgerEntry:
     max_rel: float
     tol: float
     probe_m: int
+    # occupied K-group fraction of the probed pack: 1.0 for every dense
+    # pack; < 1.0 when a ternary pack crossed to the compressed
+    # zero-group layout (SparseTernaryPackedWeight.density)
+    density: float = 1.0
 
     @property
     def within_tol(self) -> bool:
         return self.max_rel <= self.tol
 
+    @property
+    def sparse(self) -> bool:
+        return self.density < 1.0
+
     def row(self) -> dict:
         """Benchmark/report row (table8's ledger columns)."""
         return {"N": self.n, "K": self.k, "format": self.fmt,
                 "max_abs_err": self.max_abs, "max_rel_err": self.max_rel,
-                "tolerance": self.tol, "within_tol": self.within_tol}
+                "tolerance": self.tol, "within_tol": self.within_tol,
+                "density": round(self.density, 4)}
 
 
 _entries: dict[tuple[int, int, str], LedgerEntry] = {}
@@ -137,7 +146,9 @@ def measure(w_fp32, qpw, *, enforce: bool = True,
             max_abs, max_rel = abs_l, rel_l
     entry = record(LedgerEntry(n=int(qpw.n), k=int(qpw.k), fmt=qpw.fmt,
                                max_abs=max_abs, max_rel=max_rel,
-                               tol=tolerance(qpw.fmt), probe_m=probe_m))
+                               tol=tolerance(qpw.fmt), probe_m=probe_m,
+                               density=float(getattr(qpw, "density",
+                                                     1.0))))
     if enforce and not entry.within_tol:
         raise QuantToleranceError(
             f"quantized pack [{qpw.k}x{qpw.n}] fmt={qpw.fmt}: max_rel "

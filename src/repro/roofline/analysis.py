@@ -156,7 +156,8 @@ _FORMAT_BYTES = {"fp32": 4.0, "int8": 1.0, "ternary": 0.25}
 
 
 def gemm_roofline(m: int, n: int, k: int, *, weight_format: str = "fp32",
-                  act_bytes: int = 4, hw: dict = HW) -> float:
+                  act_bytes: int = 4, weight_density: float = 1.0,
+                  hw: dict = HW) -> float:
     """Analytic lower-bound seconds for ONE ``[m,k] @ [k,n]`` dispatch —
     the denominator of the flight recorder's ``roofline_frac``.
 
@@ -167,10 +168,19 @@ def gemm_roofline(m: int, n: int, k: int, *, weight_format: str = "fp32",
     skinny-M dispatches live on, and why quantized decode beats fp32 at
     the same FLOPs).  Single-dispatch and collective-free by
     construction; the step-level three-term model stays
-    :func:`roofline_terms`."""
-    flops = 2.0 * m * n * k
+    :func:`roofline_terms`.
+
+    ``weight_density`` is the occupied-group fraction of a sparse-
+    ternary pack (``SparseTernaryPackedWeight.density``; 1.0 = dense):
+    the compressed layout stores — and the sparse walk streams and
+    multiplies — only the occupied K-groups, so both the weight-byte
+    term and the FLOP term scale by it.  That makes ``roofline_frac``
+    honest for sparse dispatches: measured against the work the layout
+    actually implies, not the dense shape's."""
+    flops = 2.0 * m * n * k * weight_density
     wb = _FORMAT_BYTES.get(weight_format, 4.0)
-    bytes_moved = (m * k + m * n) * act_bytes + k * n * wb
+    bytes_moved = ((m * k + m * n) * act_bytes
+                   + k * n * wb * weight_density)
     t_compute = flops / hw["peak_flops_fp32"]
     t_memory = bytes_moved / hw["hbm_bw"]
     return max(t_compute, t_memory)

@@ -182,6 +182,8 @@ class ServeStats:
     wall_s: float = 0.0
     fused: bool | None = None       # engine ran the fused GEMM path
     quant: str | None = None        # engine's quantized weight format
+    quant_density: float | None = None   # mean occupied-group fraction
+    quant_sparse_packs: int = 0     # packs on the compressed layout
     plan_cache: tuple | None = None
     vmem_clamped_plans: int = 0
     plan_store: tuple | None = None

@@ -66,6 +66,11 @@ class GenStats:
     decode_s: float = 0.0
     fused: bool | None = None
     quant: str | None = None
+    # sparse-ternary pack observability: mean occupied-group fraction
+    # across the engine's quantized packs (None: no quantized packs) and
+    # how many crossed to the compressed zero-group layout
+    quant_density: float | None = None
+    quant_sparse_packs: int = 0
     plan_cache: tuple | None = None
     vmem_clamped_plans: int = 0
     plan_store: tuple | None = None
@@ -472,6 +477,24 @@ class Engine:
             timings["plan_store"] = self.plan_store.info()
         return timings
 
+    def _quant_pack_stats(self):
+        """(mean occupied-group density, sparse pack count) over the
+        engine's quantized packs — the ServeStats/GenStats quant area."""
+        if not (self.packed and self.quant):
+            return None, 0
+        from repro.quant.formats import (QuantizedPackedWeight,
+                                         SparseTernaryPackedWeight)
+        packs = [leaf for leaf in jax.tree.leaves(
+            self.params,
+            is_leaf=lambda x: isinstance(x, QuantizedPackedWeight))
+            if isinstance(leaf, QuantizedPackedWeight)]
+        if not packs:
+            return None, 0
+        dens = [float(getattr(q, "density", 1.0)) for q in packs]
+        sparse = sum(1 for q in packs
+                     if isinstance(q, SparseTernaryPackedWeight))
+        return sum(dens) / len(dens), sparse
+
     # ------------------------------------------------------------ generate
     def generate(self, prompts, max_new_tokens: int, *,
                  greedy: bool = True, seed: int = 0,
@@ -481,6 +504,8 @@ class Engine:
         stats = stats if stats is not None else GenStats()
         stats.fused = self.fused if self.packed else None
         stats.quant = self.quant if self.packed else None
+        stats.quant_density, stats.quant_sparse_packs = \
+            self._quant_pack_stats()
         b, s0 = prompts.shape[0], prompts.shape[1]
         # phase timing through the obs fenced timer: both phases fence
         # (generate's numbers were always execution times — the fence
@@ -569,6 +594,8 @@ class Engine:
                                 total_budget_s=total_budget_s)
         stats.fused = self.fused if self.packed else None
         stats.quant = self.quant if self.packed else None
+        stats.quant_density, stats.quant_sparse_packs = \
+            self._quant_pack_stats()
         stats.plan_cache = gemm_api.plan_cache_info()
         stats.vmem_clamped_plans = gemm_api.vmem_clamped_count()
         if self.plan_store is not None:
@@ -594,6 +621,8 @@ class Engine:
               else [int(m) for m in max_new_tokens])
         stats = GenStats(fused=self.fused if self.packed else None,
                          quant=self.quant if self.packed else None)
+        stats.quant_density, stats.quant_sparse_packs = \
+            self._quant_pack_stats()
         results: dict[int, np.ndarray] = {}
         queue = list(enumerate(requests))
         while queue:
